@@ -1,0 +1,49 @@
+"""Paper Fig. 5/7: strong scaling of parallel MSC (fixed 1000³ data).
+
+The paper measures walltime on Grid'5000 for 6→96 MPI processes (both
+schedules' analogue here) and reports up to 48× speedup over sequential.
+This container has one CPU core, so scaling is *projected* for the TPU
+target: for each device count p we lower+compile the actual parallel MSC
+program on a p-device mesh and take the no-overlap roofline bound
+max(compute, memory, collective) as the step-time estimate — the same
+methodology as EXPERIMENTS.md §Roofline.  Both the paper-faithful
+grouped schedule (p ∈ {6,24,96}, mesh (3, p/3)) and the beyond-paper
+flat schedule (p ∈ {8,32,128,256}) are projected, plus p=1 as the
+sequential baseline for the speedup column (Fig. 7).
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List
+
+from .common import run_subprocess_json
+
+_CODE = """
+import json, sys
+from benchmarks.msc_project import project
+rows = [project(**s) for s in json.loads('''{specs}''')]
+print(json.dumps(rows))
+"""
+
+
+def run(full: bool = False) -> List[Dict]:
+    m = 1000 if full else 200
+    specs = [{"schedule": "sequential", "p": 1, "m": m}]
+    specs += [{"schedule": "grouped", "p": p, "m": m} for p in (6, 24, 96)]
+    specs += [{"schedule": "flat", "p": p, "m": m}
+              for p in (8, 32, 128, 256)]
+    rows = run_subprocess_json(
+        _CODE.format(specs=json.dumps(specs)), n_devices=384, timeout=3600)
+    seq = next(r for r in rows if r["schedule"] == "sequential")
+    out = []
+    for r in rows:
+        out.append({
+            "schedule": r["schedule"], "p": r["p"], "m": r["m"],
+            "bound_s": r["bound_s"], "dominant": r["dominant"],
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_link_s"],
+            "speedup_vs_seq": seq["bound_s"] / r["bound_s"]
+            if r["bound_s"] else 0.0,
+            "temp_gib": r["temp_gib"],
+        })
+    return out

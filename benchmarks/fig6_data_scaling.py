@@ -1,0 +1,63 @@
+"""Paper Fig. 6/7: execution time vs tensor size, sequential vs parallel.
+
+Two parts:
+  (a) CPU-measured walltime at container-feasible sizes (m ≤ 64),
+      sequential reference vs the flat parallel program on the local
+      device — validates the code paths end-to-end and gives a real
+      (if single-core) time-vs-size curve like the paper's;
+  (b) TPU-v5e roofline projection at the paper's sizes (m = 200…1400),
+      sequential (1 chip) vs parallel (128 chips) — the paper reports
+      48× at m=1400 / 123 processes; the projection gives this
+      framework's analogue.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List
+
+import jax
+
+from repro.core import MSCConfig, PlantedSpec, make_planted_tensor, msc_sequential
+from repro.core.parallel import build_msc_parallel, make_msc_mesh
+
+from .common import run_subprocess_json, time_fn
+
+_CODE = """
+import json, sys
+from benchmarks.msc_project import project
+rows = [project(**s) for s in json.loads('''{specs}''')]
+print(json.dumps(rows))
+"""
+
+
+def run(full: bool = False) -> List[Dict]:
+    rows: List[Dict] = []
+    # (a) measured on CPU
+    sizes = (64, 96, 128) if full else (32, 48)
+    mesh = make_msc_mesh("flat")
+    for m in sizes:
+        cfg = MSCConfig(power_iters=30, max_extraction_iters=m)
+        t = make_planted_tensor(jax.random.PRNGKey(0),
+                                PlantedSpec.paper(m, float(m)))
+        seq = time_fn(lambda t: jax.block_until_ready(msc_sequential(t, cfg)), t)
+        par = build_msc_parallel(mesh, cfg, schedule="flat")
+        pt = time_fn(lambda t: jax.block_until_ready(par(t)), t)
+        rows.append({"kind": "measured-cpu", "m": m, "p": 1,
+                     "seq_s": seq["median_s"], "par_s": pt["median_s"],
+                     "speedup": seq["median_s"] / pt["median_s"]})
+    # (b) projected for the paper's sizes
+    ms = (200, 600, 1000, 1400) if full else (200, 1000)
+    specs = []
+    for m in ms:
+        specs.append({"schedule": "sequential", "p": 1, "m": m})
+        specs.append({"schedule": "flat", "p": 128, "m": m})
+    prows = run_subprocess_json(
+        _CODE.format(specs=json.dumps(specs)), n_devices=256, timeout=3600)
+    by = {(r["schedule"], r["m"]): r for r in prows}
+    for m in ms:
+        s, p = by[("sequential", m)], by[("flat", m)]
+        rows.append({"kind": "projected-v5e", "m": m, "p": 128,
+                     "seq_s": s["bound_s"], "par_s": p["bound_s"],
+                     "speedup": s["bound_s"] / p["bound_s"]
+                     if p["bound_s"] else 0.0})
+    return rows

@@ -1,0 +1,43 @@
+"""Paper Fig. 8: communication-time breakdown per collective.
+
+The paper uses TAU to measure time in MPI_Allreduce / MPI_Allgather for
+33–123 processes at 1000³.  Here the compiled parallel-MSC HLO is parsed
+for its collectives (the SPMD analogues: all-gather of V, all-reduce of
+λ_max, plus layout collective-permutes) and each kind's ring-model link
+time is reported per device count — reproducing the paper's observation
+that per-collective time *falls* with more processes (smaller shards).
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List
+
+from .common import run_subprocess_json
+
+_CODE = """
+import json, sys
+from benchmarks.msc_project import project
+rows = [project(**s) for s in json.loads('''{specs}''')]
+print(json.dumps(rows))
+"""
+
+_ICI = 50e9
+
+
+def run(full: bool = False) -> List[Dict]:
+    m = 1000 if full else 256
+    ps = (32, 64, 128, 256) if full else (32, 128)
+    specs = [{"schedule": "flat", "p": p, "m": m} for p in ps]
+    rows = run_subprocess_json(
+        _CODE.format(specs=json.dumps(specs)), n_devices=256, timeout=3600)
+    out = []
+    for r in rows:
+        for kind, d in sorted(r["collectives_by_kind"].items()):
+            out.append({
+                "p": r["p"], "m": r["m"], "collective": kind,
+                "count": d["count"],
+                "operand_mib": d["operand_bytes"] / 2**20,
+                "link_mib": d["link_bytes"] / 2**20,
+                "ring_time_ms": d["link_bytes"] / _ICI * 1e3,
+            })
+    return out

@@ -1,0 +1,71 @@
+"""Worker: roofline-project parallel MSC at a given (schedule, p, m).
+
+Run in a subprocess with XLA_FLAGS device-count set by the caller
+(benchmarks/fig5/6/8).  Prints one JSON row per spec on the last line.
+
+  python -m benchmarks.msc_project '[{"schedule":"flat","p":32,"m":1000}]'
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+import numpy as np
+
+
+def project(schedule: str, p: int, m: int, power_iters: int = 60,
+            matrix_free: bool = True) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh
+
+    from repro.core import MSCConfig
+    from repro.core.parallel import (build_msc_parallel_flat,
+                                     build_msc_parallel_grouped)
+    from repro.roofline import report_from_compiled
+    from repro.launch.dryrun import msc_model_flops
+
+    devices = jax.devices()[:p]
+    cfg = MSCConfig(power_iters=power_iters, matrix_free=matrix_free,
+                    max_extraction_iters=m)
+    if schedule == "grouped":
+        assert p % 3 == 0, p
+        mesh = Mesh(np.asarray(devices).reshape(3, p // 3),
+                    ("mode", "slice"))
+        run = build_msc_parallel_grouped(mesh, cfg)
+    elif schedule == "sequential":
+        mesh = Mesh(np.asarray(devices[:1]).reshape(1), ("slice",))
+        run = build_msc_parallel_flat(mesh, cfg)
+    else:
+        mesh = Mesh(np.asarray(devices), ("slice",))
+        run = build_msc_parallel_flat(mesh, cfg)
+
+    lowered = run.lower(jax.ShapeDtypeStruct((m, m, m), jnp.float32))
+    compiled = lowered.compile()
+    rep = report_from_compiled(
+        compiled, arch=f"msc-{schedule}", shape_name=f"m{m}",
+        mesh_name=f"p{p}", chips=p,
+        model_fl=msc_model_flops(m, power_iters, matrix_free))
+    mem = compiled.memory_analysis()
+    return {
+        "schedule": schedule, "p": p, "m": m,
+        "matrix_free": matrix_free,
+        "compute_s": rep.compute_s, "memory_s": rep.memory_s,
+        "collective_link_s": rep.collective_link_s,
+        "bound_s": rep.bound_s, "dominant": rep.dominant,
+        "flops_ratio": rep.flops_ratio,
+        "bytes_per_device_gib": rep.bytes_per_device / 2**30,
+        "temp_gib": mem.temp_size_in_bytes / 2**30,
+        "collectives_by_kind": rep.collectives_by_kind,
+    }
+
+
+def main() -> int:
+    specs = json.loads(sys.argv[1])
+    rows = [project(**s) for s in specs]
+    print(json.dumps(rows))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

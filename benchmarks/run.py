@@ -1,0 +1,58 @@
+"""Benchmark harness — one benchmark per paper table/figure.
+
+  fig4_quality        paper Fig. 4  (cluster quality vs γ, two ε regimes)
+  fig5_strong_scaling paper Fig. 5/7 (strong scaling + speedup, projected)
+  fig6_data_scaling   paper Fig. 6/7 (time vs data size, measured+projected)
+  fig8_comm           paper Fig. 8  (per-collective communication breakdown)
+  kernel_bench        (new) Pallas kernels vs jnp oracles
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run            # CPU-feasible sizes
+  PYTHONPATH=src python -m benchmarks.run --full     # paper-scale sizes
+  PYTHONPATH=src python -m benchmarks.run --only fig4_quality,kernel_bench
+
+Rows are printed as CSV and saved to experiments/bench/<name>.json.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import time
+import traceback
+
+from .common import print_rows, save_rows
+
+ALL = ("fig4_quality", "fig5_strong_scaling", "fig6_data_scaling",
+       "fig8_comm", "kernel_bench")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (pod-scale runtime)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benches")
+    args = ap.parse_args(argv)
+
+    names = args.only.split(",") if args.only else list(ALL)
+    failures = []
+    for name in names:
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            rows = mod.run(full=args.full)
+            save_rows(name, rows)
+            print_rows(name, rows)
+            print(f"[{name}] done in {time.time()-t0:.1f}s")
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print("FAILED benches:", failures)
+        return 1
+    print("\nall benches complete")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,54 @@
+"""MSC as a framework feature: tricluster a model's activation tensor.
+
+The paper's method is a generic 3rd-order-tensor analysis; here it runs
+over (layers × tokens × features) activations of a (reduced) LM to find
+groups of layers / token positions / feature dims with aligned spectra —
+redundant-layer discovery.  Two of the planted "layers" are made nearly
+identical to give MSC a ground-truth cluster to find.
+
+  PYTHONPATH=src python examples/msc_activations.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import MSCConfig
+from repro.core.integration import cluster_activations
+from repro.models import build_model, forward
+
+
+def main():
+    cfg = get_config("qwen1.5-0.5b").reduced(n_layers=2, scan_layers=False)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 48), 0,
+                                cfg.vocab_size, jnp.int32)
+
+    # collect per-layer hidden states by re-running truncated stacks
+    # (simple and allocation-friendly at reduced scale)
+    acts = []
+    h, _, _ = forward(params, tokens, cfg)
+    acts.append(h[0])                      # final hidden (S, D)
+    # embed-only "layer 0" and two synthetic near-duplicates of the final
+    emb = jnp.take(params["embed"], tokens, axis=0).astype(h.dtype)[0]
+    noise = 0.01 * jax.random.normal(jax.random.PRNGKey(2), h[0].shape,
+                                     jnp.float32).astype(h.dtype)
+    acts = [emb, h[0], h[0] + noise, emb * 0.5]
+
+    result = cluster_activations(
+        acts, cfg=MSCConfig(epsilon=1e-3, power_iters=50,
+                            max_extraction_iters=8))
+    layer_mask = result.modes[0].mask
+    print("layer-mode cluster mask:", layer_mask.tolist())
+    print("marginal similarity d:",
+          [round(float(x), 3) for x in result.modes[0].d])
+    # the two near-identical activations must cluster together
+    assert bool(layer_mask[1]) and bool(layer_mask[2]), \
+        "near-duplicate layers should be co-clustered"
+    print("redundant layers detected: indices",
+          [i for i, v in enumerate(layer_mask.tolist()) if v])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""End-to-end driver: the paper's workload as a production pipeline.
+
+Chunked data production (the paper's "data produced on the processes
+themselves" deployment mode — no global tensor materialized on one host)
+→ distributed MSC (flat schedule) → quality metrics → JSON report.
+
+  PYTHONPATH=src python examples/msc_pipeline.py            # m=96
+  PYTHONPATH=src python examples/msc_pipeline.py --m 200    # bigger
+"""
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (MSCConfig, PlantedSpec, make_planted_tensor_chunked,
+                        msc_similarity_matrices, planted_masks,
+                        recovery_rate, similarity_index)
+from repro.core.parallel import build_msc_parallel, make_msc_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--m", type=int, default=96)
+    ap.add_argument("--gamma", type=float, default=None)
+    ap.add_argument("--chunks", type=int, default=8)
+    ap.add_argument("--power-iters", type=int, default=60)
+    ap.add_argument("--out", default="/tmp/msc_pipeline_report.json")
+    args = ap.parse_args()
+
+    m = args.m
+    gamma = args.gamma if args.gamma is not None else float(m)
+    l = max(1, m // 10)
+    spec = PlantedSpec.paper(m, gamma)
+    cfg = MSCConfig(epsilon=0.5 / (m - l) ** 2,
+                    power_iters=args.power_iters, max_extraction_iters=m)
+
+    # 1. chunked data production (mode-1 slabs, owner-computes)
+    t0 = time.time()
+    slabs = []
+    for lo, slab in make_planted_tensor_chunked(
+            jax.random.PRNGKey(0), spec, n_chunks=args.chunks):
+        slabs.append(slab)         # on a pod: produced directly per host
+    tensor = jnp.concatenate(slabs, axis=0)
+    t_data = time.time() - t0
+
+    # 2. distributed MSC
+    mesh = make_msc_mesh("flat")
+    msc = build_msc_parallel(mesh, cfg, schedule="flat")
+    t0 = time.time()
+    result = jax.block_until_ready(msc(tensor))
+    t_compile_run = time.time() - t0
+    t0 = time.time()
+    result = jax.block_until_ready(msc(tensor))
+    t_run = time.time() - t0
+
+    # 3. quality metrics (paper Eq. 6)
+    true_masks = planted_masks(spec)
+    pred = [mode.mask for mode in result.modes]
+    rec = float(recovery_rate(true_masks, pred))
+    sim = float(similarity_index(msc_similarity_matrices(tensor, cfg), pred))
+
+    report = {
+        "m": m, "gamma": gamma, "epsilon": cfg.epsilon,
+        "cluster_sizes": [int(mode.size) for mode in result.modes],
+        "recovery_rate": rec, "similarity_index": sim,
+        "extraction_iters": [int(mode.n_iters) for mode in result.modes],
+        "t_data_s": t_data, "t_first_run_s": t_compile_run,
+        "t_steady_run_s": t_run,
+        "devices": len(jax.devices()),
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(json.dumps(report, indent=2))
+    assert rec == 1.0, "planted cluster not recovered"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Quickstart: Multi-Slice Clustering of a planted 3rd-order tensor.
+
+Generates the paper's synthetic model T = γ·w⊗u⊗v + Z (§IV), runs the
+sequential reference AND the shard_map-parallel version, and checks they
+find the same planted tricluster.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.core import (MSCConfig, PlantedSpec, make_planted_tensor,
+                        msc_sequential, msc_similarity_matrices,
+                        planted_masks, recovery_rate, similarity_index)
+from repro.core.parallel import build_msc_parallel, make_msc_mesh
+
+
+def main():
+    m, gamma = 40, 40.0
+    spec = PlantedSpec.paper(m, gamma)          # cube m³, cluster l = m/10
+    cfg = MSCConfig(epsilon=0.5 / (m - m // 10) ** 2,   # Thm II.1-valid
+                    power_iters=60, max_extraction_iters=m)
+
+    tensor = make_planted_tensor(jax.random.PRNGKey(0), spec)
+    true_masks = planted_masks(spec)
+    print(f"tensor {tensor.shape}, planted cluster sizes "
+          f"{spec.cluster_sizes}, γ={gamma}")
+
+    # --- sequential reference (paper Alg. 1) ---
+    res_seq = msc_sequential(tensor, cfg)
+    print("sequential cluster sizes:",
+          [int(mode.size) for mode in res_seq.modes])
+
+    # --- parallel (paper Alg. 2 as shard_map; 'flat' schedule) ---
+    mesh = make_msc_mesh("flat")                # all local devices
+    msc_par = build_msc_parallel(mesh, cfg, schedule="flat")
+    res_par = msc_par(tensor)
+    print("parallel   cluster sizes:",
+          [int(mode.size) for mode in res_par.modes])
+
+    pred = [mode.mask for mode in res_par.modes]
+    rec = float(recovery_rate(true_masks, pred))
+    sim = float(similarity_index(msc_similarity_matrices(tensor, cfg), pred))
+    print(f"recovery rate = {rec:.3f}   similarity index = {sim:.3f}")
+
+    agree = all(bool((s.mask == p.mask).all())
+                for s, p in zip(res_seq.modes, res_par.modes))
+    print("sequential == parallel:", agree)
+    assert agree and rec == 1.0
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,176 @@
+"""Fault-tolerant checkpointing: atomic commits, integrity, elastic restore.
+
+Design (for 1000+ nodes, exercised here single-host):
+  * layout: <dir>/step_<k>/ {manifest.json, leaf_<i>.npy…}
+  * atomic commit: write into step_<k>.tmp, fsync, then os.rename —
+    a crashed writer never leaves a half checkpoint that restore would
+    pick up.
+  * integrity: per-leaf SHA-256 in the manifest, verified on restore;
+    corrupt/partial checkpoints are skipped by `latest_step`.
+  * async save: `CheckpointManager(async_save=True)` snapshots to host
+    memory (device_get) synchronously — a few ms — and writes in a
+    background thread so the train loop keeps stepping.
+  * elastic restore: leaves are stored UNSHARDED (gathered); restore
+    device_puts them under whatever mesh/sharding the *current* run uses,
+    so a 16-device checkpoint restores onto 8 or 32 devices (re-shard on
+    restore).  On multi-host pods the same layout generalizes to
+    per-process shard files keyed by (process, shard-index).
+  * keep-last-k GC with the newest always retained.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _leaf_paths(tree) -> Any:
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def _sha(arr: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()
+
+
+def save_checkpoint(directory: str, step: int, tree, extra: Optional[Dict] = None):
+    """Atomic unsharded checkpoint of an arbitrary pytree."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    leaves, treedef = jax.tree.flatten(tree)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "extra": extra or {},
+        "leaves": [],
+    }
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        path = os.path.join(tmp, f"leaf_{i:05d}.npy")
+        np.save(path, arr)
+        manifest["leaves"].append({
+            "i": i, "shape": list(arr.shape), "dtype": str(arr.dtype),
+            "sha256": _sha(arr),
+        })
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+    return final
+
+
+def _valid(path: str) -> bool:
+    man = os.path.join(path, "manifest.json")
+    if not os.path.isfile(man):
+        return False
+    try:
+        with open(man) as f:
+            m = json.load(f)
+        return all(
+            os.path.isfile(os.path.join(path, f"leaf_{e['i']:05d}.npy"))
+            for e in m["leaves"])
+    except (json.JSONDecodeError, KeyError):
+        return False
+
+
+def latest_step(directory: str) -> Optional[int]:
+    """Newest *valid* checkpoint step (skips .tmp and corrupt dirs)."""
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            path = os.path.join(directory, name)
+            if _valid(path):
+                steps.append(int(name[5:]))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, like,
+                       shardings=None, verify: bool = True):
+    """Restore into the structure of `like` (a pytree of arrays or
+    ShapeDtypeStructs).  shardings: optional matching pytree of
+    NamedShardings — re-shards onto the current mesh (elastic restart)."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves, treedef = jax.tree.flatten(like)
+    assert len(leaves) == len(manifest["leaves"]), \
+        f"checkpoint has {len(manifest['leaves'])} leaves, model {len(leaves)}"
+    shard_leaves = (jax.tree.flatten(shardings)[0] if shardings is not None
+                    else [None] * len(leaves))
+    out = []
+    for i, (leaf, shd) in enumerate(zip(leaves, shard_leaves)):
+        arr = np.load(os.path.join(path, f"leaf_{i:05d}.npy"))
+        meta = manifest["leaves"][i]
+        if verify and _sha(arr) != meta["sha256"]:
+            raise IOError(f"checkpoint leaf {i} failed integrity check")
+        expect = tuple(getattr(leaf, "shape", arr.shape))
+        if tuple(arr.shape) != expect:
+            raise ValueError(
+                f"leaf {i}: checkpoint shape {arr.shape} != model {expect}")
+        out.append(jax.device_put(arr, shd) if shd is not None
+                   else jax.numpy.asarray(arr))
+    return jax.tree.unflatten(treedef, out), manifest.get("extra", {})
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    directory: str
+    keep: int = 3
+    async_save: bool = False
+
+    def __post_init__(self):
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, step: int, tree, extra: Optional[Dict] = None):
+        # snapshot to host memory NOW (cheap); write possibly in background
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        if self.async_save:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host, extra), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host, extra)
+
+    def _write(self, step, host_tree, extra):
+        save_checkpoint(self.directory, step, host_tree, extra)
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        if not os.path.isdir(self.directory):
+            return
+        steps = sorted(
+            int(n[5:]) for n in os.listdir(self.directory)
+            if n.startswith("step_") and not n.endswith(".tmp"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def restore_latest(self, like, shardings=None):
+        self.wait()
+        step = latest_step(self.directory)
+        if step is None:
+            return None, None, None
+        tree, extra = restore_checkpoint(self.directory, step, like, shardings)
+        return step, tree, extra

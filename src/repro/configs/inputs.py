@@ -1,0 +1,84 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × shape) cell.
+
+`input_specs(cfg, shape)` returns the exact abstract inputs each step
+function is lowered with (dry-run: no allocation).  `make_batch` returns
+the concrete equivalent for smoke tests / examples (deterministic,
+hash-seeded).  Modality frontends are stubs per the assignment: VLM cells
+get precomputed patch embeddings, audio cells get frame embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, ShapeConfig
+
+
+def _extras_specs(cfg: ModelConfig, batch: int) -> Dict[str, Any]:
+    out = {}
+    if cfg.family == "vlm" and cfg.n_patches:
+        out["patches"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_patches, cfg.d_model), cfg.cdtype)
+    if cfg.is_encdec:
+        out["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.enc_context, cfg.d_model), cfg.cdtype)
+    return out
+
+
+def train_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        **_extras_specs(cfg, b),
+    }
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        **_extras_specs(cfg, b),
+    }
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Decode lowers serve_step: ONE new token against a seq_len KV cache."""
+    b = shape.global_batch
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "cache_len": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    if shape.kind == "train":
+        return train_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_specs(cfg, shape)
+    return decode_specs(cfg, shape)
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq: int, seed: int = 0,
+               kind: str = "train") -> Dict[str, Any]:
+    """Concrete deterministic batch for smoke tests / examples."""
+    key = jax.random.PRNGKey(seed)
+    kt, kl, kx = jax.random.split(key, 3)
+    out: Dict[str, Any] = {
+        "tokens": jax.random.randint(kt, (batch, seq), 0, cfg.vocab_size,
+                                     jnp.int32),
+    }
+    if kind == "train":
+        out["labels"] = jax.random.randint(kl, (batch, seq), 0,
+                                           cfg.vocab_size, jnp.int32)
+    if cfg.family == "vlm" and cfg.n_patches:
+        out["patches"] = 0.02 * jax.random.normal(
+            kx, (batch, cfg.n_patches, cfg.d_model), jnp.float32
+        ).astype(cfg.cdtype)
+    if cfg.is_encdec:
+        out["frames"] = 0.02 * jax.random.normal(
+            kx, (batch, cfg.enc_context, cfg.d_model), jnp.float32
+        ).astype(cfg.cdtype)
+    return out

@@ -1,0 +1,54 @@
+"""repro.core — the paper's contribution: (parallel) Multi-Slice Clustering.
+
+Public API:
+  MSCConfig, PlantedSpec, ModeResult, MSCResult       (types)
+  make_planted_tensor, planted_masks, planted_factors (synthetic data, §IV)
+  msc_sequential, msc_similarity_matrices             (Alg. 1 reference)
+  build_msc_parallel, make_msc_mesh                   (Alg. 2, shard_map)
+  extract_cluster, max_gap_init, trim_to_theorem      (cluster extraction)
+  recovery_rate, similarity_index                     (Eq. 6 metrics)
+  wishart_mu_sigma, tw_threshold, theorem_threshold   (§II statistics)
+  cluster_activations, cluster_experts                (LM integration)
+  msc_dbscan                                          (multi-cluster ext.)
+"""
+from .types import MSCConfig, MSCResult, ModeResult, PlantedSpec
+from .synthetic import (
+    make_planted_tensor,
+    make_planted_tensor_chunked,
+    planted_factors,
+    planted_masks,
+)
+from .msc import (
+    mode_slices,
+    msc_sequential,
+    msc_similarity_matrices,
+    normalized_eigrows,
+    similarity_matrix,
+    marginal_sums,
+    cluster_mode_slices,
+)
+from .parallel import (
+    build_msc_parallel,
+    build_msc_parallel_flat,
+    build_msc_parallel_grouped,
+    make_msc_mesh,
+)
+from .extraction import extract_cluster, max_gap_init, trim_to_theorem
+from .metrics import recovery_rate, similarity_index, similarity_index_mode
+from .stats import (
+    epsilon_ok,
+    standardize_top_eig,
+    theorem_threshold,
+    tw_threshold,
+    wishart_mu_sigma,
+)
+from .power_iter import (
+    power_iteration_gram,
+    power_iteration_matrix_free,
+    rayleigh_residual,
+    top_eigenpairs,
+)
+from .integration import cluster_activations, cluster_experts, routing_tensor
+from .dbscan import dbscan_from_similarity, msc_dbscan
+
+__all__ = [k for k in dir() if not k.startswith("_")]

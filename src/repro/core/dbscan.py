@@ -1,0 +1,70 @@
+"""MSC-DBSCAN: multi-cluster extension (paper's ref [11], arXiv:2303.07768).
+
+The base MSC extracts a *single* cluster per mode (max-gap + Theorem II.1
+trimming).  The DBSCAN extension instead treats each slice i as a point
+whose similarity to slice j is c_ij = |⟨λ̃_i ṽ_i, λ̃_j ṽ_j⟩| and runs a
+density-based scan with distance 1 − c_ij, yielding *several* clusters
+per mode plus noise.  This file implements that extension on top of the
+same per-mode spectral machinery (so it parallelizes identically: the
+expensive part is V, which is already sharded; DBSCAN itself runs on the
+tiny m×m similarity).
+
+The scan is a standard DBSCAN (Ester et al., 1996) specialised to a
+precomputed similarity matrix; it runs host-side in numpy — m is at most
+a few thousand and the tensor work dominates by orders of magnitude.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from .msc import mode_slices, normalized_eigrows, similarity_matrix
+from .types import MSCConfig
+
+
+def dbscan_from_similarity(c: np.ndarray, eps: float, min_samples: int) -> np.ndarray:
+    """DBSCAN labels from a similarity matrix (distance = 1 − c).
+
+    Returns int labels (m,): −1 = noise, 0..k−1 = cluster ids.
+    """
+    c = np.asarray(c)
+    m = c.shape[0]
+    # neighbourhoods: N(i) = {j : dist(i,j) <= eps}  (includes i itself)
+    neigh = (1.0 - c) <= eps
+    counts = neigh.sum(axis=1)
+    core = counts >= min_samples
+
+    labels = np.full(m, -1, dtype=np.int64)
+    cluster = 0
+    for i in range(m):
+        if labels[i] != -1 or not core[i]:
+            continue
+        # BFS flood-fill from this core point
+        labels[i] = cluster
+        frontier = [i]
+        while frontier:
+            p = frontier.pop()
+            if not core[p]:
+                continue  # border points do not expand
+            for q in np.nonzero(neigh[p])[0]:
+                if labels[q] == -1:
+                    labels[q] = cluster
+                    frontier.append(q)
+        cluster += 1
+    return labels
+
+
+def msc_dbscan_mode(tensor, mode: int, cfg: MSCConfig,
+                    eps: float = 0.5, min_samples: int = 3) -> Tuple[np.ndarray, np.ndarray]:
+    """Multi-cluster MSC for one mode.  Returns (labels (m,), C (m,m))."""
+    slices = mode_slices(tensor, mode)
+    v_rows, _ = normalized_eigrows(slices, cfg)
+    c = np.asarray(similarity_matrix(v_rows))
+    return dbscan_from_similarity(c, eps, min_samples), c
+
+
+def msc_dbscan(tensor, cfg: MSCConfig, eps: float = 0.5,
+               min_samples: int = 3) -> List[np.ndarray]:
+    """Multi-cluster MSC over all three modes (labels per mode)."""
+    return [msc_dbscan_mode(tensor, j, cfg, eps, min_samples)[0] for j in range(3)]

@@ -1,0 +1,118 @@
+"""Cluster extraction from the marginal-similarity vector d (paper Alg. 1).
+
+Two stages, exactly as in the paper:
+
+1. **Max-gap initialization** — sort d in decreasing order, find the largest
+   consecutive gap, and take every index above it as the initial cluster J.
+   (Planted slices concentrate their similarity mass, so their d_i ≈ l sit
+   well above the noise bulk.)
+
+2. **Theorem II.1 trimming** — while the spread of d over J violates
+       max_{i,n∈J} |d_i − d_n| ≤ l·ε/2 + sqrt(log(m − l)),
+   drop the member of J with the smallest d (the paper's "smallest value
+   that violates the theorem"), recompute l = |J|, and repeat until the
+   bound holds ("convergence of the elements of J").
+
+Everything is mask-based and jit-safe (`lax.while_loop` with a fixed-shape
+boolean membership mask), so the same code runs inside the replicated
+epilogue of the parallel version.  `valid_mask` handles padding introduced
+by even sharding: padded entries never enter J and do not count in m.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .stats import theorem_threshold
+
+_NEG = -1e30  # effective -inf for masked reductions (fp32-safe)
+
+
+def max_gap_init(d: jax.Array, valid_mask: Optional[jax.Array] = None) -> jax.Array:
+    """Initial cluster mask via the max gap of sorted d (paper Alg. 1).
+
+    d: (m,) marginal sums.  valid_mask: optional bool (m,), False = padding.
+    Returns bool (m,): True for indices whose d lies strictly above the
+    largest gap in the sorted sequence.
+    """
+    m = d.shape[0]
+    if valid_mask is None:
+        valid_mask = jnp.ones((m,), bool)
+    n_valid = jnp.sum(valid_mask.astype(jnp.int32))
+    dm = jnp.where(valid_mask, d, _NEG)
+    order = jnp.argsort(-dm)  # decreasing
+    ds = dm[order]
+    gaps = ds[:-1] - ds[1:]  # (m-1,) non-negative
+    # Only gaps between two *valid* entries may split the cluster off the
+    # bulk; a gap adjacent to padding is meaningless.  Positions k compare
+    # ds[k] and ds[k+1]; require k+1 < n_valid.
+    pos_ok = jnp.arange(m - 1) + 1 < n_valid
+    gaps = jnp.where(pos_ok, gaps, -1.0)
+    k = jnp.argmax(gaps)  # cluster = sorted positions 0..k
+    thresh = ds[k]  # smallest d inside the cluster
+    return (dm >= thresh) & valid_mask
+
+
+def _spread(d: jax.Array, mask: jax.Array) -> jax.Array:
+    """max_{i,n in mask} |d_i − d_n| = max(d[mask]) − min(d[mask])."""
+    hi = jnp.max(jnp.where(mask, d, _NEG))
+    lo = jnp.min(jnp.where(mask, d, -_NEG))
+    return hi - lo
+
+
+@partial(jax.jit, static_argnames=("max_iters",))
+def trim_to_theorem(
+    d: jax.Array,
+    init_mask: jax.Array,
+    epsilon: float,
+    valid_mask: Optional[jax.Array] = None,
+    max_iters: int = 0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Theorem II.1 trimming loop.  Returns (final mask, n_iters).
+
+    Each iteration removes the argmin-d member while the bound is violated
+    and |J| > 1.  max_iters=0 → cap at m (each step removes one element, so
+    m always suffices).
+    """
+    m = d.shape[0]
+    if valid_mask is None:
+        valid_mask = jnp.ones((m,), bool)
+    cap = max_iters if max_iters > 0 else m
+    n_valid = jnp.sum(valid_mask.astype(jnp.float32))
+    eps = jnp.asarray(epsilon, d.dtype)
+
+    def violated(mask):
+        l = jnp.sum(mask.astype(jnp.float32))
+        bound = theorem_threshold(l, n_valid, eps)
+        return (_spread(d, mask) > bound) & (l > 1.0)
+
+    def cond(state):
+        mask, it = state
+        return violated(mask) & (it < cap)
+
+    def body(state):
+        mask, it = state
+        dm = jnp.where(mask, d, -_NEG)  # +inf outside J
+        drop = jnp.argmin(dm)
+        return mask.at[drop].set(False), it + 1
+
+    mask, n_iters = jax.lax.while_loop(cond, body, (init_mask, jnp.int32(0)))
+    return mask, n_iters
+
+
+def extract_cluster(
+    d: jax.Array,
+    epsilon: float,
+    valid_mask: Optional[jax.Array] = None,
+    max_iters: int = 0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Full extraction: max-gap init + theorem trimming.
+
+    Returns (bool mask (m,), n_trim_iters).  Deterministic, so the parallel
+    version can run it replicated on every device with identical results.
+    """
+    init = max_gap_init(d, valid_mask)
+    return trim_to_theorem(d, init, epsilon, valid_mask, max_iters)

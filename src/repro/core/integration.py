@@ -1,0 +1,88 @@
+"""MSC as a framework feature over model-derived third-order tensors.
+
+The paper's technique is a clustering-algorithm parallelization — it does
+not modify any model's forward pass (DESIGN.md §4).  The honest
+integration is to run (parallel) MSC on third-order tensors the training
+framework naturally produces:
+
+* **activation tensors** (layers × tokens × features): triclusters expose
+  groups of redundant layers / token positions / feature directions —
+  cheap structure discovery during training.
+* **MoE routing tensors** (layers × experts × feature-bins): triclusters
+  expose expert groups with correlated routing — a redundancy signal for
+  expert pruning/merging.
+
+Both reuse exactly the same `repro.core` MSC machinery and meshes as the
+paper driver, which is the point: one collective substrate serves both
+workloads.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .msc import msc_sequential
+from .parallel import build_msc_parallel
+from .types import MSCConfig, MSCResult
+
+
+def collect_activation_tensor(layer_acts: Sequence[jax.Array],
+                              max_tokens: int = 512,
+                              max_features: int = 512) -> jax.Array:
+    """Stack per-layer activations into a (layers, tokens, features) tensor.
+
+    layer_acts: list of (batch, seq, features) or (tokens, features) arrays
+    (one per layer).  Token/feature axes are truncated to keep the MSC
+    input at diagnostic size; values are standardized per layer so the MSC
+    noise model (unit-variance background) approximately applies.
+    """
+    stacked = []
+    for a in layer_acts:
+        a = a.reshape(-1, a.shape[-1])  # (tokens, features)
+        a = a[:max_tokens, :max_features]
+        mu = jnp.mean(a)
+        sd = jnp.std(a) + 1e-6
+        stacked.append((a - mu) / sd)
+    return jnp.stack(stacked)  # (layers, tokens, features)
+
+
+def cluster_activations(layer_acts: Sequence[jax.Array],
+                        cfg: Optional[MSCConfig] = None,
+                        mesh=None,
+                        **collect_kw) -> MSCResult:
+    """Tricluster an activation tensor.  mesh=None → sequential reference;
+    otherwise the parallel flat schedule on that mesh."""
+    cfg = cfg or MSCConfig(epsilon=1e-6)
+    tensor = collect_activation_tensor(layer_acts, **collect_kw)
+    if mesh is None:
+        return msc_sequential(tensor, cfg)
+    return build_msc_parallel(mesh, cfg, "flat")(tensor)
+
+
+def routing_tensor(router_probs: Sequence[jax.Array], n_bins: int = 32) -> jax.Array:
+    """MoE routing statistics tensor (layers, experts, bins).
+
+    router_probs: per-layer (tokens, experts) softmax routing weights.
+    Bin tokens by hash into `n_bins` groups and average the routing mass —
+    a fixed-shape summary of which experts fire on which token groups.
+    """
+    layers = []
+    for p in router_probs:
+        t, e = p.shape
+        bins = jnp.arange(t) % n_bins
+        mass = jax.ops.segment_sum(p, bins, num_segments=n_bins)  # (bins, e)
+        count = jax.ops.segment_sum(jnp.ones((t,)), bins, num_segments=n_bins)
+        mass = mass / jnp.maximum(count, 1.0)[:, None]
+        mass = (mass - jnp.mean(mass)) / (jnp.std(mass) + 1e-6)
+        layers.append(mass.T)  # (experts, bins)
+    return jnp.stack(layers)  # (layers, experts, bins)
+
+
+def cluster_experts(router_probs: Sequence[jax.Array],
+                    cfg: Optional[MSCConfig] = None,
+                    n_bins: int = 32) -> MSCResult:
+    """Tricluster the MoE routing tensor: mode-2 clusters = expert groups."""
+    cfg = cfg or MSCConfig(epsilon=1e-6)
+    return msc_sequential(routing_tensor(router_probs, n_bins), cfg)

@@ -1,0 +1,32 @@
+"""Cluster-quality metrics (paper Eq. 6): recovery rate and similarity index."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def recovery_rate(true_masks, pred_masks) -> jnp.ndarray:
+    """rec = (1/3) Σ_k |J_k ∩ Ĵ_k| / |J_k| — fraction of the planted cluster
+    recovered, averaged over modes.  Masks are boolean membership vectors."""
+    per_mode = []
+    for t, p in zip(true_masks, pred_masks):
+        t = t.astype(jnp.float32)
+        p = p.astype(jnp.float32)
+        per_mode.append(jnp.sum(t * p) / jnp.maximum(jnp.sum(t), 1.0))
+    return jnp.mean(jnp.stack(per_mode))
+
+
+def similarity_index_mode(c_full, pred_mask) -> jnp.ndarray:
+    """sim_k = (1/|Ĵ|²) Σ_{i,j∈Ĵ} c_ij for one mode.
+
+    c_full: (m, m) similarity matrix C = |VᵀV| of that mode.
+    pred_mask: bool (m,) output cluster.
+    """
+    p = pred_mask.astype(jnp.float32)
+    l = jnp.maximum(jnp.sum(p), 1.0)
+    return jnp.einsum("i,ij,j->", p, c_full, p) / (l * l)
+
+
+def similarity_index(c_mats, pred_masks) -> jnp.ndarray:
+    """sim = (1/3) Σ_k sim_k (paper Eq. 6, right)."""
+    vals = [similarity_index_mode(c, p) for c, p in zip(c_mats, pred_masks)]
+    return jnp.mean(jnp.stack(vals))

@@ -1,0 +1,122 @@
+"""Batched top-eigenpair extraction for slice covariances (paper §III-C).
+
+For each slice T_i (r × c) the paper extracts the top eigenpair of
+C_i = T_iᵀT_i with power iteration.  Two paths:
+
+* explicit gram (paper-faithful): form C_i once (r·c² MACs) then iterate
+  v ← C_i v (c² per iteration).  This is what the reference MPI code does.
+* matrix-free (beyond-paper): iterate v ← T_iᵀ(T_i v) (2·r·c per
+  iteration) and never materialize C_i.  For the paper's 1000³ tensors
+  this trades 10⁹ one-time MACs per slice for 2·10⁶ per iteration — a
+  ~8× FLOP reduction at 60 iterations — and drops the c×c temporary,
+  which is what matters for VMEM residency on TPU.
+
+All slices on a device are processed as one batched einsum so the MXU
+sees large matmuls rather than a per-slice loop.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def _init_vectors(batch: int, dim: int, dtype=jnp.float32) -> jax.Array:
+    """Deterministic start vectors with guaranteed overlap with any
+    non-negative planted direction: ones + a fixed low-amplitude
+    perturbation (breaks ties/orthogonal starts without a PRNG key)."""
+    pert = 0.01 * jnp.sin(1.37 * jnp.arange(dim, dtype=dtype) + 0.3)
+    v0 = jnp.ones((dim,), dtype) + pert
+    v0 = v0 / jnp.linalg.norm(v0)
+    return jnp.broadcast_to(v0, (batch, dim))
+
+
+def _normalize(v, eps=1e-30):
+    return v / (jnp.linalg.norm(v, axis=-1, keepdims=True) + eps)
+
+
+def _maybe_pvary(v, vary_axes):
+    """Mark the loop-carry init as device-varying inside shard_map.
+
+    shard_map's vma tracking requires the fori_loop carry to keep the same
+    varying-axes type as the body output; the deterministic init is
+    replicated, so callers running under shard_map pass their mesh axes."""
+    if vary_axes:
+        axes = (vary_axes,) if isinstance(vary_axes, str) else tuple(vary_axes)
+        return jax.lax.pvary(v, axes)
+    return v
+
+
+@partial(jax.jit, static_argnames=("n_iters", "vary_axes"))
+def power_iteration_matrix_free(slices: jax.Array, n_iters: int = 60,
+                                vary_axes=None):
+    """Top eigenpair of T_iᵀT_i for a batch of slices, without forming C_i.
+
+    slices: (b, r, c).  Returns (lambdas (b,), vectors (b, c)).
+    λ_i = ‖T_i v_i‖² is the Rayleigh quotient of C_i at the converged v_i.
+    """
+    b, r, c = slices.shape
+    v = _maybe_pvary(_init_vectors(b, c, slices.dtype), vary_axes)
+
+    def step(_, v):
+        tv = jnp.einsum("brc,bc->br", slices, v)  # T v
+        w = jnp.einsum("brc,br->bc", slices, tv)  # Tᵀ(T v)
+        return _normalize(w)
+
+    v = jax.lax.fori_loop(0, n_iters, step, v)
+    tv = jnp.einsum("brc,bc->br", slices, v)
+    lam = jnp.sum(tv * tv, axis=-1)
+    return lam, v
+
+
+@partial(jax.jit, static_argnames=("n_iters", "use_kernel", "vary_axes"))
+def power_iteration_gram(slices: jax.Array, n_iters: int = 60,
+                         use_kernel: bool = False, vary_axes=None):
+    """Paper-faithful path: form C_i = T_iᵀT_i explicitly, then iterate.
+
+    slices: (b, r, c).  Returns (lambdas (b,), vectors (b, c)).
+    """
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        gram = kops.batched_gram(slices)
+    else:
+        gram = jnp.einsum("brc,brd->bcd", slices, slices)
+    return power_iteration_on_gram(gram, n_iters=n_iters, vary_axes=vary_axes)
+
+
+@partial(jax.jit, static_argnames=("n_iters", "vary_axes"))
+def power_iteration_on_gram(gram: jax.Array, n_iters: int = 60, vary_axes=None):
+    """Power iteration given precomputed covariance matrices (b, c, c)."""
+    b, c, _ = gram.shape
+    v = _maybe_pvary(_init_vectors(b, c, gram.dtype), vary_axes)
+
+    def step(_, v):
+        return _normalize(jnp.einsum("bcd,bd->bc", gram, v))
+
+    v = jax.lax.fori_loop(0, n_iters, step, v)
+    lam = jnp.einsum("bc,bcd,bd->b", v, gram, v)
+    return lam, v
+
+
+def top_eigenpairs(slices: jax.Array, n_iters: int = 60, matrix_free: bool = True,
+                   use_kernel: bool = False, vary_axes=None):
+    """Dispatch between the two paths (cfg.matrix_free selects)."""
+    if matrix_free:
+        if use_kernel:
+            from repro.kernels import ops as kops
+
+            return kops.power_iterate_matrix_free(slices, n_iters,
+                                                  vary_axes=vary_axes)
+        return power_iteration_matrix_free(slices, n_iters, vary_axes=vary_axes)
+    return power_iteration_gram(slices, n_iters, use_kernel=use_kernel,
+                                vary_axes=vary_axes)
+
+
+def rayleigh_residual(slices: jax.Array, lam: jax.Array, v: jax.Array):
+    """‖C v − λ v‖ / max(λ, 1) per slice — convergence diagnostic for tests."""
+    tv = jnp.einsum("brc,bc->br", slices, v)
+    cv = jnp.einsum("brc,br->bc", slices, tv)
+    resid = jnp.linalg.norm(cv - lam[:, None] * v, axis=-1)
+    return resid / jnp.maximum(lam, 1.0)

@@ -1,0 +1,69 @@
+"""Random-matrix statistics underlying MSC (paper §II, Eq. 3–4).
+
+For a noise slice Z_i with i.i.d. N(0,1) rows, C_i = Z_iᵀZ_i is white
+Wishart W_{m3}(m2, I); its largest eigenvalue, centered with μ and scaled
+with σ below, converges to the Tracy–Widom F1 law (Johnstone 2001).  MSC
+uses this to justify that noise-slice top eigenvalues concentrate near μ
+so that planted slices (λ = Ω(μ)) separate.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wishart_mu_sigma(m2, m3):
+    """Centering μ and scale σ of the top Wishart eigenvalue (paper Eq. 4).
+
+    μ = (sqrt(m2-1) + sqrt(m3))²
+    σ = sqrt(μ) · (1/sqrt(m2-1) + 1/sqrt(m3))^{1/3}
+
+    Accurate already for m2, m3 ≥ 10 (paper remark under Eq. 4).
+    """
+    a = jnp.sqrt(jnp.asarray(m2, jnp.float64 if False else jnp.float32) - 1.0)
+    b = jnp.sqrt(jnp.asarray(m3, jnp.float32))
+    mu = (a + b) ** 2
+    sigma = jnp.sqrt(mu) * (1.0 / a + 1.0 / b) ** (1.0 / 3.0)
+    return mu, sigma
+
+
+# Tracy–Widom F1 quantiles (beta=1), from Bejan (2005) / standard tables.
+# Used for significance thresholds on top eigenvalues.
+_TW1_QUANTILES = {
+    0.90: 0.4501,
+    0.95: 0.9793,
+    0.99: 2.0234,
+    0.995: 2.4224,
+    0.999: 3.2724,
+}
+
+
+def tw_threshold(m2, m3, quantile: float = 0.99):
+    """λ above this value is significant at `quantile` under the noise law."""
+    if quantile not in _TW1_QUANTILES:
+        raise ValueError(
+            f"quantile must be one of {sorted(_TW1_QUANTILES)}, got {quantile}"
+        )
+    mu, sigma = wishart_mu_sigma(m2, m3)
+    return mu + _TW1_QUANTILES[quantile] * sigma
+
+
+def standardize_top_eig(lam, m2, m3):
+    """Standardize a top eigenvalue per Eq. 3: (λ − μ)/σ → F1 in distribution."""
+    mu, sigma = wishart_mu_sigma(m2, m3)
+    return (lam - mu) / sigma
+
+
+def theorem_threshold(l, m, epsilon):
+    """RHS of Theorem II.1: l·ε/2 + sqrt(log(m − l)).
+
+    Guards: the theorem assumes l < m; we clamp m − l ≥ 2 so the bound is
+    defined (and monotone) all the way to the degenerate end of the
+    trimming loop.
+    """
+    gap = jnp.maximum(jnp.asarray(m - l, jnp.float32), 2.0)
+    return l * epsilon / 2.0 + jnp.sqrt(jnp.log(gap))
+
+
+def epsilon_ok(epsilon, m, l):
+    """Whether ε satisfies the theorem hypothesis sqrt(ε) ≤ 1/(m − l)."""
+    return jnp.sqrt(epsilon) <= 1.0 / jnp.maximum(m - l, 1)

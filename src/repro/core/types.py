@@ -1,0 +1,118 @@
+"""Core datatypes for the MSC (Multi-Slice Clustering) library.
+
+The MSC method (Andriantsiory et al., ICMLA 2021; parallel version CS.DC 2023)
+triclusters a third-order tensor mode-by-mode.  These types are shared by the
+sequential reference (`repro.core.msc`) and the shard_map parallel
+implementation (`repro.core.parallel`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MSCConfig:
+    """Hyper-parameters of the MSC algorithm.
+
+    Attributes:
+      epsilon: similarity threshold (paper's ε). Theorem II.1 requires
+        sqrt(ε) ≤ 1/(m - l) for exact recovery guarantees.
+      power_iters: fixed number of power-iteration steps per slice
+        (static control flow; 60 is ample for the paper's planted model).
+      matrix_free: if True, iterate v ← Tᵀ(T v) without forming the m3×m3
+        covariance (beyond-paper optimization).  If False, form
+        C_i = T_iᵀT_i explicitly — the paper-faithful baseline.
+      max_extraction_iters: cap on the Theorem II.1 trimming loop
+        (≤ m always suffices: each iteration removes one element).
+      use_kernels: route hot spots through the Pallas kernels in
+        repro.kernels (interpret mode on CPU) instead of plain jnp.
+    """
+
+    epsilon: float = 1e-6
+    power_iters: int = 60
+    matrix_free: bool = True
+    max_extraction_iters: int = 0  # 0 → use m (set at call time)
+    use_kernels: bool = False
+
+    def with_(self, **kw) -> "MSCConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ModeResult:
+    """Result of clustering one tensor mode.
+
+    Attributes:
+      mask: bool[m] — membership of each slice index in the cluster J.
+      d: float[m] — marginal similarity sums (paper's d vector).
+      lambdas: float[m] — top eigenvalue per slice (unnormalized).
+      n_iters: int — extraction iterations executed until convergence.
+    """
+
+    mask: jax.Array
+    d: jax.Array
+    lambdas: jax.Array
+    n_iters: jax.Array
+
+    def tree_flatten(self):
+        return (self.mask, self.d, self.lambdas, self.n_iters), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def indices(self):
+        """Cluster indices as a host-side numpy array (not jit-safe)."""
+        import numpy as np
+
+        return np.nonzero(np.asarray(self.mask))[0]
+
+    @property
+    def size(self):
+        return jnp.sum(self.mask.astype(jnp.int32))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class MSCResult:
+    """Tricluster: one ModeResult per tensor mode (J1, J2, J3)."""
+
+    modes: tuple  # tuple[ModeResult, ...]
+
+    def tree_flatten(self):
+        return (self.modes,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def __iter__(self):
+        return iter(self.modes)
+
+    def __getitem__(self, i):
+        return self.modes[i]
+
+
+@dataclasses.dataclass(frozen=True)
+class PlantedSpec:
+    """Specification of the paper's synthetic rank-1 planted model (§IV).
+
+    T = γ · w ⊗ u ⊗ v + Z with Z_ijk ~ N(0,1) i.i.d. and the factors
+    constant 1/sqrt(l_k) on the planted index sets J_k.
+    """
+
+    shape: tuple  # (m1, m2, m3)
+    cluster_sizes: tuple  # (l1, l2, l3)
+    gamma: float
+
+    @staticmethod
+    def paper(m: int, gamma: float) -> "PlantedSpec":
+        """The paper's setting: cube tensor, l = 10% of m per mode."""
+        l = max(1, (10 * m) // 100)
+        return PlantedSpec(shape=(m, m, m), cluster_sizes=(l, l, l), gamma=gamma)

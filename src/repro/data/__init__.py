@@ -1,0 +1,1 @@
+from .pipeline import SyntheticLMDataset, TensorChunkLoader, device_put_batch

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+  gram.py            — batched slice covariance C_i = T_iᵀT_i (paper Alg. 1)
+  similarity.py      — fused |V_lVᵀ| row-sums (parallel epilogue, Alg. 2)
+  power_iter.py      — VMEM-resident matrix-free power iteration
+  flash_attention.py — chunked online-softmax attention (LM train/prefill)
+
+ops.py exposes jit'd wrappers with CPU-interpret fallback; ref.py holds
+the pure-jnp oracles each kernel is tested against.
+"""
+from . import ops, ref

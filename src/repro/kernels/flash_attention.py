@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: flash attention (online-softmax, chunked KV).
+
+The LM-side compute hot spot: training/prefill attention at seq 4k–32k.
+Classic FlashAttention schedule adapted to the TPU memory hierarchy:
+
+  grid = (batch·heads, q_tiles, kv_tiles) — kv innermost, sequential;
+  q tile + running (acc, m, l) stay in VMEM scratch across the kv march,
+  so the s = qkᵀ matrix is never materialized in HBM (O(s²) → O(s·d)
+  traffic), and each (q, kv) tile pair is one MXU matmul.
+
+Supports: causal masking with a query-position offset (decode/prefill
+continuation), sliding-window locality (gemma2 / recurrentgemma local
+layers), and gemma2 logit soft-capping — all resolved at trace time so
+dead branches vanish from the compiled kernel.
+
+Block sizes default to (128, 512): q tile 128×d and kv tile 512×d fp32
+with d ≤ 256 keep the working set (q, k, v, acc, s) ≲ 1.5 MB ≪ VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale, causal, window, softcap, q_offset,
+                  block_q, block_k, n_k, sq, skv):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # (block_q, d)
+    k = k_ref[0].astype(jnp.float32)  # (block_k, d)
+    v = v_ref[0].astype(jnp.float32)  # (block_k, d)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) \
+        + q_offset
+    kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = kpos < skv  # kv padding
+    mask &= (qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)) < sq
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, _NEG)
+
+    m_prev = m_ref[...]                                   # (block_q, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                                # (block_q, block_k)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / (l_ref[...] + 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "q_offset", "window", "softcap",
+                     "block_q", "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, scale: float | None = None,
+                    q_offset: int = 0, window: int | None = None,
+                    softcap: float | None = None,
+                    block_q: int = 128, block_k: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """Fused attention.  q: (b, sq, d), k/v: (b, skv, d) → (b, sq, d).
+
+    `b` is batch×heads flattened by the caller (GQA head mapping happens
+    outside; the kernel is head-agnostic).
+    """
+    b, sq, d = q.shape
+    skv = k.shape[1]
+    scale = (d ** -0.5) if scale is None else scale
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    sqp = pl.cdiv(sq, block_q) * block_q
+    skvp = pl.cdiv(skv, block_k) * block_k
+    if sqp != sq:
+        q = jnp.pad(q, ((0, 0), (0, sqp - sq), (0, 0)))
+    if skvp != skv:
+        k = jnp.pad(k, ((0, 0), (0, skvp - skv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, skvp - skv), (0, 0)))
+    n_q, n_k = sqp // block_q, skvp // block_k
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, q_offset=q_offset, block_q=block_q,
+        block_k=block_k, n_k=n_k, sq=sq, skv=skv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bi, qi, ki: (bi, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bi, qi, ki: (bi, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bi, qi, ki: (bi, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bi, qi, ki: (bi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, sqp, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),   # acc
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running denom l
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :sq, :]

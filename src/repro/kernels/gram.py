@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: batched slice covariance C_i = T_iᵀT_i.
+
+This is the paper-faithful hot spot (Alg. 1 line 1): every slice's gram
+matrix, batched over the slices a device owns.  The kernel tiles the
+(c × c) output into VMEM blocks and marches over the contraction (row)
+dimension, accumulating on the MXU in fp32.
+
+Grid: (b, ci, cj, rk) — rk innermost so the output block (ci, cj) stays
+resident in VMEM across the whole contraction (classic matmul schedule).
+Block sizes default to 128/256 — MXU-aligned (multiples of 128 on the
+lane dim) and small enough that 3 blocks (two inputs + acc) fit VMEM:
+  2·(block_r × block_c)·4B + block_c²·4B ≈ 2·128KiB + 256KiB ≪ 16 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gram_kernel(t1_ref, t2_ref, o_ref):
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = t1_ref[0].astype(jnp.float32)  # (block_r, block_ci)
+    b = t2_ref[0].astype(jnp.float32)  # (block_r, block_cj)
+    o_ref[0, :, :] += jax.lax.dot_general(
+        a, b, (((0,), (0,)), ((), ())),  # contract rows: aᵀ·b
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_r", "block_c", "interpret"))
+def batched_gram(slices: jax.Array, *, block_r: int = 256, block_c: int = 128,
+                 interpret: bool = False) -> jax.Array:
+    """(b, r, c) → (b, c, c), accumulated in fp32, cast back to input dtype."""
+    b, r, c = slices.shape
+    block_r = min(block_r, r)
+    block_c = min(block_c, c)
+    # pad r and c to block multiples; zero rows/cols add zero contributions
+    rp = pl.cdiv(r, block_r) * block_r
+    cp = pl.cdiv(c, block_c) * block_c
+    if (rp, cp) != (r, c):
+        slices = jnp.pad(slices, ((0, 0), (0, rp - r), (0, cp - c)))
+    grid = (b, cp // block_c, cp // block_c, rp // block_r)
+
+    out = pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_r, block_c),
+                         lambda bi, ci, cj, rk: (bi, rk, ci)),
+            pl.BlockSpec((1, block_r, block_c),
+                         lambda bi, ci, cj, rk: (bi, rk, cj)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, block_c),
+                               lambda bi, ci, cj, rk: (bi, ci, cj)),
+        out_shape=jax.ShapeDtypeStruct((b, cp, cp), jnp.float32),
+        interpret=interpret,
+    )(slices, slices)
+    return out[:, :c, :c].astype(slices.dtype)

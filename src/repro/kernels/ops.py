@@ -1,0 +1,69 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Dispatch policy: on TPU the kernels run compiled (`interpret=False`); on
+CPU (this container) they run in interpret mode, which executes the
+kernel body in Python per grid step — bit-faithful to the TPU dataflow
+but slow, so the big-tensor paths (core MSC, models) only route through
+kernels when `MSCConfig.use_kernels` / `ModelConfig.use_pallas` is set
+(tests and kernel benches); the dry-run lowers the jnp path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import gram as _gram
+from . import power_iter as _pi
+from . import similarity as _sim
+from . import ref
+
+
+@functools.cache
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def batched_gram(slices: jax.Array, *, interpret: bool | None = None,
+                 block_r: int = 256, block_c: int = 128) -> jax.Array:
+    """Pallas batched slice covariance C_i = T_iᵀT_i (see gram.py)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return _gram.batched_gram(slices, block_r=block_r, block_c=block_c,
+                              interpret=interpret)
+
+
+def similarity_rowsum(v_local: jax.Array, v_full: jax.Array, *,
+                      interpret: bool | None = None) -> jax.Array:
+    """Fused d = Σ|V_l V_fᵀ| row-sums (see similarity.py)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return _sim.similarity_rowsum(v_local, v_full, interpret=interpret)
+
+
+def power_iterate_matrix_free(slices: jax.Array, n_iters: int,
+                              vary_axes=None, *,
+                              interpret: bool | None = None):
+    """Fused VMEM-resident power iteration (see power_iter.py).
+
+    Matches repro.core.power_iter's deterministic init so the kernel path
+    is drop-in for MSCConfig.use_kernels=True.  (vary_axes accepted for
+    API parity; pallas_call output is already device-varying.)
+    """
+    from repro.core.power_iter import _init_vectors
+
+    interpret = _interpret_default() if interpret is None else interpret
+    b, r, c = slices.shape
+    v0 = _init_vectors(b, c, jnp.float32)
+    return _pi.power_iterate(slices, v0, n_iters, interpret=interpret)
+
+
+def flash_attention(q, k, v, *, causal=True, scale=None, q_offset=0,
+                    window=None, softcap=None, interpret: bool | None = None,
+                    block_q: int = 128, block_k: int = 512):
+    """Fused flash attention (see flash_attention.py)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return _fa.flash_attention(
+        q, k, v, causal=causal, scale=scale, q_offset=q_offset,
+        window=window, softcap=softcap, block_q=block_q, block_k=block_k,
+        interpret=interpret)

@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function here defines the exact semantics its kernel must reproduce;
+tests sweep shapes/dtypes and assert_allclose(kernel, ref).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def batched_gram(slices: jax.Array) -> jax.Array:
+    """C_i = T_iᵀ T_i for a batch of slices.  (b, r, c) → (b, c, c).
+
+    Accumulation in fp32 regardless of input dtype (MXU semantics)."""
+    out = jnp.einsum("brc,brd->bcd", slices.astype(jnp.float32),
+                     slices.astype(jnp.float32))
+    return out.astype(slices.dtype)
+
+
+def similarity_rowsum(v_local: jax.Array, v_full: jax.Array) -> jax.Array:
+    """d_local = Σ_j |V_local V_fullᵀ|_{:,j} without materializing C.
+
+    v_local: (bl, c) — this device's rows of V.
+    v_full:  (m, c)  — the gathered full V.
+    Returns (bl,) fp32.
+    """
+    c = jnp.abs(v_local.astype(jnp.float32) @ v_full.astype(jnp.float32).T)
+    return jnp.sum(c, axis=1)
+
+
+def power_iterate(slices: jax.Array, v0: jax.Array, n_iters: int):
+    """Matrix-free power iteration: v ← normalize(T_iᵀ(T_i v)), n_iters times.
+
+    slices: (b, r, c), v0: (b, c).  Returns (lam (b,), v (b, c)), fp32.
+    λ = ‖T v‖² at the final v (Rayleigh quotient of TᵀT).
+    """
+    s = slices.astype(jnp.float32)
+    v = v0.astype(jnp.float32)
+
+    def step(_, v):
+        tv = jnp.einsum("brc,bc->br", s, v)
+        w = jnp.einsum("brc,br->bc", s, tv)
+        return w / (jnp.linalg.norm(w, axis=-1, keepdims=True) + 1e-30)
+
+    v = jax.lax.fori_loop(0, n_iters, step, v)
+    tv = jnp.einsum("brc,bc->br", s, v)
+    lam = jnp.sum(tv * tv, axis=-1)
+    return lam, v
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, scale: float | None = None,
+                    q_offset: int = 0, window: int | None = None,
+                    softcap: float | None = None) -> jax.Array:
+    """Reference attention.  q: (b, sq, d), k/v: (b, skv, d) → (b, sq, d).
+
+    causal: query position i (global position q_offset+i) attends to
+      kv positions ≤ its global position.
+    window: optional sliding-window size W — attend only to the last W
+      positions (local attention, gemma2/recurrentgemma style).
+    softcap: optional logit soft-capping t·tanh(s/t) (gemma2).
+    """
+    b, sq, d = q.shape
+    skv = k.shape[1]
+    scale = (d ** -0.5) if scale is None else scale
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,270 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run driver (deliverable e).
+#
+# The two lines above MUST run before any jax import (jax locks the device
+# count on first init) and are intentionally NOT in conftest.py or
+# pyproject — smoke tests and benches see the 1 real CPU device; only this
+# entry point sees 512 placeholders.
+#
+# For every (architecture × input shape) cell this driver:
+#   1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+#   2. lowers the cell's step function (train_step for train_4k,
+#      prefill/decode serve steps for the inference cells) with
+#      ShapeDtypeStruct inputs — no allocation,
+#   3. .compile()s it — a sharding mismatch, OOM-at-compile or unsupported
+#      collective fails here, which is the point,
+#   4. prints compiled.memory_analysis() (proves the cell fits HBM) and
+#      cost_analysis(), and
+#   5. derives the three roofline terms (repro.roofline) from the compiled
+#      HLO and writes one JSON per cell into --out-dir.
+#
+# The paper's own workload (parallel MSC) is dry-run the same way via
+# --msc M: the flat-schedule MSC step is lowered on the same meshes.
+#
+# Usage:
+#   python -m repro.launch.dryrun --arch deepseek-67b --shape train_4k
+#   python -m repro.launch.dryrun --all --pods both
+#   python -m repro.launch.dryrun --msc 1024 --pods multi
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.configs.inputs import input_specs
+from repro.launch.mesh import chips as mesh_chips
+from repro.launch.mesh import make_production_mesh, mesh_name
+from repro.models import Model, ShapeConfig, build_model, cache_shapes, shapes_for
+from repro.models.config import SHAPES_BY_NAME
+from repro.optim import AdamWConfig
+from repro.roofline import (V5E, model_flops, report_from_compiled,
+                            save_report)
+from repro.roofline.analyze import RooflineReport
+
+
+def lower_cell(arch: str, shape: ShapeConfig, mesh):
+    """Lower one (arch × shape) cell on `mesh`.  Returns (lowered, meta)."""
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    specs = input_specs(cfg, shape)
+    if shape.kind == "train":
+        from repro.training.steps import abstract_train_state, build_train_step
+
+        step, s_shard, b_shard = build_train_step(
+            model, mesh, AdamWConfig(),
+            global_batch=shape.global_batch, seq_len=shape.seq_len)
+        state = abstract_train_state(model)
+        lowered = step.lower(state, specs)
+    elif shape.kind == "prefill":
+        from repro.serving.engine import build_serve_steps
+
+        prefill, _, _, _, _ = build_serve_steps(
+            model, mesh, shape.global_batch, shape.seq_len)
+        lowered = prefill.lower(_serve_params(model), specs)
+    else:  # decode
+        from repro.serving.engine import build_serve_steps
+
+        _, decode, _, _, _ = build_serve_steps(
+            model, mesh, shape.global_batch, shape.seq_len)
+        cache = cache_shapes(cfg, shape.global_batch, shape.seq_len)
+        lowered = decode.lower(_serve_params(model), specs["tokens"], cache,
+                               specs["cache_len"])
+    return lowered, cfg
+
+
+def _serve_params(model):
+    """Serving weights in compute dtype (bf16) — standard deployment
+    practice; halves weight residency (deepseek decode_32k was 16.3 GiB
+    with f32 masters).  1-D params (norm scales) stay f32."""
+    cd = model.cfg.cdtype
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, cd)
+        if len(s.shape) >= 2 else s, model.abstract())
+
+
+def lower_msc(m: int, mesh, *, matrix_free: bool = True, power_iters: int = 60,
+              relayout: str = "gspmd"):
+    """Lower the parallel MSC step (the paper's workload) on `mesh`."""
+    from repro.core import MSCConfig
+    from repro.core.parallel import build_msc_parallel_flat
+
+    cfg = MSCConfig(power_iters=power_iters, matrix_free=matrix_free,
+                    max_extraction_iters=m)
+    run = build_msc_parallel_flat(mesh, cfg, relayout=relayout)
+    tensor = jax.ShapeDtypeStruct((m, m, m), jnp.float32)
+    return run.lower(tensor), cfg
+
+
+def msc_model_flops(m: int, power_iters: int, matrix_free: bool) -> float:
+    """Useful FLOPs of one MSC run on an m³ tensor (3 modes).
+
+    matrix-free: per mode, m slices × iters × two m×m matvecs (4m² flops)
+    + the m×m similarity row-sums (2m³).  gram: + the one-time m×m×m gram
+    per slice (2m³ each) with cheap m×m matvec iterations."""
+    if matrix_free:
+        return 3.0 * (m * power_iters * 4.0 * m * m + 2.0 * m**3)
+    return 3.0 * (m * 2.0 * m**3 + m * power_iters * 2.0 * m * m + 2.0 * m**3)
+
+
+def run_cell(arch: str, shape: ShapeConfig, *, multi_pod: bool,
+             out_dir: str, save_hlo: bool = False,
+             variant: str = "", lower_fn=None) -> RooflineReport:
+    from repro.configs import ALIASES
+
+    arch = ALIASES.get(arch, arch).replace("-", "_").replace(".", "_")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mname = mesh_name(mesh)
+    t0 = time.time()
+    lowered, cfg = (lower_fn or lower_cell)(arch, shape, mesh)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    mem = compiled.memory_analysis()
+    print(f"--- {arch} {shape.name} mesh={mname} "
+          f"(lower {t1-t0:.1f}s, compile {t2-t1:.1f}s)")
+    print(f"    memory_analysis: args={mem.argument_size_in_bytes/2**30:.3f}GiB "
+          f"temp={mem.temp_size_in_bytes/2**30:.3f}GiB "
+          f"out={mem.output_size_in_bytes/2**30:.3f}GiB  per device "
+          f"(HBM {V5E.hbm_bytes/2**30:.0f}GiB)")
+    cost = compiled.cost_analysis()
+    print(f"    cost_analysis:   flops={cost.get('flops', 0):.3e} "
+          f"bytes={cost.get('bytes accessed', 0):.3e}  "
+          f"(per device, while-bodies counted once)")
+
+    mf = model_flops(cfg, shape, shape.kind)
+    hlo_text = compiled.as_text()
+    rep = report_from_compiled(
+        compiled, arch=arch + variant, shape_name=shape.name, mesh_name=mname,
+        chips=mesh_chips(mesh), model_fl=mf, hlo_text=hlo_text)
+    # in-flight HBM: params+opt state+temps must fit.  Output aliases the
+    # donated input state, so it is not additional.  Use the TPU-adjusted
+    # temp (minus XLA:CPU bf16-legalization twins) when detected.
+    temp = rep.memory_stats.get("tpu_temp_estimate",
+                                mem.temp_size_in_bytes)
+    fits = (mem.argument_size_in_bytes + temp) <= V5E.hbm_bytes
+    rep.note = (rep.note + (" " if rep.note else "")
+                + ("fits-hbm" if fits else "EXCEEDS-HBM")
+                + (f" tpu-temp={temp/2**30:.2f}GiB"
+                   if "tpu_temp_estimate" in rep.memory_stats else ""))
+    print("    " + rep.summary())
+
+    cell = f"{arch}{variant}_{shape.name}_{mname}"
+    save_report(rep, os.path.join(out_dir, cell + ".json"))
+    if save_hlo:
+        with open(os.path.join(out_dir, cell + ".hlo.txt"), "w") as f:
+            f.write(hlo_text)
+    return rep
+
+
+def run_msc_cell(m: int, *, multi_pod: bool, out_dir: str,
+                 matrix_free: bool = True, power_iters: int = 60,
+                 relayout: str = "gspmd",
+                 save_hlo: bool = False) -> RooflineReport:
+    variant = ("mf" if matrix_free else "gram") \
+        + ("-coll" if relayout == "collective" else "")
+    shape = ShapeConfig(f"msc_{m}", m, 1, "msc")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mname = mesh_name(mesh)
+    t0 = time.time()
+    lowered, _ = lower_msc(m, mesh, matrix_free=matrix_free,
+                           power_iters=power_iters, relayout=relayout)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    mem = compiled.memory_analysis()
+    print(f"--- msc-{variant} m={m} mesh={mname} "
+          f"(lower {t1-t0:.1f}s, compile {t2-t1:.1f}s)")
+    print(f"    memory_analysis: args={mem.argument_size_in_bytes/2**30:.3f}GiB "
+          f"temp={mem.temp_size_in_bytes/2**30:.3f}GiB")
+    mf = msc_model_flops(m, power_iters, matrix_free)
+    hlo_text = compiled.as_text()
+    rep = report_from_compiled(
+        compiled, arch=f"msc-{variant}", shape_name=shape.name,
+        mesh_name=mname, chips=mesh_chips(mesh), model_fl=mf,
+        hlo_text=hlo_text)
+    print("    " + rep.summary())
+    cell = f"msc-{variant}_{m}_{mname}"
+    save_report(rep, os.path.join(out_dir, cell + ".json"))
+    if save_hlo:
+        with open(os.path.join(out_dir, cell + ".hlo.txt"), "w") as f:
+            f.write(hlo_text)
+    return rep
+
+
+def main(argv: Optional[list] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", help="architecture id (see repro.configs)")
+    ap.add_argument("--shape", help="shape cell name (train_4k, ...)")
+    ap.add_argument("--all", action="store_true",
+                    help="every (arch × applicable shape)")
+    ap.add_argument("--msc", type=int, nargs="*",
+                    help="MSC dry-run tensor sizes (cube m)")
+    ap.add_argument("--msc-gram", action="store_true",
+                    help="also run the paper-faithful gram variant")
+    ap.add_argument("--msc-collective", action="store_true",
+                    help="also run the explicit-all_to_all relayout variant")
+    ap.add_argument("--pods", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    pods = {"single": (False,), "multi": (True,),
+            "both": (False, True)}[args.pods]
+
+    cells = []
+    if args.all:
+        for arch in ARCH_NAMES:
+            for shape in shapes_for(get_config(arch)):
+                cells.append((arch, shape))
+    elif args.arch:
+        shape = SHAPES_BY_NAME[args.shape or "train_4k"]
+        cells.append((args.arch, shape))
+
+    failures = []
+    reports = []
+    for multi_pod in pods:
+        for arch, shape in cells:
+            try:
+                reports.append(run_cell(arch, shape, multi_pod=multi_pod,
+                                        out_dir=args.out_dir,
+                                        save_hlo=args.save_hlo))
+            except Exception as e:  # a failing cell is a bug in the system
+                failures.append((arch, shape.name, multi_pod, repr(e)))
+                traceback.print_exc()
+        for m in (args.msc or []):
+            variants = [dict(matrix_free=True, relayout="gspmd")]
+            if args.msc_gram:
+                variants.append(dict(matrix_free=False, relayout="gspmd"))
+            if args.msc_collective:
+                variants.append(dict(matrix_free=True,
+                                     relayout="collective"))
+                if args.msc_gram:
+                    variants.append(dict(matrix_free=False,
+                                         relayout="collective"))
+            for kw in variants:
+                try:
+                    reports.append(run_msc_cell(
+                        m, multi_pod=multi_pod, out_dir=args.out_dir,
+                        save_hlo=args.save_hlo, **kw))
+                except Exception as e:
+                    failures.append(("msc", str(m), multi_pod, repr(e)))
+                    traceback.print_exc()
+
+    print(f"\n=== dry-run complete: {len(reports)} cells ok, "
+          f"{len(failures)} failed ===")
+    for f in failures:
+        print("FAILED:", f)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,54 @@
+"""Production meshes.
+
+Functions, not module-level constants: importing this module never
+touches jax device state.  The dry-run (launch/dryrun.py) sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import so these meshes can be built with placeholder devices; everything
+else (smoke tests, benches, examples) sees the real device count and uses
+`make_local_mesh` / `core.parallel.make_msc_mesh`.
+
+Topology (TPU v5e target): one pod = 16×16 = 256 chips; multi-pod adds a
+leading "pod"=2 axis (512 chips).  Axis roles:
+  pod   — data parallelism across pods (slowest links: DCN/optical)
+  data  — data parallelism / FSDP within a pod
+  model — tensor parallelism (fastest: ICI neighbors)
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for the production mesh, have {len(devices)} "
+            f"(the dry-run must set XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count=512 before importing jax)")
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_local_mesh(model_axis: int = 1) -> Mesh:
+    """(data, model) mesh over whatever devices exist (examples, tests)."""
+    devices = jax.devices()
+    n = len(devices)
+    model_axis = max(1, min(model_axis, n))
+    while n % model_axis:
+        model_axis -= 1
+    return Mesh(np.asarray(devices).reshape(n // model_axis, model_axis),
+                ("data", "model"))
+
+
+def mesh_name(mesh: Mesh) -> str:
+    return "x".join(str(mesh.shape[a]) for a in mesh.axis_names)
+
+
+def chips(mesh: Mesh) -> int:
+    return math.prod(mesh.shape.values())

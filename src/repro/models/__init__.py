@@ -1,0 +1,6 @@
+from .config import (ALL_SHAPES, SHAPES_BY_NAME, ModelConfig, ShapeConfig,
+                     shapes_for)
+from .transformer import (Model, build_model, cache_shapes, forward,
+                          init_cache, lm_loss, model_defs)
+from .params import (ParamDef, abstract_params, count_params, init_params,
+                     map_defs, stack_defs)

@@ -1,0 +1,80 @@
+"""Declarative parameter construction: one definition, three views.
+
+Every model parameter is declared once as a `ParamDef` (shape + logical
+axis names + init).  From the same tree of defs we derive:
+
+  * `init_params`      — materialized fp32 weights (smoke tests, examples)
+  * `abstract_params`  — ShapeDtypeStructs (dry-run lowering, no allocation)
+  * `param_specs`      — PartitionSpecs via the logical-axis rules in
+                         repro.sharding (dry-run + real deployment)
+
+keeping weights, shapes and shardings impossible to drift apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]  # logical axis name per dim
+    init: str = "normal"                # normal | zeros | ones
+    scale: Optional[float] = None       # stddev; None → 1/sqrt(fan_in)
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def _fan_in(shape) -> int:
+    return shape[0] if len(shape) == 1 else math.prod(shape[:-1])
+
+
+def _init_one(key, d: ParamDef):
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    scale = d.scale if d.scale is not None else 1.0 / math.sqrt(max(_fan_in(d.shape), 1))
+    return (jax.random.normal(key, d.shape, jnp.float32) * scale).astype(d.dtype)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(defs, key: jax.Array):
+    """Materialize a pytree of ParamDefs into fp32 arrays."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(k, d) for k, d in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(defs):
+    """ShapeDtypeStruct view (for jit(...).lower without allocation)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs, is_leaf=is_def)
+
+
+def map_defs(fn: Callable[[ParamDef], Any], defs):
+    return jax.tree.map(fn, defs, is_leaf=is_def)
+
+
+def stack_defs(defs, n: int, axis_name: str = "layers"):
+    """Prepend a stacked 'layers' dim to every def (scan-over-layers)."""
+    return map_defs(
+        lambda d: dataclasses.replace(
+            d, shape=(n,) + d.shape, logical=(axis_name,) + d.logical),
+        defs)
+
+
+def count_params(defs) -> int:
+    leaves, _ = jax.tree.flatten(defs, is_leaf=is_def)
+    return sum(math.prod(d.shape) for d in leaves)

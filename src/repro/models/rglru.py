@@ -1,0 +1,98 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Gated diagonal linear recurrence
+    r_t = σ(W_a x_t + b_a)          (recurrence gate)
+    i_t = σ(W_i x_t + b_i)          (input gate)
+    log a_t = −c · r_t · softplus(Λ)            (c = 8)
+    h_t = a_t ⊙ h_{t−1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Training path: jax.lax.associative_scan over the sequence (parallel
+prefix — log-depth on TPU).  Decode path: one recurrence step per token
+over a (B, rnn_width) state.
+
+Block structure (Griffin recurrent block): two branches from the input —
+GeLU gate branch and conv1d→RG-LRU branch — merged multiplicatively and
+projected back to d_model.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .params import ParamDef
+from .ssm import _causal_conv
+
+_C = 8.0
+
+
+def rglru_defs(cfg: ModelConfig):
+    d, w = cfg.d_model, cfg.rnn_width
+    return {
+        "w_gate": ParamDef((d, w), ("embed", "rnn")),
+        "w_x": ParamDef((d, w), ("embed", "rnn")),
+        "conv_w": ParamDef((cfg.conv_width, w), ("conv", "rnn"), scale=0.5),
+        "conv_b": ParamDef((w,), ("rnn",), init="zeros"),
+        "w_a": ParamDef((w, w), ("rnn", "rnn"), scale=0.01),
+        "b_a": ParamDef((w,), ("rnn",), init="zeros"),
+        "w_i": ParamDef((w, w), ("rnn", "rnn"), scale=0.01),
+        "b_i": ParamDef((w,), ("rnn",), init="zeros"),
+        "lam": ParamDef((w,), ("rnn",), init="ones"),
+        "w_out": ParamDef((w, d), ("rnn", "embed")),
+    }
+
+
+def _gates(p, xr):
+    """a_t (log-space pieces) and gated input.  xr: (B,S,W) fp32."""
+    r = jax.nn.sigmoid(xr @ p["w_a"].astype(jnp.float32)
+                       + p["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xr @ p["w_i"].astype(jnp.float32)
+                       + p["b_i"].astype(jnp.float32))
+    log_a = -_C * r * jax.nn.softplus(p["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xr)
+    return a, gated
+
+
+def rglru_cache_shape(cfg: ModelConfig, batch: int):
+    """Decode cache: (conv_state (B,W−1,rnn), h_state (B,rnn))."""
+    return ((batch, cfg.conv_width - 1, cfg.rnn_width),
+            (batch, cfg.rnn_width))
+
+
+def rglru_block(p, x, cfg: ModelConfig, cache: Tuple = None):
+    """x: (B,S,D) → ((B,S,D), new_cache).  cache=None → train (assoc scan)."""
+    cd = cfg.cdtype
+    gate = jax.nn.gelu(x @ p["w_gate"].astype(cd))
+    xr = x @ p["w_x"].astype(cd)
+    conv_state = None if cache is None else cache[0]
+    xr, conv_state = _causal_conv(xr, p["conv_w"].astype(cd),
+                                  p["conv_b"].astype(cd), conv_state)
+    a, b = _gates(p, xr.astype(jnp.float32))
+
+    if cache is None:
+        # h_t = a_t h_{t-1} + b_t as an associative scan on (a, b) pairs
+        def combine(lhs, rhs):
+            a1, b1 = lhs
+            a2, b2 = rhs
+            return a2 * a1, a2 * b1 + b2
+
+        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+        new_cache = None
+    else:
+        h_state = cache[1].astype(jnp.float32)
+
+        def step(hs, inp):
+            a_t, b_t = inp
+            hs = a_t * hs + b_t
+            return hs, hs
+
+        h_state, hh = jax.lax.scan(
+            step, h_state, (jnp.moveaxis(a, 1, 0), jnp.moveaxis(b, 1, 0)))
+        h = jnp.moveaxis(hh, 0, 1)
+        new_cache = (conv_state, h_state)
+
+    y = (gate.astype(jnp.float32) * h).astype(cd) @ p["w_out"].astype(cd)
+    return y, new_cache

@@ -1,0 +1,411 @@
+"""Model assembly for all 10 architecture families.
+
+One `Model` facade per ModelConfig provides:
+  defs()            — declarative param tree (ParamDef leaves)
+  init / abstract   — materialized or ShapeDtypeStruct params
+  loss_fn           — train forward + chunked xent (scalar loss, aux)
+  prefill / decode  — serving paths with per-family caches
+
+Layer stacking: layers are grouped into *super-blocks* of the config's
+pattern period (dense: 1, gemma2 local/global: 2, recurrentgemma
+rglru/rglru/local: 3).  Full super-blocks are stacked and driven by
+`lax.scan` (one trace regardless of depth — essential for the 95-layer
+dry-run compiles); leftover layers (26 = 8·3 + 2) run unrolled.  Each
+super-block is rematerialized in training when cfg.remat.
+
+Caches are pytrees stacked exactly like the scanned params, so decode
+scans carry (params, cache) together and emit the updated cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .params import ParamDef, abstract_params, init_params, map_defs, stack_defs
+from . import layers as L
+from . import rglru as R
+from . import ssm as S
+from repro.sharding.activation import constrain
+
+
+# ------------------------------------------------------------- defs ----
+def _block_defs(cfg: ModelConfig, kind: str, cross: bool = False):
+    if kind == "ssm":
+        return {"ln1": L.rmsnorm_defs(cfg.d_model), "ssm": S.ssm_defs(cfg)}
+    if kind == "rglru":
+        return {"ln1": L.rmsnorm_defs(cfg.d_model), "rnn": R.rglru_defs(cfg),
+                "ln2": L.rmsnorm_defs(cfg.d_model), "mlp": L.mlp_defs(cfg)}
+    d: Dict[str, Any] = {
+        "ln1": L.rmsnorm_defs(cfg.d_model),
+        "attn": L.attention_defs(cfg),
+        "ln2": L.rmsnorm_defs(cfg.d_model),
+    }
+    if cross:
+        d["lnx"] = L.rmsnorm_defs(cfg.d_model)
+        d["xattn"] = L.attention_defs(cfg)
+    if cfg.n_experts and kind in ("attn", "global", "local"):
+        d["moe"] = L.moe_defs(cfg)
+    else:
+        d["mlp"] = L.mlp_defs(cfg)
+    return d
+
+
+def _pattern(cfg: ModelConfig) -> Tuple[Tuple[str, ...], int, int]:
+    """(period kinds, n_scan_superblocks, n_leftover_layers)."""
+    kinds = cfg.layer_kinds()
+    period = 1
+    if cfg.block_pattern:
+        period = len(cfg.block_pattern)
+    elif cfg.global_every:
+        period = cfg.global_every
+    if not cfg.scan_layers:
+        return kinds, 0, cfg.n_layers
+    n_scan = cfg.n_layers // period
+    return kinds, n_scan, cfg.n_layers - n_scan * period
+
+
+def _period(cfg: ModelConfig) -> int:
+    return len(cfg.block_pattern) or cfg.global_every or 1
+
+
+def model_defs(cfg: ModelConfig):
+    kinds, n_scan, n_rest = _pattern(cfg)
+    period = _period(cfg)
+    cross = cfg.is_encdec
+    defs: Dict[str, Any] = {
+        "embed": ParamDef((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                          scale=0.02),
+        "final_norm": L.rmsnorm_defs(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((cfg.d_model, cfg.vocab_size),
+                                   ("embed", "vocab"))
+    if n_scan:
+        sb = {f"k{j}": _block_defs(cfg, kinds[j], cross)
+              for j in range(period)}
+        defs["layers"] = stack_defs(sb, n_scan)
+    if n_rest:
+        defs["tail"] = tuple(
+            _block_defs(cfg, kinds[n_scan * period + j], cross)
+            for j in range(n_rest))
+    if cfg.is_encdec:
+        enc_kinds = ("attn",) * cfg.n_enc_layers
+        defs["enc_layers"] = stack_defs(_block_defs(cfg, "attn"),
+                                        cfg.n_enc_layers)
+        defs["enc_norm"] = L.rmsnorm_defs(cfg.d_model)
+        defs["enc_pos"] = ParamDef((cfg.enc_context, cfg.d_model),
+                                   ("enc", "embed"), scale=0.02)
+    return defs
+
+
+# ------------------------------------------------------------ caches ----
+def _block_cache_shapes(cfg: ModelConfig, kind: str, batch: int,
+                        max_len: int, cross: bool):
+    k, dh = cfg.n_kv_heads, cfg.head_dim
+    cd = jnp.dtype(cfg.compute_dtype)
+    if kind == "ssm":
+        conv, st = S.ssm_cache_shape(cfg, batch)
+        return {"ssm": (jax.ShapeDtypeStruct(conv, jnp.float32),
+                        jax.ShapeDtypeStruct(st, jnp.float32))}
+    if kind == "rglru":
+        conv, h = R.rglru_cache_shape(cfg, batch)
+        return {"rnn": (jax.ShapeDtypeStruct(conv, jnp.float32),
+                        jax.ShapeDtypeStruct(h, jnp.float32))}
+    # sliding-window layers keep a ring buffer of exactly `window` slots
+    # (slot = pos % W — models/layers.py); full-attention layers keep the
+    # full-length buffer.  Before this, gemma2-27b decode_32k allocated
+    # 18.3 GiB/device (23 local layers × 32k KV each for a 4k window) and
+    # recurrentgemma long_500k kept 512k buffers for a 2k window (§Perf).
+    length = max_len
+    if kind == "local" and cfg.local_window and cfg.local_window < max_len:
+        length = cfg.local_window
+    d = {"attn": (jax.ShapeDtypeStruct((batch, length, k, dh), cd),
+                  jax.ShapeDtypeStruct((batch, length, k, dh), cd))}
+    if cross:
+        d["xattn"] = (jax.ShapeDtypeStruct((batch, cfg.enc_context, k, dh), cd),
+                      jax.ShapeDtypeStruct((batch, cfg.enc_context, k, dh), cd))
+    return d
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_len: int):
+    """Abstract cache pytree mirroring the layer structure."""
+    kinds, n_scan, n_rest = _pattern(cfg)
+    period = len(cfg.block_pattern) or cfg.global_every or 1
+    cross = cfg.is_encdec
+    out: Dict[str, Any] = {}
+    if n_scan:
+        sb = {f"k{j}": _block_cache_shapes(cfg, kinds[j], batch, max_len, cross)
+              for j in range(period)}
+        out["layers"] = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n_scan,) + s.shape, s.dtype), sb)
+    if n_rest:
+        out["tail"] = tuple(
+            _block_cache_shapes(cfg, kinds[n_scan * period + j], batch,
+                                max_len, cross)
+            for j in range(n_rest))
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_shapes(cfg, batch, max_len))
+
+
+# ----------------------------------------------------------- blocks ----
+def _apply_block(p, x, cfg: ModelConfig, kind: str, *, cache=None,
+                 cache_len=None, enc_out=None, pos_offset=0, causal=True):
+    """One residual block.  Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = dict(cache) if cache is not None else None
+    if kind == "ssm":
+        h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        if cache is None:
+            y = S.ssd_train(p["ssm"], h, cfg)
+        else:
+            y, new_cache["ssm"] = S.ssd_decode(p["ssm"], h, cache["ssm"], cfg)
+        return x + y, new_cache, aux
+    if kind == "rglru":
+        h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        y, rc = R.rglru_block(p["rnn"], h, cfg,
+                              cache["rnn"] if cache is not None else None)
+        if cache is not None:
+            new_cache["rnn"] = rc
+        x = x + y
+        h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        return x + L.mlp(p["mlp"], h, cfg), new_cache, aux
+
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    y, kvc = L.attention(
+        p["attn"], h, cfg, kind=kind, pos_offset=pos_offset,
+        kv_cache=cache["attn"] if cache is not None else None,
+        cache_len=cache_len, causal=causal)
+    if cache is not None:
+        new_cache["attn"] = kvc
+    x = x + y
+    if "xattn" in p:
+        h = L.rmsnorm(p["lnx"], x, cfg.norm_eps)
+        if enc_out is not None:
+            # train / prefill: project encoder output; prefill caches it
+            y, xkv = L.attention(p["xattn"], h, cfg, kv_source=enc_out,
+                                 causal=False)
+            if cache is not None:
+                new_cache["xattn"] = xkv
+        else:
+            # decode: attend read-only over the cached encoder projections
+            y, _ = L.attention(p["xattn"], h, cfg,
+                               static_kv=cache["xattn"], causal=False)
+        x = x + y
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if "moe" in p:
+        y, aux = L.moe(p["moe"], h, cfg)
+    else:
+        y = L.mlp(p["mlp"], h, cfg)
+    return x + y, new_cache, aux
+
+
+def _superblock(p_sb, x, cfg, kinds_period, *, cache=None, cache_len=None,
+                enc_out=None, pos_offset=0):
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = {} if cache is not None else None
+    for j, kind in enumerate(kinds_period):
+        key = f"k{j}"
+        c = cache[key] if cache is not None else None
+        x, nc, a = _apply_block(p_sb[key], x, cfg, kind, cache=c,
+                                cache_len=cache_len, enc_out=enc_out,
+                                pos_offset=pos_offset)
+        if cache is not None:
+            new_cache[key] = nc
+        aux = aux + a
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------- forward ----
+def forward(params, tokens, cfg: ModelConfig, *, prefix_embed=None,
+            enc_frames=None, cache=None, cache_len=None):
+    """Token ids → final hidden states.
+
+    tokens: (B, S) int32.  prefix_embed: (B, P, D) VLM patch stub —
+    replaces the embeddings of the first P positions (prefill/train only).
+    enc_frames: (B, T_enc, D) audio frame stub (whisper) — runs the
+    encoder and cross-attends.  cache/cache_len: decode path.
+    Returns (hidden (B,S,D), new_cache, aux_loss).
+    """
+    kinds, n_scan, n_rest = _pattern(cfg)
+    period = len(cfg.block_pattern) or cfg.global_every or 1
+    cd = cfg.cdtype
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cd)
+    x = constrain(x, ("batch", None, None))
+    if prefix_embed is not None:
+        pfx = prefix_embed.astype(cd)
+        x = jnp.concatenate([pfx, x[:, pfx.shape[1]:]], axis=1)
+
+    enc_out = None
+    if cfg.is_encdec and enc_frames is not None:
+        e = enc_frames.astype(cd) + params["enc_pos"].astype(cd)[None]
+
+        def enc_body(h, p_layer):
+            h, _, _ = _apply_block(p_layer, h, cfg, "attn", causal=False)
+            return h, None
+
+        e, _ = jax.lax.scan(enc_body, e, params["enc_layers"])
+        enc_out = L.rmsnorm(params["enc_norm"], e, cfg.norm_eps)
+
+    pos_offset = 0 if cache_len is None else cache_len
+    aux_total = jnp.zeros((), jnp.float32)
+    kinds_period = tuple(kinds[:period])
+
+    if n_scan:
+        def body(carry, xs):
+            h, auxc = carry
+            p_sb, c_sb = xs
+            h, nc, a = _superblock(p_sb, h, cfg, kinds_period,
+                                   cache=c_sb, cache_len=cache_len,
+                                   enc_out=enc_out, pos_offset=pos_offset)
+            h = constrain(h, ("batch", None, None))
+            return (h, auxc + a), nc
+
+        body_fn = jax.checkpoint(body) if (cfg.remat and cache is None) else body
+        c_stack = cache.get("layers") if cache is not None else None
+        if cache is None:
+            # scan only over params; thread a dummy None-free xs
+            (x, aux_total), _ = jax.lax.scan(
+                lambda carry, p_sb: (body_fn(carry, (p_sb, None))[0], None),
+                (x, aux_total), params["layers"])
+            new_layers_cache = None
+        else:
+            (x, aux_total), new_layers_cache = jax.lax.scan(
+                body_fn, (x, aux_total), (params["layers"], c_stack))
+    else:
+        new_layers_cache = None
+
+    new_tail = []
+    if n_rest:
+        for j in range(n_rest):
+            kind = kinds[n_scan * period + j]
+            c = cache["tail"][j] if cache is not None else None
+            x, nc, a = _apply_block(params["tail"][j], x, cfg, kind,
+                                    cache=c, cache_len=cache_len,
+                                    enc_out=enc_out, pos_offset=pos_offset)
+            x = constrain(x, ("batch", None, None))
+            aux_total = aux_total + a
+            new_tail.append(nc)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    new_cache = None
+    if cache is not None:
+        new_cache = {}
+        if new_layers_cache is not None:
+            new_cache["layers"] = new_layers_cache
+        if n_rest:
+            new_cache["tail"] = tuple(new_tail)
+    return x, new_cache, aux_total
+
+
+# ------------------------------------------------------------- loss ----
+def _head_weight(params, cfg):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def lm_loss(params, hidden, labels, cfg: ModelConfig,
+            mask: Optional[jax.Array] = None):
+    """Chunked softmax-xent: the (B,S,V) logits are never materialized —
+    a lax.scan over seq chunks computes per-chunk logits (B,chunk,V),
+    fp32 log-softmax, and accumulates the NLL sum (V up to 256k makes the
+    full logits tensor the single largest train buffer otherwise)."""
+    b, s, d = hidden.shape
+    chunk = min(cfg.loss_chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    w = _head_weight(params, cfg).astype(cfg.cdtype)
+    hs = jnp.moveaxis(hidden.reshape(b, nc, chunk, d), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(b, nc, chunk), 1, 0)
+    ms = None if mask is None else jnp.moveaxis(mask.reshape(b, nc, chunk), 1, 0)
+
+    def body(acc, inp):
+        h_c, l_c, m_c = inp
+        logits = (h_c @ w).astype(jnp.float32)
+        logits = constrain(logits, ("batch", None, "model"))
+        if cfg.final_softcap:
+            logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, l_c[..., None], axis=-1)[..., 0]
+        nll = lse - gold
+        if m_c is not None:
+            nll = nll * m_c
+            return (acc[0] + nll.sum(), acc[1] + m_c.sum()), None
+        return (acc[0] + nll.sum(), acc[1] + nll.size), None
+
+    # recompute per-chunk logits in the backward instead of saving them:
+    # with an unsharded vocab (whisper 51865 ∤ 16) the saved (B, chunk, V)
+    # f32 stacks measured 13.6 GiB/device on whisper train_4k.
+    body = jax.checkpoint(body)
+    if ms is None:
+        (tot, cnt), _ = jax.lax.scan(
+            lambda a, i: body(a, (*i, None)), (0.0, 0.0), (hs, ls))
+    else:
+        (tot, cnt), _ = jax.lax.scan(body, (0.0, 0.0), (hs, ls, ms))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def logits_last(params, hidden, cfg: ModelConfig):
+    """Decode-time logits for the final position only."""
+    w = _head_weight(params, cfg).astype(cfg.cdtype)
+    logits = (hidden[:, -1] @ w).astype(jnp.float32)
+    if cfg.final_softcap:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits
+
+
+# ------------------------------------------------------------ facade ----
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    def defs(self):
+        return model_defs(self.cfg)
+
+    def init(self, key):
+        return init_params(self.defs(), key)
+
+    def abstract(self):
+        return abstract_params(self.defs())
+
+    # ---- training ----
+    def loss_fn(self, params, batch):
+        """batch: {tokens, labels[, patches | frames]} → (loss, aux)."""
+        hidden, _, aux = forward(
+            params, batch["tokens"], self.cfg,
+            prefix_embed=batch.get("patches"),
+            enc_frames=batch.get("frames"))
+        loss = lm_loss(params, hidden, batch["labels"], self.cfg,
+                       batch.get("loss_mask"))
+        return loss + 0.01 * aux, aux
+
+    # ---- serving ----
+    def prefill(self, params, batch, max_len: int):
+        """Prompt → (next-token logits, warmed cache, n_prefilled)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        cache = init_cache(cfg, tokens.shape[0], max_len)
+        hidden, cache, _ = forward(
+            params, tokens, cfg, cache=cache, cache_len=jnp.int32(0),
+            prefix_embed=batch.get("patches"),
+            enc_frames=batch.get("frames"))
+        return logits_last(params, hidden, cfg), cache
+
+    def decode_step(self, params, tokens, cache, cache_len):
+        """One token per sequence.  tokens: (B, 1) → (logits, new cache)."""
+        hidden, cache, _ = forward(params, tokens, self.cfg, cache=cache,
+                                   cache_len=cache_len)
+        return logits_last(params, hidden, self.cfg), cache
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

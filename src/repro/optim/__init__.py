@@ -1,0 +1,7 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update, global_norm
+from .schedule import cosine_warmup
+from .compression import (
+    CompressionState,
+    compress_init,
+    topk_compress_update,
+)

@@ -1,0 +1,62 @@
+"""Error-feedback top-k gradient compression for the DP all-reduce path.
+
+At 1000+ nodes the DP gradient reduce-scatter dominates step time for
+small models (collective term of the roofline).  Top-k sparsification
+with error feedback (Stich et al., 2018) cuts the exchanged bytes by
+(1 − k/n) while provably preserving SGD convergence: the un-sent residual
+is accumulated locally and re-added next step.
+
+This integrates *before* the psum: each replica sends only its top-k
+magnitudes (dense-masked here — in SPMD the mask keeps the pytree shape
+static; real wire savings come from the sparse collective this models,
+which we account for in the roofline as k/n of the gradient bytes).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressionState(NamedTuple):
+    residual: Any  # error-feedback accumulator, congruent with grads
+
+
+def compress_init(params) -> CompressionState:
+    return CompressionState(residual=jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def _topk_mask(x: jax.Array, frac: float) -> jax.Array:
+    """Boolean mask keeping the top `frac` fraction of |x| entries."""
+    n = x.size
+    k = max(1, int(n * frac))
+    flat = jnp.abs(x.reshape(-1))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(x) >= thresh).astype(x.dtype)
+
+
+def topk_compress_update(grads, state: CompressionState, frac: float = 0.01):
+    """Returns (compressed grads to all-reduce, new state).
+
+    compressed = topk(grad + residual); residual' = (grad + residual) −
+    compressed.  E[‖residual‖] stays bounded (error feedback), so the
+    update direction is asymptotically unbiased.
+    """
+
+    class _Out(NamedTuple):  # distinct type: safe is_leaf vs model tuples
+        sent: Any
+        resid: Any
+
+    def one(g, r):
+        acc = g.astype(jnp.float32) + r
+        mask = _topk_mask(acc, frac)
+        sent = acc * mask
+        return _Out(sent.astype(g.dtype), acc - sent)
+
+    out = jax.tree.map(one, grads, state.residual)
+    leaf = lambda x: isinstance(x, _Out)
+    sent = jax.tree.map(lambda t: t.sent, out, is_leaf=leaf)
+    resid = jax.tree.map(lambda t: t.resid, out, is_leaf=leaf)
+    return sent, CompressionState(residual=resid)

@@ -1,0 +1,20 @@
+"""LR schedules (pure functions of the step counter, jit-safe)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_warmup(peak_lr: float, warmup_steps: int, total_steps: int,
+                  floor_frac: float = 0.1):
+    """Linear warmup → cosine decay to floor_frac·peak."""
+
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = floor_frac * peak_lr + (1 - floor_frac) * peak_lr * 0.5 * (
+            1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return schedule

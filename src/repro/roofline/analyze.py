@@ -1,0 +1,188 @@
+"""Three-term roofline assembly from a compiled dry-run artifact.
+
+Per (arch × shape × mesh) cell:
+
+  compute_s    = HLO_FLOPs_global   / (chips × peak_FLOP/s)
+  memory_s     = HLO_bytes_global   / (chips × HBM_bw)
+  collective_s = collective_bytes_g / (chips × link_bw)
+
+HLO_FLOPs/bytes come from our trip-count-aware HLO analyzer
+(roofline/hlo.py) — ``cost_analysis()`` counts ``while`` bodies once, so
+it is recorded for reference (`xla_cost_analysis`) but the roofline uses
+the executed totals.  collective_bytes follows the assignment definition
+(Σ operand sizes of collective ops); the ring-model per-link bytes are
+recorded alongside as `collective_link_s` since that is what actually
+bounds step time on a 2D torus and is what §Perf hillclimbs against.
+
+MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D (fwd-only), with
+N_active excluding the embedding table (gather, no FLOPs) and inactive
+routed experts; the ratio MODEL_FLOPS/HLO_FLOPs exposes remat/dispatch
+overhead (ratio < 1 ⇒ compiled does extra work: remat recompute, MoE
+dispatch einsums, attention score FLOPs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, Optional
+
+from .hlo import HloAnalysis, analyze
+from .hw import V5E, HwSpec
+
+
+def active_param_count(cfg) -> float:
+    """Non-embedding *active* parameter count, analytic from the config."""
+    from repro.models.params import count_params
+    from repro.models import model_defs
+
+    n_total = count_params(model_defs(cfg))
+    n_active = float(n_total) - cfg.vocab_size * cfg.d_model  # embed gather
+    if cfg.tie_embeddings:
+        n_active += cfg.vocab_size * cfg.d_model  # reused as lm_head matmul
+    if cfg.n_experts and cfg.experts_per_token:
+        inactive = cfg.n_experts - cfg.experts_per_token
+        per_layer = 3 * inactive * cfg.d_model * cfg.d_expert
+        n_active -= cfg.n_layers * per_layer
+    return n_active
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    """6·N_active·D for training, 2·N_active·D forward-only."""
+    n_act = active_param_count(cfg)
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * tokens
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_act * tokens
+    # decode: one token per sequence
+    return 2.0 * n_act * shape.global_batch
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float          # assignment formula (operand bytes)
+    collective_link_s: float     # ring model per-link bytes
+    dominant: str
+    model_flops: float
+    hlo_flops_global: float
+    flops_ratio: float           # MODEL_FLOPS / HLO_FLOPs
+    bytes_per_device: float
+    collective_bytes_global: float
+    collectives_by_kind: Dict
+    unknown_trip_counts: int
+    xla_cost_analysis: Dict
+    memory_stats: Dict
+    note: str = ""
+
+    @property
+    def bound_s(self) -> float:
+        """No-overlap step-time lower bound."""
+        return max(self.compute_s, self.memory_s, self.collective_link_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """compute_s / bound_s: 1.0 ⇔ the cell is compute-bound (at the
+        roofline); < 1 ⇔ memory or collectives dominate."""
+        b = self.bound_s
+        return self.compute_s / b if b > 0 else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Upper bound on MFU: useful model FLOPs over peak×bound time."""
+        denom = self.chips * V5E.peak_flops_bf16 * self.bound_s
+        return self.model_flops / denom if denom > 0 else 0.0
+
+    def to_json(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["bound_s"] = self.bound_s
+        d["roofline_fraction"] = self.roofline_fraction
+        d["mfu_bound"] = self.mfu_bound
+        return d
+
+    def summary(self) -> str:
+        return (f"{self.arch:22s} {self.shape:12s} {self.mesh:10s} "
+                f"comp={self.compute_s*1e3:9.3f}ms "
+                f"mem={self.memory_s*1e3:9.3f}ms "
+                f"coll={self.collective_link_s*1e3:9.3f}ms "
+                f"dom={self.dominant:10s} "
+                f"ratio={self.flops_ratio:6.3f} "
+                f"roofline={self.roofline_fraction:5.1%}")
+
+
+def _memory_stats_dict(compiled) -> Dict:
+    try:
+        ms = compiled.memory_analysis()
+        return {k: getattr(ms, k) for k in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")}
+    except Exception:
+        return {}
+
+
+def report_from_compiled(compiled, *, arch: str, shape_name: str,
+                         mesh_name: str, chips: int,
+                         model_fl: float, hw: HwSpec = V5E,
+                         hlo_text: Optional[str] = None,
+                         note: str = "") -> RooflineReport:
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    an: HloAnalysis = analyze(text)
+    # per-device → global
+    n = max(an.num_partitions, 1)
+    flops_g = an.flops_per_device * n
+    bytes_pd = an.traffic_bytes_per_device
+    coll_g = an.collective_operand_bytes * n
+
+    compute_s = flops_g / (chips * hw.peak_flops_bf16)
+    memory_s = bytes_pd / hw.hbm_bw            # = bytes_g / (chips × bw)
+    collective_s = coll_g / (chips * hw.ici_bw)
+    collective_link_s = an.collective_link_bytes / hw.ici_bw
+
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_link_s}
+    dominant = max(terms, key=terms.get)
+
+    try:
+        cost = {k: float(v) for k, v in compiled.cost_analysis().items()
+                if isinstance(v, (int, float))}
+    except Exception:
+        cost = {}
+
+    mem_stats = _memory_stats_dict(compiled)
+    if an.upcast_hoist_bytes and "temp_size_in_bytes" in mem_stats:
+        # XLA:CPU bf16→f32 legalization artifact (see roofline/hlo.py):
+        # the hoisted f32 twins of bf16 remat stacks don't exist on TPU.
+        mem_stats["upcast_hoist_bytes"] = an.upcast_hoist_bytes
+        mem_stats["tpu_temp_estimate"] = max(
+            0.0, mem_stats["temp_size_in_bytes"] - an.upcast_hoist_bytes)
+
+    return RooflineReport(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        compute_s=compute_s, memory_s=memory_s,
+        collective_s=collective_s, collective_link_s=collective_link_s,
+        dominant=dominant, model_flops=model_fl,
+        hlo_flops_global=flops_g,
+        flops_ratio=(model_fl / flops_g) if flops_g else 0.0,
+        bytes_per_device=bytes_pd,
+        collective_bytes_global=coll_g,
+        collectives_by_kind=an.by_kind(),
+        unknown_trip_counts=an.unknown_trip_counts,
+        xla_cost_analysis=cost,
+        memory_stats=mem_stats,
+        note=note,
+    )
+
+
+def save_report(report: RooflineReport, path: str):
+    import os
+
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(report.to_json(), f, indent=2, default=str)

@@ -1,0 +1,532 @@
+"""Trip-count-aware HLO text analyzer.
+
+Why this exists: ``compiled.cost_analysis()`` visits each ``while`` body
+**once** — for a model whose layers run under ``lax.scan`` (all of ours)
+it under-reports FLOPs and bytes by the layer count (verified empirically:
+a 12-step scanned matmul reports 1 step's flops).  The roofline needs the
+executed totals, so we parse ``compiled.as_text()`` ourselves:
+
+  * computations + per-instruction symbol tables (operand shape lookup),
+  * a call graph (fusion `calls=`, `while` condition/body, `call`,
+    `conditional` branches) with multipliers — `while` trip counts come
+    from `backend_config={"known_trip_count":{"n":..}}` (emitted for all
+    `lax.scan`-derived loops) with a compare-against-constant fallback,
+  * FLOPs from `dot` / `convolution` instructions (2·|out|·K),
+  * HBM traffic as Σ (operand bytes + output bytes) over the *top-level*
+    instructions of non-fusion computations — the standard post-fusion
+    traffic model (each fusion reads its params once, writes its output),
+  * collective instructions with operand/output bytes, group size (from
+    `replica_groups`), and a ring-model per-link byte estimate.
+
+Shapes in the compiled module are the per-device (post-SPMD) shards, so
+all totals are *per device*; multiply by `num_partitions` (parsed from the
+module header) for global numbers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "u1": 1, "s1": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+)
+
+
+def shape_bytes(shape_str: str) -> float:
+    """Total bytes of a shape string (handles tuples by summing parts)."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_elems(shape_str: str) -> int:
+    n_total = 0
+    for _, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        n_total += n
+    return n_total
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    shape: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction] = dataclasses.field(default_factory=list)
+    symtab: Dict[str, str] = dataclasses.field(default_factory=dict)  # %name -> shape
+
+
+@dataclasses.dataclass
+class CollectiveStat:
+    kind: str
+    operand_bytes: float
+    output_bytes: float
+    group_size: int
+    count: float           # executed count (trip-multiplied)
+    computation: str
+
+    @property
+    def link_bytes(self) -> float:
+        """Ring-model per-device link traffic for ONE execution."""
+        g = max(self.group_size, 1)
+        if g == 1:
+            return 0.0
+        f = (g - 1) / g
+        if self.kind.startswith("all-reduce"):
+            return 2.0 * self.operand_bytes * f
+        if self.kind.startswith("all-gather"):
+            return self.output_bytes * f
+        if self.kind.startswith("reduce-scatter"):
+            return self.operand_bytes * f
+        if self.kind.startswith("all-to-all"):
+            return self.operand_bytes * f
+        if self.kind.startswith("collective-permute"):
+            return self.operand_bytes
+        if self.kind.startswith("collective-broadcast"):
+            return self.output_bytes
+        return self.operand_bytes
+
+
+@dataclasses.dataclass
+class HloAnalysis:
+    num_partitions: int
+    flops_per_device: float          # executed, trip-count aware
+    traffic_bytes_per_device: float  # HBM traffic model, trip-count aware
+    collective_operand_bytes: float  # per device, Σ operand sizes × count
+    collective_output_bytes: float
+    collective_link_bytes: float     # per device, ring model × count
+    collectives: List[CollectiveStat]
+    unknown_trip_counts: int
+    flops_unscaled: float            # body-once (≈ cost_analysis view)
+    # XLA:CPU legalizes bf16 dots to f32 and hoists whole-buffer
+    # bf16→f32 converts of loop-invariant remat stacks out of the
+    # backward loop; these f32 twins don't exist on TPU (native bf16
+    # MXU).  Σ output bytes of such large hoisted upcasts — subtract
+    # from `temp` for a TPU-adjusted memory estimate.
+    upcast_hoist_bytes: float = 0.0
+
+    def by_kind(self) -> Dict[str, Dict[str, float]]:
+        out: Dict[str, Dict[str, float]] = {}
+        for c in self.collectives:
+            k = c.kind.replace("-start", "")
+            d = out.setdefault(k, {"count": 0.0, "operand_bytes": 0.0,
+                                   "output_bytes": 0.0, "link_bytes": 0.0})
+            d["count"] += c.count
+            d["operand_bytes"] += c.operand_bytes * c.count
+            d["output_bytes"] += c.output_bytes * c.count
+            d["link_bytes"] += c.link_bytes * c.count
+        return out
+
+    def to_json(self) -> Dict:
+        return {
+            "num_partitions": self.num_partitions,
+            "flops_per_device": self.flops_per_device,
+            "flops_unscaled": self.flops_unscaled,
+            "traffic_bytes_per_device": self.traffic_bytes_per_device,
+            "collective_operand_bytes": self.collective_operand_bytes,
+            "collective_output_bytes": self.collective_output_bytes,
+            "collective_link_bytes": self.collective_link_bytes,
+            "unknown_trip_counts": self.unknown_trip_counts,
+            "upcast_hoist_bytes": self.upcast_hoist_bytes,
+            "collectives_by_kind": self.by_kind(),
+        }
+
+
+# --------------------------------------------------------------- parse ----
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+_INSTR_RE = re.compile(r"^\s+(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+
+
+def _split_shape(rhs: str) -> Tuple[str, str]:
+    """rhs = '<shape> <opcode>(...)...' → (shape, rest).  Shape may be a
+    parenthesised tuple."""
+    rhs = rhs.strip()
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return rhs[: i + 1], rhs[i + 1:].strip()
+    i = rhs.find(" ")
+    return rhs[:i], rhs[i + 1:].strip()
+
+
+def _parse_call(rest: str) -> Tuple[str, str, str]:
+    """'opcode(args), attrs' → (opcode, args, attrs)."""
+    i = rest.find("(")
+    opcode = rest[:i].strip()
+    depth = 0
+    for j in range(i, len(rest)):
+        if rest[j] == "(":
+            depth += 1
+        elif rest[j] == ")":
+            depth -= 1
+            if depth == 0:
+                return opcode, rest[i + 1: j], rest[j + 1:]
+    return opcode, rest[i + 1:], ""
+
+
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], str, int]:
+    """→ (computations, entry_name, num_partitions)."""
+    comps: Dict[str, Computation] = {}
+    entry = ""
+    num_partitions = 1
+    m = re.search(r"num_partitions=(\d+)", text)
+    if m:
+        num_partitions = int(m.group(1))
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            cm = _COMP_RE.match(line)
+            if cm:
+                cur = Computation(name=cm.group(2))
+                comps[cur.name] = cur
+                if cm.group(1):
+                    entry = cur.name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        im = _INSTR_RE.match(line)
+        if not im:
+            continue
+        name, rhs = im.group(1), im.group(2)
+        try:
+            shape, rest = _split_shape(rhs)
+            opcode, args, attrs = _parse_call(rest)
+        except Exception:
+            continue
+        operands = _OPERAND_RE.findall(args)
+        cur.symtab[name] = shape
+        cur.instructions.append(
+            Instruction(name, shape, opcode, operands, attrs, line))
+    return comps, entry, num_partitions
+
+
+# -------------------------------------------------------------- per-op ----
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"?(\d+)"?\}')
+_RG_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_RG_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TF_RE = re.compile(r"(?:true|false)_computation=%?([\w.\-]+)")
+_DIMLBL_RE = re.compile(r"dim_labels=([\w?]+)_([\w?]+)->([\w?]+)")
+_FGC_RE = re.compile(r"feature_group_count=(\d+)")
+
+
+def _dims_of(shape: str) -> List[int]:
+    m = _SHAPE_RE.search(shape)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+def _dot_flops(ins: Instruction, comp: Computation) -> float:
+    out_elems = shape_elems(ins.shape)
+    k = 1
+    cm = _CONTRACT_RE.search(ins.attrs)
+    if cm and ins.operands:
+        lhs_shape = comp.symtab.get(ins.operands[0], "")
+        dims = _dims_of(lhs_shape)
+        idxs = [int(x) for x in cm.group(1).split(",") if x != ""]
+        for i in idxs:
+            if i < len(dims):
+                k *= dims[i]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(ins: Instruction, comp: Computation) -> float:
+    out_elems = shape_elems(ins.shape)
+    if len(ins.operands) < 2:
+        return 2.0 * out_elems
+    kshape = _dims_of(comp.symtab.get(ins.operands[1], ""))
+    if not kshape:
+        return 2.0 * out_elems
+    kelems = math.prod(kshape)
+    out_ch = 1
+    dm = _DIMLBL_RE.search(ins.attrs)
+    if dm:
+        klabels = dm.group(2)
+        if "o" in klabels and klabels.index("o") < len(kshape):
+            out_ch = kshape[klabels.index("o")]
+    groups = 1
+    gm = _FGC_RE.search(ins.attrs)
+    if gm:
+        groups = int(gm.group(1))
+    return 2.0 * out_elems * kelems / max(out_ch, 1) / max(groups, 1)
+
+
+def _group_size(attrs: str, num_partitions: int) -> int:
+    m = _RG_IOTA_RE.search(attrs)
+    if m:
+        return int(m.group(2))
+    m = _RG_LIST_RE.search(attrs)
+    if m:
+        return len(m.group(1).split(","))
+    return num_partitions
+
+
+_TRAFFIC_SKIP = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "call", "conditional", "after-all", "partition-id",
+    "replica-id", "domain", "opt-barrier", "get-dimension-size",
+    "all-gather-done", "all-reduce-done", "collective-permute-done",
+    "async-done", "async-update", "send-done", "recv-done",
+}
+
+
+# ------------------------------------------------------------ traverse ----
+def analyze(text: str) -> HloAnalysis:
+    comps, entry, num_partitions = parse_module(text)
+    if not entry:
+        raise ValueError("no ENTRY computation found in HLO text")
+
+    # computations reached via `fusion(..) calls=` or `to_apply` of
+    # reduce-like ops do not model HBM traffic at their instruction level.
+    fused: set = set()
+    for comp in comps.values():
+        for ins in comp.instructions:
+            if ins.opcode == "fusion":
+                m = _CALLS_RE.search(ins.attrs)
+                if m:
+                    fused.add(m.group(1))
+            elif ins.opcode in ("reduce", "reduce-window", "scatter", "sort",
+                                "map", "select-and-scatter", "reduce-scatter",
+                                "all-reduce", "all-reduce-start"):
+                m = _TO_APPLY_RE.search(ins.attrs)
+                if m:
+                    fused.add(m.group(1))
+
+    flops = 0.0
+    flops_unscaled = 0.0
+    traffic = 0.0
+    collectives: List[CollectiveStat] = []
+    unknown_trips = 0
+    upcast_hoist = 0.0
+    upcast_seen: set = set()
+    _UPCAST_MIN = 64 * 2**20  # only the big hoisted stacks
+
+    def op_bytes(ins: Instruction, comp: Computation) -> Tuple[float, float]:
+        ob = sum(shape_bytes(comp.symtab.get(o, "")) for o in ins.operands)
+        return ob, shape_bytes(ins.shape)
+
+    def _param_index(pins: Instruction) -> Optional[int]:
+        m = re.match(r"\s*(\d+)", pins.attrs) or re.search(
+            r"parameter\((\d+)\)", pins.line)
+        return int(m.group(1)) if m else None
+
+    def traffic_bytes(ins: Instruction, comp: Computation) -> float:
+        """HBM traffic of one top-level instruction.
+
+        Slicing ops only touch the slice, not the backing buffer — a
+        remat stack read via dynamic-slice inside the backward loop costs
+        |slice| per iteration, not |stack| (which inflated the memory
+        term ~20× on the deepseek cell).  dynamic-update-slice and
+        scatter are in-place: read+write of the update region only."""
+        if ins.opcode in ("dynamic-slice", "slice"):
+            return 2.0 * shape_bytes(ins.shape)
+        if ins.opcode == "dynamic-update-slice":
+            upd = (shape_bytes(comp.symtab.get(ins.operands[1], ""))
+                   if len(ins.operands) > 1 else 0.0)
+            return 2.0 * upd
+        if ins.opcode == "scatter":
+            upd = sum(shape_bytes(comp.symtab.get(o, ""))
+                      for o in ins.operands[1:])
+            return 2.0 * upd
+        if ins.opcode == "fusion":
+            m = _CALLS_RE.search(ins.attrs)
+            inner = comps.get(m.group(1)) if m else None
+            if inner is None:
+                return sum(op_bytes(ins, comp))
+            # map fusion params → operand position; a param consumed ONLY
+            # by dynamic-slice costs its slices, not the full buffer.
+            params: Dict[str, int] = {}
+            for pins in inner.instructions:
+                if pins.opcode == "parameter":
+                    idx = _param_index(pins)
+                    if idx is not None:
+                        params[pins.name] = idx
+            eff = 0.0
+            for pname, idx in params.items():
+                if idx >= len(ins.operands):
+                    continue
+                full = shape_bytes(comp.symtab.get(ins.operands[idx], ""))
+                users = [u for u in inner.instructions
+                         if pname in u.operands]
+                if users and all(u.opcode in ("dynamic-slice", "slice",
+                                              "dynamic-update-slice")
+                                 for u in users):
+                    sliced = 0.0
+                    for u in users:
+                        if u.opcode in ("dynamic-slice", "slice"):
+                            sliced += shape_bytes(u.shape)
+                        else:  # dus target param: read/write update only
+                            sliced += shape_bytes(
+                                inner.symtab.get(u.operands[1], "")) \
+                                if len(u.operands) > 1 else 0.0
+                    eff += min(full, sliced)
+                else:
+                    eff += full
+            # output: if the root is a dus chain the write is in place
+            root = inner.instructions[-1] if inner.instructions else None
+            if root is not None and root.opcode == "dynamic-update-slice" \
+                    and len(root.operands) > 1:
+                eff += shape_bytes(inner.symtab.get(root.operands[1], ""))
+            else:
+                eff += shape_bytes(ins.shape)
+            return eff
+        return sum(op_bytes(ins, comp))
+
+    seen_stack: List[str] = []
+
+    def visit(cname: str, mult: float, top_level: bool):
+        nonlocal flops, flops_unscaled, traffic, unknown_trips, upcast_hoist
+        if cname not in comps or cname in seen_stack:
+            return
+        comp = comps[cname]
+        seen_stack.append(cname)
+        for ins in comp.instructions:
+            base = ins.opcode.replace("-start", "")
+            if ins.opcode == "dot":
+                f = _dot_flops(ins, comp)
+                flops += mult * f
+                flops_unscaled += f
+            elif ins.opcode == "convolution":
+                f = _conv_flops(ins, comp)
+                flops += mult * f
+                flops_unscaled += f
+
+            if top_level and cname not in fused \
+                    and ins.opcode not in _TRAFFIC_SKIP:
+                traffic += mult * traffic_bytes(ins, comp)
+                outb = shape_bytes(ins.shape)
+                if (ins.opcode in ("convert", "fusion")
+                        and ins.shape.startswith("f32")
+                        and len(ins.operands) >= 1
+                        and outb >= _UPCAST_MIN
+                        and ins.shape not in upcast_seen):
+                    in_shape = comp.symtab.get(ins.operands[0], "")
+                    if (in_shape.startswith("bf16")
+                            and shape_elems(in_shape) == shape_elems(ins.shape)):
+                        # distinct resident buffers: dedupe by shape (XLA
+                        # reuses one allocation across same-shaped
+                        # non-overlapping-liveness converts), count once
+                        upcast_seen.add(ins.shape)
+                        upcast_hoist += outb
+
+            if base in COLLECTIVE_OPS:
+                ob, outb = op_bytes(ins, comp)
+                collectives.append(CollectiveStat(
+                    kind=ins.opcode, operand_bytes=ob, output_bytes=outb,
+                    group_size=_group_size(ins.attrs, num_partitions),
+                    count=mult, computation=cname))
+
+            # ---- call graph edges ----
+            if ins.opcode == "fusion":
+                m = _CALLS_RE.search(ins.attrs)
+                if m:
+                    visit(m.group(1), mult, top_level=False)
+            elif ins.opcode == "while":
+                trip = None
+                tm = _TRIP_RE.search(ins.attrs)
+                if tm:
+                    trip = int(tm.group(1))
+                cm, bm = _COND_RE.search(ins.attrs), _BODY_RE.search(ins.attrs)
+                if trip is None and cm:
+                    trip = _trip_from_condition(comps.get(cm.group(1)))
+                if trip is None:
+                    trip = 1
+                    unknown_trips += 1
+                if bm:
+                    visit(bm.group(1), mult * trip, top_level=top_level)
+                if cm:
+                    visit(cm.group(1), mult * (trip + 1), top_level=False)
+            elif ins.opcode == "call":
+                m = _TO_APPLY_RE.search(ins.attrs)
+                if m:
+                    visit(m.group(1), mult, top_level=top_level)
+            elif ins.opcode == "conditional":
+                bm = _BRANCH_RE.search(ins.attrs)
+                names = (_OPERAND_RE.findall(bm.group(1)) if bm
+                         else _TF_RE.findall(ins.attrs))
+                for n in names:
+                    visit(n, mult, top_level=top_level)
+        seen_stack.pop()
+
+    visit(entry, 1.0, top_level=True)
+
+    coll_ob = sum(c.operand_bytes * c.count for c in collectives)
+    coll_outb = sum(c.output_bytes * c.count for c in collectives)
+    coll_link = sum(c.link_bytes * c.count for c in collectives)
+    return HloAnalysis(
+        num_partitions=num_partitions,
+        flops_per_device=flops,
+        traffic_bytes_per_device=traffic,
+        collective_operand_bytes=coll_ob,
+        collective_output_bytes=coll_outb,
+        collective_link_bytes=coll_link,
+        collectives=collectives,
+        unknown_trip_counts=unknown_trips,
+        flops_unscaled=flops_unscaled,
+        upcast_hoist_bytes=upcast_hoist,
+    )
+
+
+def _trip_from_condition(comp: Optional[Computation]) -> Optional[int]:
+    """Fallback: find `compare(.., const), direction=LT` in the condition."""
+    if comp is None:
+        return None
+    consts = {}
+    for ins in comp.instructions:
+        if ins.opcode == "constant":
+            m = re.search(r"constant\((\d+)\)", ins.line)
+            if m:
+                consts[ins.name] = int(m.group(1))
+    for ins in comp.instructions:
+        if ins.opcode == "compare" and "direction=LT" in ins.attrs:
+            for o in ins.operands:
+                if o in consts:
+                    return consts[o]
+    return None

@@ -1,0 +1,35 @@
+"""Target-hardware constants (TPU v5e) for the roofline model.
+
+This container runs on CPU; v5e is the *target*.  All roofline terms are
+derived structurally from compiled HLO (launch/dryrun.py) and divided by
+these peaks.  Sources: assignment sheet ("197 TFLOP/s bf16 per chip;
+819 GB/s HBM; ~50 GB/s/link ICI").
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HwSpec:
+    name: str
+    peak_flops_bf16: float   # FLOP/s per chip
+    hbm_bw: float            # bytes/s per chip
+    ici_bw: float            # bytes/s per link (one direction)
+    ici_links: int           # links per chip (2D torus: 4)
+    hbm_bytes: float         # HBM capacity per chip
+    vmem_bytes: float        # VMEM per core
+
+
+V5E = HwSpec(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,
+    hbm_bw=819e9,
+    ici_bw=50e9,
+    ici_links=4,
+    hbm_bytes=16 * 2**30,
+    vmem_bytes=128 * 2**20,
+)
+
+# Production meshes (launch/mesh.py): one pod = 16×16 chips, multi-pod = 2 pods.
+CHIPS_PER_POD = 256

@@ -1,0 +1,174 @@
+"""Batched serving: jit'd prefill + decode steps with sharded KV caches.
+
+`build_serve_steps` produces the two compiled artifacts the dry-run
+lowers for the prefill_32k / decode_32k / long_500k cells:
+
+  prefill(params, batch)                   → (logits, cache)
+  decode (params, tokens, cache, cache_len)→ (logits, cache)   [donated]
+
+Cache sharding: batch over ("pod","data"); kv-heads over "model" when
+divisible, else head_dim over "model" (same fallback chain as the weights
+— sharding/specs.py); SSM/RG-LRU states shard their inner dim.
+`ServeEngine` adds greedy batched generation on top (examples/serve_lm.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import Model, cache_shapes, init_cache
+from repro.sharding import batch_spec
+from repro.sharding.specs import rules_for
+
+
+def _cache_leaf_spec(shape, mesh: Mesh, bs, time_axes: tuple = ()) -> P:
+    """Sharding for one cache leaf by its rank/shape.
+
+    attn kv (B, T, K, dh): batch + heads-or-headdim over model; when the
+    batch cannot take all data axes (long_500k: B=1) the leftover data
+    axes shard the time dim T instead (sequence-sharded KV).
+    ssm conv (B, W, C) / rnn conv: batch + channel over model.
+    ssm state (B, H, P, N): batch + H over model.  rnn h (B, W): batch + W.
+    """
+    model_ok = "model" in mesh.shape
+
+    def modelable(dim):
+        return model_ok and dim % mesh.shape["model"] == 0
+
+    def div(dim, axes):
+        import math as _m
+        return axes and dim % _m.prod(mesh.shape[a] for a in axes) == 0
+
+    if len(shape) == 4:  # (B, T, K, dh) or (B, H, P, N)
+        t = tuple(time_axes) if div(shape[1], time_axes) else None
+        t = t if t else None
+        if modelable(shape[2]):
+            return P(bs, t, "model", None)
+        if modelable(shape[3]):
+            return P(bs, t, None, "model")
+        return P(bs, t)
+    if len(shape) == 3:  # (B, W, C)
+        if modelable(shape[2]):
+            return P(bs, None, "model")
+        return P(bs)
+    if len(shape) == 2:  # (B, W)
+        if modelable(shape[1]):
+            return P(bs, "model")
+        return P(bs)
+    return P(bs)
+
+
+def serve_batch_axes(batch: int, mesh: Mesh, rules):
+    """(batch axes, leftover data axes) honoring divisibility (B=1 cells)."""
+    from repro.sharding.specs import batch_axes_for
+
+    used = batch_axes_for(batch, mesh, rules)
+    rest = tuple(a for a in rules.batch_axes
+                 if a in mesh.shape and a not in used)
+    return used, rest
+
+
+def cache_specs(model: Model, mesh: Mesh, batch: int, max_len: int):
+    rules = rules_for(model.cfg.zero_shard, serve=True)
+    used, time_axes = serve_batch_axes(batch, mesh, rules)
+    bs = P(used if len(used) > 1 else (used[0] if used else None))
+    bs_inner = bs[0] if len(bs) == 1 else tuple(bs)
+    shapes = cache_shapes(model.cfg, batch, max_len)
+
+    out = {}
+    if "layers" in shapes:  # stacked: leading layer dim is never sharded
+        out["layers"] = jax.tree.map(
+            lambda s: P(None, *tuple(_cache_leaf_spec(s.shape[1:], mesh,
+                                                      bs_inner, time_axes))),
+            shapes["layers"])
+    if "tail" in shapes:
+        out["tail"] = jax.tree.map(
+            lambda s: _cache_leaf_spec(s.shape, mesh, bs_inner, time_axes),
+            shapes["tail"])
+    return out
+
+
+def build_serve_steps(model: Model, mesh: Mesh, batch: int, max_len: int):
+    """Returns (prefill_fn, decode_fn, cache_shardings, batch_shardings)."""
+    cfg = model.cfg
+    rules = rules_for(cfg.zero_shard, serve=True)
+    used, _ = serve_batch_axes(batch, mesh, rules)
+    bs = P(used if len(used) > 1 else (used[0] if used else None))
+    from repro.sharding import param_specs
+    p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                           param_specs(model.defs(), mesh, rules),
+                           is_leaf=lambda x: isinstance(x, P))
+    c_shard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                           cache_specs(model, mesh, batch, max_len),
+                           is_leaf=lambda x: isinstance(x, P))
+    tok_shard = NamedSharding(mesh, P(*bs, None))
+    rep = NamedSharding(mesh, P())
+
+    b_shard: Dict[str, Any] = {"tokens": tok_shard}
+    if cfg.family == "vlm" and cfg.n_patches:
+        b_shard["patches"] = NamedSharding(mesh, P(*bs, None, None))
+    if cfg.is_encdec:
+        b_shard["frames"] = NamedSharding(mesh, P(*bs, None, None))
+
+    vocab_ok = ("model" in mesh.shape
+                and cfg.vocab_size % mesh.shape["model"] == 0)
+    logits_shard = NamedSharding(
+        mesh, P(*bs, "model" if vocab_ok else None))
+
+    from repro.sharding.activation import activation_sharding
+
+    def _prefill(params, batch):
+        with activation_sharding(mesh, used):
+            return model.prefill(params, batch, max_len=max_len)
+
+    def _decode(params, tokens, cache, cache_len):
+        with activation_sharding(mesh, used):
+            return model.decode_step(params, tokens, cache, cache_len)
+
+    prefill = jax.jit(
+        _prefill,
+        in_shardings=(p_shard, b_shard),
+        out_shardings=(logits_shard, c_shard),
+    )
+    decode = jax.jit(
+        _decode,
+        in_shardings=(p_shard, tok_shard, c_shard, rep),
+        out_shardings=(logits_shard, c_shard),
+        donate_argnums=(2,),
+    )
+    return prefill, decode, c_shard, b_shard, p_shard
+
+
+class ServeEngine:
+    """Greedy batched generation (the runnable serving example)."""
+
+    def __init__(self, model: Model, mesh: Mesh, params, batch: int,
+                 max_len: int):
+        self.model = model
+        self.max_len = max_len
+        (self.prefill_fn, self.decode_fn, self.cache_shardings,
+         self.batch_shardings, p_shard) = build_serve_steps(
+            model, mesh, batch, max_len)
+        self.params = jax.device_put(params, p_shard)
+
+    def generate(self, batch: Dict[str, Any], n_tokens: int):
+        """Greedy-decode n_tokens after the prompt.  Returns (B, n) ids."""
+        prompt = batch["tokens"]
+        b, s = prompt.shape
+        batch = {k: jax.device_put(v, self.batch_shardings[k])
+                 for k, v in batch.items()}
+        logits, cache = self.prefill_fn(self.params, batch)
+        outs = []
+        cache_len = s
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        for _ in range(n_tokens):
+            outs.append(tok)
+            logits, cache = self.decode_fn(self.params, tok, cache,
+                                           jnp.int32(cache_len))
+            cache_len += 1
+            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        return jnp.concatenate(outs, axis=1)

@@ -1,0 +1,8 @@
+from .specs import (
+    ShardingRules,
+    DEFAULT_RULES,
+    spec_for_def,
+    param_specs,
+    batch_spec,
+    shardings_for,
+)

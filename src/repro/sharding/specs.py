@@ -1,0 +1,166 @@
+"""Logical-axis → mesh-axis sharding rules with divisibility fallbacks.
+
+Every parameter dimension carries a *logical* name (see models/params.py).
+Rules map each logical name to an ordered list of candidate mesh-axis
+tuples; for a concrete (shape, mesh) we pick, per dimension and in order,
+the first candidate whose axes are (a) present in the mesh, (b) unused by
+earlier dimensions of the same param, and (c) divide the dimension size.
+This resolves all the published-config wrinkles in one place:
+
+  * kv_heads = 8 on a model-axis of 16 → kv_heads replicates and the
+    fallback "kv_head_dim" picks up the model axis instead (memory-optimal
+    GQA sharding; GSPMD inserts the gather in attention).
+  * vocab 92553 / 49155 / 51865 not divisible by 16 → vocab replicates and
+    the "embed" dim takes the FSDP ("data") axis.
+  * ZeRO/FSDP: 2-D+ weights additionally shard their "embed"-like dim over
+    "data"; 1-D params (norm scales) stay replicated.
+
+The same rules serve the single-pod (data, model) and multi-pod
+(pod, data, model) meshes: the batch shards over ("pod","data") while
+FSDP stays intra-pod ("data") — DP across pods, FSDP within.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.params import ParamDef, is_def, map_defs
+
+Axes = Tuple[str, ...]
+Candidates = Tuple[Axes, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """logical name → ordered candidate mesh-axis tuples (() = replicate)."""
+    table: Dict[str, Candidates]
+    batch_axes: Axes = ("pod", "data")
+
+    def candidates(self, logical: Optional[str]) -> Candidates:
+        if logical is None:
+            return ((),)
+        return self.table.get(logical, ((),))
+
+
+def _mk(zero: bool) -> Dict[str, Candidates]:
+    fsdp: Candidates = ((("data",),) if zero else ()) + ((),)
+    return {
+        # embedding / residual-width dims: FSDP over "data" if divisible
+        "embed": fsdp,
+        "ffn": (("model",),) + fsdp,
+        # Heads shard over "model" when divisible.  When not (qwen2.5: 40
+        # heads on model=16) configs set ModelConfig.head_pad — sharding
+        # the *head_dim* instead was measured to psum every score chunk
+        # (19 TB/step on qwen2.5-32b train_4k) and replicating the whole
+        # attention stack is the 450 s/step baseline pathology (§Perf
+        # baseline-fix #1), so neither is a fallback here.
+        "heads": (("model",),) + fsdp,
+        "kv_heads": (("model",),),            # no fallback: kv_head_dim covers
+        # kv_head_dim → model matters for serving (KV-cache memory); in
+        # training it forces score psums over the contracted dh, so the
+        # train rules replicate small KV heads instead (see rules_for).
+        "kv_head_dim": (("model",), ()),
+        "head_dim": ((),),
+        "vocab": (("model",),),               # fallback: embed dim takes data
+        # EP: experts shard over "model" (group-local routing keeps the
+        # dispatch einsums communication-free; the final combine psums
+        # token-space (g,gs,d) instead of expert-space (g,e,cap,d) which
+        # is k·cf ≈ 10× larger — measured 450 GB/step on granite train
+        # with the TP-experts baseline, §Perf cell 2).  Non-divisible
+        # expert counts pad via ModelConfig.expert_pad (qwen2-moe 60→64).
+        "experts": (("model",), ()),
+        "expert_ffn": (("model",),) + fsdp,
+        "rnn": (("model",),) + fsdp,
+        "ssm_inner": (("model",),) + fsdp,
+        "ssm_heads": (("model",), ()),
+        "ssm_state": ((),),
+        "conv": ((),),
+        "layers": ((),),
+        "enc": ((),),
+    }
+
+
+DEFAULT_RULES = ShardingRules(table=_mk(zero=True))
+NO_ZERO_RULES = ShardingRules(table=_mk(zero=False))
+
+
+def _train_table(zero: bool):
+    t = dict(_mk(zero))
+    # replicate KV projections when kv_heads can't take the model axis:
+    # k/v are transient in training, and dh-sharding them psums every
+    # score chunk (measured on deepseek-67b: the SPMD partitioner falls
+    # back to "involuntary full rematerialization" copies as well).
+    t["kv_head_dim"] = ((),)
+    return t
+
+
+TRAIN_RULES = ShardingRules(table=_train_table(zero=True))
+TRAIN_NO_ZERO_RULES = ShardingRules(table=_train_table(zero=False))
+
+
+def rules_for(zero_shard: bool, serve: bool = False) -> ShardingRules:
+    if serve:
+        return DEFAULT_RULES if zero_shard else NO_ZERO_RULES
+    return TRAIN_RULES if zero_shard else TRAIN_NO_ZERO_RULES
+
+
+def spec_for_def(d: ParamDef, mesh: Mesh, rules: ShardingRules) -> P:
+    """Resolve one ParamDef to a PartitionSpec under `mesh`."""
+    used = set()
+    parts = []
+    vector = len([s for s in d.shape if s > 1]) <= 1  # keep 1-D params replicated
+    for size, logical in zip(d.shape, d.logical):
+        picked: Axes = ()
+        if not vector or logical in ("vocab",):
+            for cand in rules.candidates(logical):
+                if any(a not in mesh.shape or a in used for a in cand):
+                    continue
+                denom = math.prod(mesh.shape[a] for a in cand) if cand else 1
+                if cand and size % denom != 0:
+                    continue
+                picked = cand
+                break
+        used.update(picked)
+        if len(picked) == 0:
+            parts.append(None)
+        elif len(picked) == 1:
+            parts.append(picked[0])
+        else:
+            parts.append(picked)
+    return P(*parts)
+
+
+def param_specs(defs, mesh: Mesh, rules: ShardingRules = DEFAULT_RULES):
+    """Pytree of ParamDefs → pytree of PartitionSpecs."""
+    return map_defs(lambda d: spec_for_def(d, mesh, rules), defs)
+
+
+def batch_spec(mesh: Mesh, rules: ShardingRules = DEFAULT_RULES) -> P:
+    """Sharding for the leading batch dim: over all present batch axes."""
+    axes = tuple(a for a in rules.batch_axes if a in mesh.shape)
+    return P(axes if len(axes) > 1 else (axes[0] if axes else None))
+
+
+def batch_axes_for(n: int, mesh: Mesh,
+                   rules: ShardingRules = DEFAULT_RULES) -> Axes:
+    """Largest contiguous run of batch axes whose product divides n.
+
+    long_500k has global_batch=1: nothing divides it, so the batch
+    replicates and the *leftover* axes are reassigned to other dims by the
+    caller (serving shards the KV-cache time dim instead)."""
+    axes = tuple(a for a in rules.batch_axes if a in mesh.shape)
+    for k in range(len(axes), 0, -1):
+        for i in range(len(axes) - k + 1):
+            cand = axes[i:i + k]
+            if n % math.prod(mesh.shape[a] for a in cand) == 0:
+                return cand
+    return ()
+
+
+def shardings_for(tree_of_specs, mesh: Mesh):
+    return __import__("jax").tree.map(
+        lambda s: NamedSharding(mesh, s), tree_of_specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,2 @@
+from .steps import build_train_step, make_train_state, TrainState
+from .loop import TrainLoop, TrainLoopConfig

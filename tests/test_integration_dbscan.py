@@ -1,0 +1,86 @@
+"""MSC-over-activations integration + DBSCAN multi-cluster extension."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    MSCConfig,
+    cluster_activations,
+    cluster_experts,
+    dbscan_from_similarity,
+    msc_dbscan,
+    routing_tensor,
+)
+from repro.core.integration import collect_activation_tensor
+
+
+class TestActivationClustering:
+    def test_redundant_layers_cluster_together(self):
+        # three near-identical layers + five independent ones: the mode-1
+        # (layer) cluster must contain exactly the redundant triple.
+        key = jax.random.PRNGKey(0)
+        base = jax.random.normal(key, (64, 32))
+        acts = [40.0 * base + 0.5 * jax.random.normal(jax.random.PRNGKey(i), (64, 32))
+                for i in range(3)]
+        acts += [jax.random.normal(jax.random.PRNGKey(100 + i), (64, 32))
+                 for i in range(5)]
+        res = cluster_activations(acts, MSCConfig(epsilon=1e-4))
+        layer_mask = np.asarray(res[0].mask)
+        assert layer_mask[:3].all()
+        assert not layer_mask[3:].any()
+
+    def test_collect_standardizes(self):
+        acts = [jnp.ones((2, 8, 16)) * 100.0, jnp.zeros((2, 8, 16))]
+        t = collect_activation_tensor(acts)
+        assert t.shape == (2, 16, 16)
+        assert float(jnp.abs(jnp.mean(t))) < 1e-4
+
+
+class TestExpertClustering:
+    def test_routing_tensor_shape(self):
+        probs = [jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(i), (128, 8)))
+                 for i in range(4)]
+        t = routing_tensor(probs, n_bins=16)
+        assert t.shape == (4, 8, 16)
+        assert not bool(jnp.any(jnp.isnan(t)))
+
+    def test_correlated_experts_found(self):
+        # experts 0-2 fire on the same tokens across layers → mode-2 cluster
+        rs = np.random.RandomState(0)
+        probs = []
+        for _ in range(6):
+            logits = rs.randn(256, 12).astype(np.float32)
+            hot = rs.rand(256) < 0.5
+            logits[hot, 0:3] += 8.0  # correlated trio
+            probs.append(jax.nn.softmax(jnp.asarray(logits)))
+        res = cluster_experts(probs, MSCConfig(epsilon=1e-4), n_bins=32)
+        expert_mask = np.asarray(res[1].mask)
+        assert expert_mask[:3].all()
+
+
+class TestDBSCAN:
+    def test_two_blocks_two_clusters(self):
+        # block-diagonal similarity → two clusters, isolated point = noise
+        c = np.eye(9)
+        c[:4, :4] = 1.0
+        c[4:8, 4:8] = 1.0
+        labels = dbscan_from_similarity(c, eps=0.3, min_samples=3)
+        assert labels[0] == labels[1] == labels[2] == labels[3]
+        assert labels[4] == labels[5] == labels[6] == labels[7]
+        assert labels[0] != labels[4]
+        assert labels[8] == -1
+
+    def test_min_samples_gate(self):
+        c = np.eye(4)
+        c[:2, :2] = 1.0
+        labels = dbscan_from_similarity(c, eps=0.3, min_samples=3)
+        assert (labels == -1).all()
+
+    def test_msc_dbscan_on_planted(self):
+        from repro.core import PlantedSpec, make_planted_tensor
+        spec = PlantedSpec.paper(m=40, gamma=80.0)
+        T = make_planted_tensor(jax.random.PRNGKey(1), spec)
+        labels = msc_dbscan(T, MSCConfig(epsilon=1e-4), eps=0.4, min_samples=3)
+        for lab in labels:
+            planted = lab[:4]
+            assert (planted == planted[0]).all() and planted[0] != -1

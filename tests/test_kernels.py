@@ -1,0 +1,186 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU).
+
+Per instructions: sweep shapes/dtypes per kernel, assert_allclose against
+ref.py.  Block sizes are chosen below the dims in several cases so the
+multi-tile grid paths (accumulation, padding, masking) are exercised.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.gram import batched_gram as gram_kernel
+from repro.kernels.similarity import similarity_rowsum as sim_kernel
+from repro.kernels.power_iter import power_iterate as pi_kernel
+from repro.kernels.flash_attention import flash_attention as fa_kernel
+from repro.core.power_iter import _init_vectors
+
+KEY = jax.random.PRNGKey(0)
+
+
+def rnd(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape).astype(dtype)
+
+
+def tol(dtype):
+    return dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-4, atol=1e-4)
+
+
+class TestGramKernel:
+    @pytest.mark.parametrize("shape", [
+        (1, 8, 8), (3, 50, 40), (2, 128, 64), (4, 33, 17), (2, 16, 130),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, shape, dtype):
+        x = rnd(1, shape, dtype)
+        got = gram_kernel(x, block_r=32, block_c=32, interpret=True)
+        want = ref.batched_gram(x)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            **tol(dtype))
+
+    def test_single_tile_fast_path(self):
+        x = rnd(2, (2, 64, 64))
+        got = gram_kernel(x, block_r=64, block_c=64, interpret=True)
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(ref.batched_gram(x)),
+                                   rtol=1e-5, atol=1e-4)
+
+    def test_symmetry(self):
+        x = rnd(3, (2, 20, 24))
+        g = np.asarray(gram_kernel(x, block_r=8, block_c=8, interpret=True))
+        np.testing.assert_allclose(g, np.swapaxes(g, 1, 2), atol=1e-4)
+
+
+class TestSimilarityKernel:
+    @pytest.mark.parametrize("bl,m,c", [
+        (4, 16, 8), (17, 61, 33), (128, 256, 64), (1, 7, 5), (100, 100, 130),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, bl, m, c, dtype):
+        vl = rnd(4, (bl, c), dtype)
+        vf = rnd(5, (m, c), dtype)
+        got = sim_kernel(vl, vf, block_i=16, block_j=32, interpret=True)
+        want = ref.similarity_rowsum(vl, vf)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   **tol(dtype))
+
+    def test_zero_padding_rows_contribute_nothing(self):
+        vl = rnd(6, (8, 16))
+        vf = rnd(7, (24, 16))
+        vf_pad = jnp.concatenate([vf, jnp.zeros((9, 16))])
+        a = sim_kernel(vl, vf, block_i=8, block_j=8, interpret=True)
+        b = sim_kernel(vl, vf_pad, block_i=8, block_j=8, interpret=True)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
+
+
+class TestPowerIterKernel:
+    @pytest.mark.parametrize("shape", [(1, 10, 10), (5, 40, 24), (3, 16, 64)])
+    @pytest.mark.parametrize("n_iters", [5, 60])
+    def test_matches_ref(self, shape, n_iters):
+        x = rnd(8, shape)
+        v0 = _init_vectors(shape[0], shape[2])
+        lam_k, v_k = pi_kernel(x, v0, n_iters, interpret=True)
+        lam_r, v_r = ref.power_iterate(x, v0, n_iters)
+        np.testing.assert_allclose(np.asarray(lam_k), np.asarray(lam_r),
+                                   rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(v_k), np.asarray(v_r),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_converges_to_eigh(self):
+        x = rnd(9, (4, 30, 20))
+        v0 = _init_vectors(4, 20)
+        lam, _ = pi_kernel(x, v0, 300, interpret=True)
+        want = np.linalg.eigvalsh(np.einsum("brc,brd->bcd", x, x))[:, -1]
+        np.testing.assert_allclose(np.asarray(lam), want, rtol=1e-4)
+
+
+class TestFlashAttentionKernel:
+    @pytest.mark.parametrize("sq,skv,d", [
+        (16, 16, 8), (70, 70, 32), (33, 65, 16), (128, 256, 64),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_causal_matches_ref(self, sq, skv, d, dtype):
+        q, k, v = (rnd(i, (2, s, d), dtype)
+                   for i, s in zip((10, 11, 12), (sq, skv, skv)))
+        got = fa_kernel(q, k, v, causal=True, block_q=16, block_k=32,
+                        interpret=True)
+        want = ref.flash_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32), **tol(dtype))
+
+    def test_non_causal(self):
+        q, k, v = (rnd(i, (1, 24, 16)) for i in (13, 14, 15))
+        got = fa_kernel(q, k, v, causal=False, block_q=8, block_k=8,
+                        interpret=True)
+        want = ref.flash_attention(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("window", [8, 24])
+    def test_sliding_window(self, window):
+        q, k, v = (rnd(i, (2, 48, 16)) for i in (16, 17, 18))
+        got = fa_kernel(q, k, v, causal=True, window=window, block_q=16,
+                        block_k=16, interpret=True)
+        want = ref.flash_attention(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_softcap(self):
+        q, k, v = (rnd(i, (2, 32, 16)) for i in (19, 20, 21))
+        got = fa_kernel(q, k, v, causal=True, softcap=30.0, block_q=16,
+                        block_k=16, interpret=True)
+        want = ref.flash_attention(q, k, v, causal=True, softcap=30.0)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_decode_single_query_offset(self):
+        q = rnd(22, (3, 1, 32))
+        k, v = rnd(23, (3, 100, 32)), rnd(24, (3, 100, 32))
+        got = fa_kernel(q, k, v, causal=True, q_offset=63, block_q=1,
+                        block_k=32, interpret=True)
+        want = ref.flash_attention(q, k, v, causal=True, q_offset=63)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_causality_property(self):
+        # future kv must not affect earlier outputs
+        q, k, v = (rnd(i, (1, 32, 16)) for i in (25, 26, 27))
+        o1 = fa_kernel(q, k, v, causal=True, block_q=8, block_k=8,
+                       interpret=True)
+        k2 = k.at[:, 20:].set(99.0)
+        v2 = v.at[:, 20:].set(-99.0)
+        o2 = fa_kernel(q, k2, v2, causal=True, block_q=8, block_k=8,
+                       interpret=True)
+        np.testing.assert_allclose(np.asarray(o1[:, :20]),
+                                   np.asarray(o2[:, :20]), rtol=1e-5)
+
+
+class TestKernelIntegration:
+    """use_kernels=True routes core MSC through the Pallas kernels."""
+
+    def test_msc_sequential_with_kernels(self):
+        from repro.core import (MSCConfig, PlantedSpec, make_planted_tensor,
+                                msc_sequential, planted_masks, recovery_rate)
+        spec = PlantedSpec.paper(m=30, gamma=60.0)
+        T = make_planted_tensor(jax.random.PRNGKey(0), spec)
+        ref_res = msc_sequential(T, MSCConfig(epsilon=3e-4))
+        ker_res = msc_sequential(T, MSCConfig(epsilon=3e-4, use_kernels=True))
+        for j in range(3):
+            np.testing.assert_allclose(np.asarray(ker_res[j].d),
+                                       np.asarray(ref_res[j].d),
+                                       rtol=1e-4, atol=1e-4)
+
+    def test_msc_gram_kernel_path(self):
+        from repro.core import MSCConfig, PlantedSpec, make_planted_tensor, \
+            msc_sequential
+        spec = PlantedSpec.paper(m=24, gamma=50.0)
+        T = make_planted_tensor(jax.random.PRNGKey(1), spec)
+        a = msc_sequential(T, MSCConfig(epsilon=3e-4, matrix_free=False))
+        b = msc_sequential(T, MSCConfig(epsilon=3e-4, matrix_free=False,
+                                        use_kernels=True))
+        for j in range(3):
+            np.testing.assert_allclose(np.asarray(b[j].d), np.asarray(a[j].d),
+                                       rtol=1e-4, atol=1e-4)

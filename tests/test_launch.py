@@ -1,0 +1,95 @@
+"""Launch subsystem: meshes, elastic re-meshing, µbatching, drivers."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.launch.elastic import best_mesh_shape
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+class TestBestMeshShape:
+    def test_exact(self):
+        assert best_mesh_shape(16, prefer_model=4) == (4, 4)
+
+    def test_shrinks_model_to_divisor(self):
+        assert best_mesh_shape(6, prefer_model=4) == (2, 3)
+
+    def test_single_device(self):
+        assert best_mesh_shape(1, prefer_model=8) == (1, 1)
+
+
+class TestAutoMicrobatches:
+    def test_small_model_no_ubatch(self, subproc):
+        out = subproc("""
+import jax
+from repro.configs import get_config
+from repro.training.steps import auto_microbatches
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+cfg = get_config("qwen1.5-0.5b").reduced()
+assert auto_microbatches(cfg, 8, 128, mesh) == 1
+print("OK")
+""", 8)
+        assert "OK" in out
+
+    def test_big_model_ubatches_and_divisibility(self, subproc):
+        out = subproc("""
+import jax
+from repro.configs import get_config
+from repro.training.steps import auto_microbatches
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+cfg = get_config("deepseek-67b")
+k = auto_microbatches(cfg, 256, 4096, mesh)
+assert k > 1 and 256 % k == 0 and (256 // k) % 4 == 0, k
+print("OK")
+""", 8)
+        assert "OK" in out
+
+
+class TestProductionMesh:
+    def test_requires_512_devices_error(self):
+        # without the XLA override the production mesh must refuse
+        from repro.launch.mesh import make_production_mesh
+        with pytest.raises(RuntimeError):
+            make_production_mesh()
+
+    def test_shapes(self, subproc):
+        out = subproc("""
+from repro.launch.mesh import make_production_mesh, mesh_name, chips
+m1 = make_production_mesh()
+assert dict(m1.shape) == {"data": 16, "model": 16} and chips(m1) == 256
+m2 = make_production_mesh(multi_pod=True)
+assert dict(m2.shape) == {"pod": 2, "data": 16, "model": 16}
+assert mesh_name(m2) == "2x16x16"
+print("OK")
+""", 512)
+        assert "OK" in out
+
+
+class TestTrainDriver:
+    def test_crash_restart_end_to_end(self, tmp_path):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.launch.train",
+             "--arch", "qwen1.5-0.5b", "--reduced", "--steps", "8",
+             "--batch", "2", "--seq", "32", "--ckpt-every", "4",
+             "--fail-at", "6", "--ckpt-dir", str(tmp_path / "ck")],
+            capture_output=True, text=True, timeout=900, env=env)
+        assert proc.returncode == 0, proc.stderr[-2000:]
+        assert "done:" in proc.stdout
+
+
+class TestMscDriver:
+    def test_msc_run_recovers(self):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.launch.msc_run",
+             "--m", "36", "--gamma", "40", "--repeats", "1"],
+            capture_output=True, text=True, timeout=900, env=env)
+        assert proc.returncode == 0, proc.stderr[-2000:]
+        assert "rec=1.000" in proc.stdout

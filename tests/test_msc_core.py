@@ -1,0 +1,209 @@
+"""Sequential MSC correctness: Alg. 1, extraction, statistics, metrics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    MSCConfig,
+    PlantedSpec,
+    extract_cluster,
+    make_planted_tensor,
+    max_gap_init,
+    mode_slices,
+    msc_sequential,
+    msc_similarity_matrices,
+    planted_masks,
+    power_iteration_gram,
+    power_iteration_matrix_free,
+    rayleigh_residual,
+    recovery_rate,
+    similarity_index,
+    theorem_threshold,
+    trim_to_theorem,
+    tw_threshold,
+    wishart_mu_sigma,
+)
+
+
+def paper_eps(m, frac=0.5):
+    """ε satisfying Theorem II.1: sqrt(ε) ≤ 1/(m−l), l = 10%·m."""
+    l = max(1, m // 10)
+    return frac / (m - l) ** 2
+
+
+class TestPowerIteration:
+    @pytest.mark.parametrize("shape", [(4, 20, 16), (7, 10, 30), (1, 12, 12)])
+    def test_matrix_free_matches_eigh(self, shape):
+        x = jax.random.normal(jax.random.PRNGKey(0), shape)
+        lam, v = power_iteration_matrix_free(x, n_iters=300)
+        gram = np.einsum("brc,brd->bcd", x, x)
+        w = np.linalg.eigvalsh(gram)[:, -1]
+        np.testing.assert_allclose(np.asarray(lam), w, rtol=1e-4)
+
+    def test_gram_and_matrix_free_agree(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (5, 24, 18))
+        lam_a, v_a = power_iteration_matrix_free(x, n_iters=200)
+        lam_b, v_b = power_iteration_gram(x, n_iters=200)
+        np.testing.assert_allclose(np.asarray(lam_a), np.asarray(lam_b), rtol=1e-4)
+        # eigenvectors agree up to sign
+        dots = np.abs(np.sum(np.asarray(v_a) * np.asarray(v_b), axis=-1))
+        np.testing.assert_allclose(dots, 1.0, atol=1e-4)
+
+    def test_rayleigh_residual_small(self):
+        x = jax.random.normal(jax.random.PRNGKey(2), (6, 30, 25))
+        lam, v = power_iteration_matrix_free(x, n_iters=300)
+        resid = rayleigh_residual(x, lam, v)
+        assert float(jnp.max(resid)) < 1e-3
+
+    def test_planted_direction_recovered(self):
+        # strong rank-1 slice: top eigenvector ≈ planted v
+        m2, m3, l = 40, 40, 4
+        v_true = np.zeros(m3); v_true[:l] = 1 / np.sqrt(l)
+        w = 200.0 * np.outer(np.ones(m2) / np.sqrt(m2), v_true)
+        x = jnp.asarray(w + np.random.RandomState(0).randn(m2, m3))[None]
+        lam, v = power_iteration_matrix_free(x, n_iters=100)
+        overlap = abs(float(np.dot(np.asarray(v)[0], v_true)))
+        assert overlap > 0.99
+
+
+class TestExtraction:
+    def test_max_gap_simple(self):
+        d = jnp.array([9.0, 9.1, 8.9, 1.0, 1.2, 0.8])
+        mask = max_gap_init(d)
+        np.testing.assert_array_equal(np.asarray(mask),
+                                      [True, True, True, False, False, False])
+
+    def test_max_gap_respects_padding(self):
+        d = jnp.array([9.0, 9.1, 1.0, 0.0, 0.0])
+        valid = jnp.array([True, True, True, False, False])
+        mask = max_gap_init(d, valid)
+        assert not np.asarray(mask)[3:].any()
+        np.testing.assert_array_equal(np.asarray(mask)[:3], [True, True, False])
+
+    def test_trim_reduces_to_tight_cluster(self):
+        # initial mask includes one outlier with much smaller d; theorem
+        # bound with tiny ε forces its removal.
+        d = jnp.array([10.0, 10.01, 9.99, 7.0])
+        init = jnp.array([True, True, True, True])
+        mask, n = trim_to_theorem(d, init, epsilon=1e-8)
+        np.testing.assert_array_equal(np.asarray(mask), [True, True, True, False])
+        assert int(n) >= 1
+
+    def test_trim_noop_when_bound_holds(self):
+        d = jnp.array([10.0, 10.0, 10.0, 1.0])
+        init = jnp.array([True, True, True, False])
+        mask, n = trim_to_theorem(d, init, epsilon=1e-8)
+        assert int(n) == 0
+        np.testing.assert_array_equal(np.asarray(mask), np.asarray(init))
+
+    def test_trim_terminates_at_singleton(self):
+        # pathological spread — must stop at |J| = 1, not loop forever
+        d = jnp.array([100.0, 50.0, 25.0, 12.0, 6.0])
+        init = jnp.ones(5, bool)
+        mask, _ = trim_to_theorem(d, init, epsilon=1e-12)
+        assert int(mask.sum()) >= 1
+
+    def test_extract_cluster_end_to_end(self):
+        d = jnp.array([5.0, 5.1, 5.05, 0.5, 0.4, 0.45, 0.5, 0.42])
+        mask, _ = extract_cluster(d, epsilon=1e-4)
+        np.testing.assert_array_equal(np.asarray(mask)[:3], [True] * 3)
+        assert not np.asarray(mask)[3:].any()
+
+
+class TestStats:
+    def test_wishart_mu_sigma_values(self):
+        mu, sigma = wishart_mu_sigma(100, 100)
+        # μ = (sqrt(99)+10)² ≈ 398.99
+        np.testing.assert_allclose(float(mu), (np.sqrt(99) + 10) ** 2, rtol=1e-5)
+        assert float(sigma) > 0
+
+    def test_noise_eigenvalue_near_mu(self):
+        # top eigenvalue of a pure-noise Wishart concentrates near μ
+        m2 = m3 = 60
+        x = np.random.RandomState(0).randn(m2, m3)
+        lam = np.linalg.eigvalsh(x.T @ x)[-1]
+        mu, sigma = wishart_mu_sigma(m2, m3)
+        assert abs(lam - float(mu)) < 6 * float(sigma)
+
+    def test_tw_threshold_monotone_in_quantile(self):
+        t95 = float(tw_threshold(50, 50, 0.95))
+        t99 = float(tw_threshold(50, 50, 0.99))
+        assert t99 > t95
+
+    def test_theorem_threshold_guards(self):
+        # must stay finite even at l = m (log clamp)
+        val = float(theorem_threshold(10, 10, 1e-6))
+        assert np.isfinite(val)
+
+
+class TestMSCSequential:
+    @pytest.mark.parametrize("matrix_free", [True, False])
+    def test_recovers_planted_cluster(self, matrix_free):
+        m = 60
+        spec = PlantedSpec.paper(m=m, gamma=80.0)
+        T = make_planted_tensor(jax.random.PRNGKey(0), spec)
+        cfg = MSCConfig(epsilon=paper_eps(m), matrix_free=matrix_free)
+        res = msc_sequential(T, cfg)
+        rec = float(recovery_rate(planted_masks(spec), [r.mask for r in res]))
+        assert rec == 1.0
+        for r in res:
+            assert int(r.size) == spec.cluster_sizes[0]
+
+    def test_quality_regimes_match_fig4(self):
+        # Fig 4: ε violating the theorem ⇒ high recovery but lower
+        # similarity; ε fulfilling it ⇒ both high (γ large).
+        m = 50
+        spec = PlantedSpec.paper(m=m, gamma=150.0)
+        T = make_planted_tensor(jax.random.PRNGKey(3), spec)
+        good = MSCConfig(epsilon=paper_eps(m))
+        res = msc_sequential(T, good)
+        masks = [r.mask for r in res]
+        cmats = msc_similarity_matrices(T, good)
+        rec = float(recovery_rate(planted_masks(spec), masks))
+        sim = float(similarity_index(cmats, masks))
+        assert rec == 1.0 and sim > 0.9
+
+    def test_weak_signal_no_spurious_perfect_cluster(self):
+        # γ = 0: pure noise — the extracted "cluster" must not match the
+        # planted indices perfectly (they are indistinguishable from noise)
+        m = 50
+        spec = PlantedSpec.paper(m=m, gamma=0.0)
+        T = make_planted_tensor(jax.random.PRNGKey(4), spec)
+        res = msc_sequential(T, MSCConfig(epsilon=paper_eps(m)))
+        rec = float(recovery_rate(planted_masks(spec), [r.mask for r in res]))
+        assert rec < 1.0
+
+    def test_nan_free_and_shapes(self):
+        m = 30
+        spec = PlantedSpec(shape=(m, 24, 18), cluster_sizes=(3, 2, 2), gamma=50.0)
+        T = make_planted_tensor(jax.random.PRNGKey(5), spec)
+        res = msc_sequential(T, MSCConfig(epsilon=1e-5))
+        for j, r in enumerate(res):
+            assert r.d.shape == (spec.shape[j],)
+            assert r.mask.shape == (spec.shape[j],)
+            assert not bool(jnp.any(jnp.isnan(r.d)))
+
+    def test_signal_lambda_separates_from_tw(self):
+        # planted slices' top eigenvalues exceed the TW noise threshold
+        m = 50
+        spec = PlantedSpec.paper(m=m, gamma=100.0)
+        T = make_planted_tensor(jax.random.PRNGKey(6), spec)
+        res = msc_sequential(T, MSCConfig(epsilon=paper_eps(m)))
+        thr = float(tw_threshold(m, m, 0.99))
+        lam = np.asarray(res[0].lambdas)
+        true = np.asarray(planted_masks(spec)[0])
+        assert (lam[true] > thr).all()
+
+
+class TestMetrics:
+    def test_recovery_rate_perfect_and_empty(self):
+        t = [jnp.array([True, True, False])] * 3
+        assert float(recovery_rate(t, t)) == 1.0
+        p = [jnp.array([False, False, False])] * 3
+        assert float(recovery_rate(t, p)) == 0.0
+
+    def test_similarity_index_on_identity(self):
+        c = [jnp.eye(4)] * 3
+        masks = [jnp.array([True, False, False, False])] * 3
+        assert float(similarity_index(c, masks)) == 1.0

@@ -1,0 +1,133 @@
+"""Property-based tests (hypothesis) for MSC invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    MSCConfig,
+    extract_cluster,
+    marginal_sums,
+    max_gap_init,
+    mode_slices,
+    normalized_eigrows,
+    similarity_matrix,
+    theorem_threshold,
+    trim_to_theorem,
+)
+
+CFG = MSCConfig(epsilon=1e-5, power_iters=40)
+
+dims = st.integers(min_value=8, max_value=24)
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def rand_tensor(seed, m1, m2, m3):
+    return jax.random.normal(jax.random.PRNGKey(seed), (m1, m2, m3))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=seeds, m=dims)
+def test_similarity_matrix_properties(seed, m):
+    """C is symmetric, entries in [0,1], diagonal = λ̃_i² ≤ 1."""
+    T = rand_tensor(seed, m, 12, 10)
+    v_rows, lam = normalized_eigrows(mode_slices(T, 0), CFG)
+    c = np.asarray(similarity_matrix(v_rows))
+    np.testing.assert_allclose(c, c.T, atol=1e-5)
+    assert (c >= -1e-5).all() and (c <= 1 + 1e-4).all()
+    lam_n = np.asarray(lam) / np.asarray(lam).max()
+    np.testing.assert_allclose(np.diag(c), lam_n**2, rtol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=seeds)
+def test_scale_invariance(seed):
+    """Scaling T by c>0 scales λ by c² but leaves normalized V, C, d as-is."""
+    T = rand_tensor(seed, 14, 11, 9)
+    v1, lam1 = normalized_eigrows(mode_slices(T, 0), CFG)
+    v2, lam2 = normalized_eigrows(mode_slices(3.7 * T, 0), CFG)
+    np.testing.assert_allclose(np.asarray(lam2), 3.7**2 * np.asarray(lam1),
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.abs(np.asarray(v1)), np.abs(np.asarray(v2)),
+                               atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=seeds, m=dims)
+def test_permutation_equivariance(seed, m):
+    """Permuting slice order permutes d (spectral analysis is per-slice)."""
+    T = rand_tensor(seed, m, 10, 12)
+    perm = np.asarray(jax.random.permutation(jax.random.PRNGKey(seed + 1), m))
+    d = np.asarray(marginal_sums(*_vrows(T)))
+    d_perm = np.asarray(marginal_sums(*_vrows(T[perm])))
+    np.testing.assert_allclose(d_perm, d[perm], rtol=1e-4, atol=1e-4)
+
+
+def _vrows(T):
+    v, _ = normalized_eigrows(mode_slices(T, 0), CFG)
+    return (v,)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=seeds, m=st.integers(min_value=4, max_value=40))
+def test_max_gap_nonempty_proper(seed, m):
+    """Max-gap init yields a non-empty proper subset (gap excludes the min)."""
+    d = jax.random.uniform(jax.random.PRNGKey(seed), (m,)) * 10
+    # ensure distinct values so 'proper' is well-defined
+    d = d + jnp.arange(m) * 1e-3
+    mask = np.asarray(max_gap_init(d))
+    assert 0 < mask.sum() < m
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=seeds, m=st.integers(min_value=4, max_value=40),
+       eps=st.floats(min_value=1e-10, max_value=1e-2))
+def test_trim_invariants(seed, m, eps):
+    """Trimming only removes elements; result satisfies the bound or is a
+    singleton; removed elements all have d below the survivors' min."""
+    d = jnp.asarray(np.random.RandomState(seed).rand(m) * 5)
+    init = max_gap_init(d)
+    mask, _ = trim_to_theorem(d, init, eps)
+    mask, init_np, d_np = np.asarray(mask), np.asarray(init), np.asarray(d)
+    assert (mask <= init_np).all()  # subset
+    l = mask.sum()
+    assert l >= 1
+    if l > 1:
+        spread = d_np[mask].max() - d_np[mask].min()
+        bound = float(theorem_threshold(float(l), m, eps))
+        assert spread <= bound + 1e-5
+    removed = init_np & ~mask
+    if removed.any() and mask.any():
+        assert d_np[removed].max() <= d_np[mask].min() + 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=seeds)
+def test_extraction_deterministic(seed):
+    """Same d ⇒ identical mask (required for replicated extraction)."""
+    d = jax.random.uniform(jax.random.PRNGKey(seed), (25,))
+    m1, _ = extract_cluster(d, 1e-5)
+    m2, _ = extract_cluster(d, 1e-5)
+    assert (np.asarray(m1) == np.asarray(m2)).all()
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=seeds)
+def test_padding_equivalence(seed):
+    """Appending zero slices (padding) with valid_mask=False leaves the
+    valid prefix of d and the extracted cluster unchanged."""
+    T = rand_tensor(seed, 12, 10, 11)
+    slices = mode_slices(T, 0)
+    v, _ = normalized_eigrows(slices, CFG)
+    d = marginal_sums(v)
+    pad = jnp.zeros((4,) + slices.shape[1:])
+    sp = jnp.concatenate([slices, pad])
+    valid = jnp.arange(16) < 12
+    vp, _ = normalized_eigrows(sp, CFG, valid)
+    dp = marginal_sums(vp, valid)
+    np.testing.assert_allclose(np.asarray(dp[:12]), np.asarray(d), rtol=1e-4,
+                               atol=1e-4)
+    mask, _ = extract_cluster(d, 1e-5)
+    maskp, _ = extract_cluster(dp, 1e-5, valid)
+    assert (np.asarray(maskp[:12]) == np.asarray(mask)).all()
+    assert not np.asarray(maskp[12:]).any()

@@ -1,0 +1,133 @@
+"""Roofline HLO-analyzer tests: parsing, trip counts, traffic model."""
+import textwrap
+
+import pytest
+
+from repro.roofline.hlo import analyze, parse_module, shape_bytes
+
+
+HLO = textwrap.dedent("""\
+    HloModule test, is_scheduled=true, num_partitions=8
+
+    %body (p: (s32[], f32[32,64])) -> (s32[], f32[32,64]) {
+      %p = (s32[], f32[32,64]{1,0}) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %x = f32[32,64]{1,0} get-tuple-element(%p), index=1
+      %w = f32[64,64]{1,0} constant({...})
+      %ag = f32[32,128]{1,0} all-gather(%x), channel_id=1, replica_groups=[2,4]<=[8], dimensions={1}
+      %d = f32[32,64]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %one = s32[] constant(1)
+      %i2 = s32[] add(%i, %one)
+      ROOT %t = (s32[], f32[32,64]{1,0}) tuple(%i2, %d)
+    }
+
+    %cond (p2: (s32[], f32[32,64])) -> pred[] {
+      %p2 = (s32[], f32[32,64]{1,0}) parameter(0)
+      %i3 = s32[] get-tuple-element(%p2), index=0
+      %n = s32[] constant(12)
+      ROOT %lt = pred[] compare(%i3, %n), direction=LT
+    }
+
+    ENTRY %main (a: f32[32,64]) -> f32[32,64] {
+      %a = f32[32,64]{1,0} parameter(0)
+      %zero = s32[] constant(0)
+      %t0 = (s32[], f32[32,64]{1,0}) tuple(%zero, %a)
+      %wh = (s32[], f32[32,64]{1,0}) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"12"}}
+      %r = f32[32,64]{1,0} get-tuple-element(%wh), index=1
+      %ar = f32[32,64]{1,0} all-reduce(%r), channel_id=2, replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%body
+      ROOT %out = f32[32,64]{1,0} copy(%ar)
+    }
+    """)
+
+
+class TestShapeBytes:
+    def test_simple(self):
+        assert shape_bytes("f32[32,64]{1,0}") == 32 * 64 * 4
+        assert shape_bytes("bf16[10]") == 20
+        assert shape_bytes("pred[7]") == 7
+        assert shape_bytes("f32[]") == 4
+
+    def test_tuple(self):
+        assert shape_bytes("(s32[], f32[8,8]{1,0})") == 4 + 256
+
+
+class TestAnalyze:
+    def test_trip_count_scaling(self):
+        an = analyze(HLO)
+        # dot: 2*32*64*64 flops, executed 12 times
+        assert an.flops_per_device == pytest.approx(12 * 2 * 32 * 64 * 64)
+        assert an.flops_unscaled == pytest.approx(2 * 32 * 64 * 64)
+        assert an.unknown_trip_counts == 0
+
+    def test_collectives(self):
+        an = analyze(HLO)
+        by = an.by_kind()
+        # in-loop all-gather: 12 executions, operand 8 KiB each
+        assert by["all-gather"]["count"] == 12
+        assert by["all-gather"]["operand_bytes"] == 12 * 32 * 64 * 4
+        # entry all-reduce once; explicit replica_groups of size 4
+        assert by["all-reduce"]["count"] == 1
+        ar = [c for c in an.collectives if c.kind == "all-reduce"][0]
+        assert ar.group_size == 4
+        # ring model: AR moves 2*(g-1)/g * bytes
+        assert ar.link_bytes == pytest.approx(2 * 0.75 * 32 * 64 * 4)
+
+    def test_num_partitions(self):
+        an = analyze(HLO)
+        assert an.num_partitions == 8
+
+    def test_trip_count_fallback_from_condition(self):
+        text = HLO.replace(', backend_config={"known_trip_count":{"n":"12"}}',
+                           "")
+        an = analyze(text)
+        assert an.flops_per_device == pytest.approx(12 * 2 * 32 * 64 * 64)
+
+    def test_parse_module_entry(self):
+        comps, entry, n = parse_module(HLO)
+        assert entry == "main"
+        assert "body" in comps and "cond" in comps
+
+
+class TestCompiledEndToEnd:
+    def test_scan_flops_counted(self, subproc):
+        out = subproc("""
+import jax, jax.numpy as jnp
+from repro.roofline.hlo import analyze
+def f(x, w):
+    def body(c, _):
+        return jnp.tanh(c @ w), None
+    y, _ = jax.lax.scan(body, x, None, length=7)
+    return y.sum()
+x = jax.ShapeDtypeStruct((16, 32), jnp.float32)
+w = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+an = analyze(jax.jit(f).lower(x, w).compile().as_text())
+expect = 7 * 2 * 16 * 32 * 32
+assert abs(an.flops_per_device - expect) / expect < 0.05, an.flops_per_device
+print("OK")
+""", 1)
+        assert "OK" in out
+
+
+class TestRooflineReport:
+    def test_report_terms(self, subproc):
+        out = subproc("""
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.roofline import report_from_compiled
+mesh = jax.make_mesh((4,), ("model",))
+f = jax.jit(lambda a, b: a @ b,
+            in_shardings=(NamedSharding(mesh, P(None, "model")),
+                          NamedSharding(mesh, P("model", None))),
+            out_shardings=NamedSharding(mesh, P()))
+a = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+b = jax.ShapeDtypeStruct((256, 128), jnp.float32)
+rep = report_from_compiled(f.lower(a, b).compile(), arch="t", shape_name="s",
+                           mesh_name="4", chips=4, model_fl=2*128*256*128)
+assert rep.compute_s > 0 and rep.memory_s > 0
+assert rep.dominant in ("compute", "memory", "collective")
+# contraction dim sharded → psum of the (128,128) output
+assert rep.collective_link_s > 0
+assert 0.5 < rep.flops_ratio <= 1.5, rep.flops_ratio
+print("OK")
+""", 4)
+        assert "OK" in out
