@@ -52,17 +52,36 @@ def run(full: bool = False) -> List[Dict]:
                  "flops": 2.0 * b * 4 * b * c,
                  "vmem_tile_kib": (b * c + 4 * b * c) * 4 / 1024})
 
-    # fused matrix-free power iteration
+    # fused matrix-free power iteration (fixed-count kernel vs oracle)
     from repro.core.power_iter import _init_vectors
 
     v0 = _init_vectors(b, c, jnp.float32)
-    lam_k, v_k = ops.power_iterate_matrix_free(x, n_iters=20, interpret=True)
+    lam_k, v_k, _ = ops.power_iterate_matrix_free(x, n_iters=20,
+                                                  interpret=True)
     lam_r, v_r = ref.power_iterate(x, v0, n_iters=20)
     t = time_fn(jax.jit(lambda x: ref.power_iterate(x, v0, 20)), x)
     rows.append({"kernel": "power_iter", "shape": f"{b}x{r}x{c}",
                  "max_err": _maxerr(lam_k, lam_r),
                  "ref_ms": t["median_s"] * 1e3,
                  "flops": 20 * 4.0 * b * r * c,
+                 "vmem_tile_kib": (r * c + 2 * c) * 4 / 1024})
+
+    # adaptive power iteration: FLOPs use the *realized* sweep count, not
+    # a hard-coded cap — the number the roofline actually pays (§7.3).
+    from repro.core.power_iter import power_iteration_matrix_free
+
+    lam_a, v_a, iters_a = ops.power_iterate_matrix_free(
+        x, n_iters=60, tol=1e-2, check_every=6, interpret=True)
+    lam_o, v_o, iters_o = ref.power_iterate_adaptive(x, v0, 60, 1e-2, 6)
+    iters_a = int(iters_a)
+    t = time_fn(lambda x: power_iteration_matrix_free(
+        x, n_iters=60, tol=1e-2, check_every=6), x)
+    rows.append({"kernel": "power_iter_adaptive", "shape": f"{b}x{r}x{c}",
+                 "max_err": _maxerr(lam_a, lam_o),
+                 "ref_ms": t["median_s"] * 1e3,
+                 "iters_run": iters_a, "iters_cap": 60,
+                 "iters_match_oracle": iters_a == iters_o,
+                 "flops": iters_a * 4.0 * b * r * c,
                  "vmem_tile_kib": (r * c + 2 * c) * 4 / 1024})
 
     # flash attention

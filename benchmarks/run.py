@@ -5,10 +5,12 @@
   fig6_data_scaling   paper Fig. 6/7 (time vs data size, measured+projected)
   fig8_comm           paper Fig. 8  (per-collective communication breakdown)
   kernel_bench        (new) Pallas kernels vs jnp oracles
+  power_iter_bench    (new) adaptive vs fixed-60 eigensolver (DESIGN.md §7.3)
 
 Usage:
   PYTHONPATH=src python -m benchmarks.run            # CPU-feasible sizes
   PYTHONPATH=src python -m benchmarks.run --full     # paper-scale sizes
+  PYTHONPATH=src python -m benchmarks.run --quick    # CI smoke subset
   PYTHONPATH=src python -m benchmarks.run --only fig4_quality,kernel_bench
 
 Rows are printed as CSV and saved to experiments/bench/<name>.json.
@@ -23,18 +25,26 @@ import traceback
 from .common import print_rows, save_rows
 
 ALL = ("fig4_quality", "fig5_strong_scaling", "fig6_data_scaling",
-       "fig8_comm", "kernel_bench")
+       "fig8_comm", "kernel_bench", "power_iter_bench")
+QUICK = ("power_iter_bench", "kernel_bench")
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (pod-scale runtime)")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke subset (perf-trajectory benches only)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of benches")
     args = ap.parse_args(argv)
 
-    names = args.only.split(",") if args.only else list(ALL)
+    if args.only:
+        names = args.only.split(",")
+    elif args.quick:
+        names = list(QUICK)
+    else:
+        names = list(ALL)
     failures = []
     for name in names:
         t0 = time.time()

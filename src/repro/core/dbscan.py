@@ -59,8 +59,8 @@ def msc_dbscan_mode(tensor, mode: int, cfg: MSCConfig,
                     eps: float = 0.5, min_samples: int = 3) -> Tuple[np.ndarray, np.ndarray]:
     """Multi-cluster MSC for one mode.  Returns (labels (m,), C (m,m))."""
     slices = mode_slices(tensor, mode)
-    v_rows, _ = normalized_eigrows(slices, cfg)
-    c = np.asarray(similarity_matrix(v_rows))
+    v_rows, _, _ = normalized_eigrows(slices, cfg)
+    c = np.asarray(similarity_matrix(v_rows, cfg.precision))
     return dbscan_from_similarity(c, eps, min_samples), c
 
 

@@ -35,33 +35,37 @@ def normalized_eigrows(
     slices: jax.Array,
     cfg: MSCConfig,
     valid_mask: Optional[jax.Array] = None,
-) -> Tuple[jax.Array, jax.Array]:
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Rows λ̃_i ṽ_i of the normalized matrix V (paper's columns).
 
-    Returns (V (m, c), lambdas (m,)).  Padded slices (valid_mask False)
-    get zero rows and are excluded from the λ_max normalization.
+    Returns (V (m, c), lambdas (m,), power_iters_run ()).  Padded slices
+    (valid_mask False) get zero rows and are excluded from the λ_max
+    normalization, which is always performed in fp32.
     """
-    lam, vec = top_eigenpairs(
-        slices, n_iters=cfg.power_iters, matrix_free=cfg.matrix_free,
-        use_kernel=cfg.use_kernels,
-    )
+    lam, vec, p_iters = top_eigenpairs(slices, cfg)
     if valid_mask is not None:
         lam = jnp.where(valid_mask, lam, 0.0)
     lam_max = jnp.maximum(jnp.max(lam), 1e-30)
     v_rows = (lam / lam_max)[:, None] * vec
     if valid_mask is not None:
         v_rows = jnp.where(valid_mask[:, None], v_rows, 0.0)
-    return v_rows, lam
+    return v_rows, lam, p_iters
 
 
-def similarity_matrix(v_rows: jax.Array) -> jax.Array:
+def similarity_matrix(v_rows: jax.Array, precision: str = "fp32") -> jax.Array:
     """C = |V Vᵀ| (paper's C = |VᵀV| in our row-major storage)."""
-    return jnp.abs(v_rows @ v_rows.T)
+    from .power_iter import compute_dtype
+
+    dt = compute_dtype(precision)
+    prod = jnp.einsum("ic,jc->ij", v_rows.astype(dt), v_rows.astype(dt),
+                      preferred_element_type=jnp.float32)
+    return jnp.abs(prod)
 
 
-def marginal_sums(v_rows: jax.Array, valid_mask: Optional[jax.Array] = None) -> jax.Array:
+def marginal_sums(v_rows: jax.Array, valid_mask: Optional[jax.Array] = None,
+                  precision: str = "fp32") -> jax.Array:
     """d_i = Σ_j c_ij.  Padded columns contribute zero rows in V already."""
-    c = similarity_matrix(v_rows)
+    c = similarity_matrix(v_rows, precision)
     if valid_mask is not None:
         c = jnp.where(valid_mask[None, :], c, 0.0)
     return jnp.sum(c, axis=1)
@@ -73,12 +77,13 @@ def cluster_mode_slices(
     valid_mask: Optional[jax.Array] = None,
 ) -> ModeResult:
     """Cluster one mode given its slice-major tensor (m, r, c)."""
-    v_rows, lam = normalized_eigrows(slices, cfg, valid_mask)
-    d = marginal_sums(v_rows, valid_mask)
+    v_rows, lam, p_iters = normalized_eigrows(slices, cfg, valid_mask)
+    d = marginal_sums(v_rows, valid_mask, cfg.precision)
     mask, n_iters = extract_cluster(
         d, cfg.epsilon, valid_mask, cfg.max_extraction_iters
     )
-    return ModeResult(mask=mask, d=d, lambdas=lam, n_iters=n_iters)
+    return ModeResult(mask=mask, d=d, lambdas=lam, n_iters=n_iters,
+                      power_iters_run=p_iters)
 
 
 @partial(jax.jit, static_argnames=("cfg",))
@@ -95,6 +100,6 @@ def msc_similarity_matrices(tensor: jax.Array, cfg: MSCConfig):
     """Per-mode similarity matrices C (for the paper's sim metric, Eq. 6)."""
     out = []
     for j in range(3):
-        v_rows, _ = normalized_eigrows(mode_slices(tensor, j), cfg)
-        out.append(similarity_matrix(v_rows))
+        v_rows, _, _ = normalized_eigrows(mode_slices(tensor, j), cfg)
+        out.append(similarity_matrix(v_rows, cfg.precision))
     return tuple(out)

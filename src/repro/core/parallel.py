@@ -34,7 +34,8 @@ from typing import Optional, Sequence, Tuple, Union
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+from repro.compat import shard_map
 
 from .extraction import extract_cluster
 from .msc import MODE_PERMS, mode_slices
@@ -67,6 +68,10 @@ def _mode_local(
     block: (b, r, c) — this device's slice block of one mode's unfolding.
     valid_local: bool (b,) — False on padding slices.
     axis_name: mesh axes the collectives run over (the "group communicator").
+      The adaptive eigensolver's convergence gate pmax-reduces its residual
+      maxima over this axis, so every group member runs the same number of
+      sweeps (lockstep exit — padding slices are all-zero and contribute
+      zero residual, hence never delay the gate).
     vary_axes: all mesh axes the data varies over (defaults to axis_name;
       the grouped schedule additionally varies over the "mode" axis).
     Returns (d_local (b,), lam_local (b,)) — this device's shard of d, λ.
@@ -75,25 +80,29 @@ def _mode_local(
         vary = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
     else:
         vary = tuple(vary_axes)
-    lam, vec = top_eigenpairs(
-        block, n_iters=cfg.power_iters, matrix_free=cfg.matrix_free,
-        use_kernel=cfg.use_kernels, vary_axes=vary,
-    )
+    lam, vec, _ = top_eigenpairs(block, cfg, vary_axes=vary,
+                                 axis_name=axis_name)
     lam = jnp.where(valid_local, lam, 0.0)
-    # MPI_Allreduce(λ, MAX) over the group
+    # MPI_Allreduce(λ, MAX) over the group — fp32 regardless of precision
     lam_max = jax.lax.pmax(jnp.max(lam), axis_name)
     v_local = (lam / jnp.maximum(lam_max, 1e-30))[:, None] * vec
     v_local = jnp.where(valid_local[:, None], v_local, 0.0)
     # MPI_Allgatherv(M) over the group → full V on every group member
     v_full = jax.lax.all_gather(v_local, axis_name, axis=0, tiled=True)
+    from .power_iter import compute_dtype
+
+    dt = compute_dtype(cfg.precision)
     if cfg.use_kernels:
         from repro.kernels import ops as kops
 
-        d_local = kops.similarity_rowsum(v_local, v_full)
+        d_local = kops.similarity_rowsum(v_local.astype(dt),
+                                         v_full.astype(dt))
     else:
         # row-block of C = |V Vᵀ| and its row sums; padded columns are zero
         # rows of V and contribute nothing.
-        c_local = jnp.abs(v_local @ v_full.T)  # (b, m_pad)
+        c_local = jnp.abs(jnp.einsum("ic,jc->ij", v_local.astype(dt),
+                                     v_full.astype(dt),
+                                     preferred_element_type=jnp.float32))
         d_local = jnp.sum(c_local, axis=1)
     d_local = jnp.where(valid_local, d_local, 0.0)
     return d_local, lam

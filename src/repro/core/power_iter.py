@@ -13,13 +13,46 @@ C_i = T_iᵀT_i with power iteration.  Two paths:
 
 All slices on a device are processed as one batched einsum so the MXU
 sees large matmuls rather than a per-slice loop.
+
+Adaptive convergence gating (DESIGN.md §7.3): when `tol > 0` the fixed
+trip count becomes a *cap*.  Every `check_every` sweeps the solver
+measures the λ-weighted Rayleigh residual
+
+    max_i  (‖C_i v_i − λ_i v_i‖ / max(λ_i, 1)) · λ_i / λ_max
+
+and exits once it drops below `tol`.  The λ/λ_max weighting matches how
+eigenvectors actually enter MSC: row i of the normalized matrix V is
+(λ_i/λ_max)·v_i, so an unconverged direction in a small-λ noise slice
+perturbs the similarity sums proportionally less.  High-gap planted
+slices converge in ~10 sweeps; the weighting keeps slow Wishart noise
+slices from pinning every solve at the cap.  Both reductions are exact
+maxima, so the parallel schedules reproduce them with `lax.pmax` over
+the group axis (all group members take the same trip count — the
+lockstep contract of tests/test_msc_parallel.py).
+
+Mixed precision (DESIGN.md §7.3): `precision="bf16_fp32"` runs the
+T v / Tᵀ(T v) einsums with bf16 operands and fp32 accumulation
+(`preferred_element_type`); normalization, the convergence gate, and the
+final Rayleigh quotient stay in fp32.
 """
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+PRECISIONS = ("fp32", "bf16_fp32")
+
+
+def compute_dtype(precision: str):
+    """Operand dtype of the precision policy ("fp32" | "bf16_fp32")."""
+    if precision == "fp32":
+        return jnp.float32
+    if precision == "bf16_fp32":
+        return jnp.bfloat16
+    raise ValueError(f"unknown precision {precision!r}; expected {PRECISIONS}")
 
 
 def _init_vectors(batch: int, dim: int, dtype=jnp.float32) -> jax.Array:
@@ -39,79 +72,168 @@ def _normalize(v, eps=1e-30):
 def _maybe_pvary(v, vary_axes):
     """Mark the loop-carry init as device-varying inside shard_map.
 
-    shard_map's vma tracking requires the fori_loop carry to keep the same
+    shard_map's vma tracking requires the loop carry to keep the same
     varying-axes type as the body output; the deterministic init is
     replicated, so callers running under shard_map pass their mesh axes."""
     if vary_axes:
+        from repro.compat import pvary
+
         axes = (vary_axes,) if isinstance(vary_axes, str) else tuple(vary_axes)
-        return jax.lax.pvary(v, axes)
+        return pvary(v, axes)
     return v
 
 
-@partial(jax.jit, static_argnames=("n_iters", "vary_axes"))
+def convergence_gate(lam: jax.Array, resid: jax.Array, tol: float,
+                     axis_name=None) -> jax.Array:
+    """True once every slice's λ-weighted residual is below tol.
+
+    lam: (b,) Rayleigh quotients; resid: (b,) ‖C v − λ v‖ per slice.
+    Under shard_map, axis_name reduces both maxima over the group axis so
+    all devices reach the same verdict (collective-safe lockstep exit).
+    """
+    weighted = jnp.max(resid / jnp.maximum(lam, 1.0) * lam)
+    lam_max = jnp.max(lam)
+    if axis_name is not None:
+        weighted = jax.lax.pmax(weighted, axis_name)
+        lam_max = jax.lax.pmax(lam_max, axis_name)
+    return weighted <= tol * jnp.maximum(lam_max, 1e-30)
+
+
+def _run_adaptive(matvec, v, n_iters: int, tol: float, check_every: int,
+                  axis_name, vary_axes):
+    """Shared driver: fixed fori_loop when tol<=0, gated while_loop else.
+
+    matvec(v) must return the *unnormalized* image C v in fp32.
+    Returns (v, iters_run).  With tol>0 the cap rounds up to a multiple
+    of check_every (identical semantics to the chunked kernel path).
+    """
+    def step(_, v):
+        return _normalize(matvec(v))
+
+    if tol <= 0.0:
+        v = jax.lax.fori_loop(0, n_iters, step, v)
+        return v, jnp.int32(n_iters)
+
+    k = max(1, min(check_every, n_iters))
+
+    def cond(state):
+        _, it, done = state
+        return (~done) & (it < n_iters)
+
+    def chunk(state):
+        v, it, _ = state
+        v = jax.lax.fori_loop(0, k - 1, step, v)
+        # final sweep of the chunk doubles as the residual probe: w = C v
+        # is both the convergence measurement and the next iterate.
+        w = matvec(v)
+        lam = jnp.sum(w * v, axis=-1)  # Rayleigh quotient (v is unit)
+        resid = jnp.linalg.norm(w - lam[:, None] * v, axis=-1)
+        done = convergence_gate(lam, resid, tol, axis_name)
+        return _normalize(w), it + k, done
+
+    init = (v, _maybe_pvary(jnp.int32(0), vary_axes),
+            _maybe_pvary(jnp.bool_(False), vary_axes))
+    v, iters, _ = jax.lax.while_loop(cond, chunk, init)
+    return v, iters
+
+
+@partial(jax.jit, static_argnames=("n_iters", "tol", "check_every",
+                                   "precision", "vary_axes", "axis_name"))
 def power_iteration_matrix_free(slices: jax.Array, n_iters: int = 60,
-                                vary_axes=None):
+                                tol: float = 0.0, check_every: int = 6,
+                                precision: str = "fp32",
+                                vary_axes=None, axis_name=None):
     """Top eigenpair of T_iᵀT_i for a batch of slices, without forming C_i.
 
-    slices: (b, r, c).  Returns (lambdas (b,), vectors (b, c)).
-    λ_i = ‖T_i v_i‖² is the Rayleigh quotient of C_i at the converged v_i.
+    slices: (b, r, c).  Returns (lambdas (b,), vectors (b, c), iters ()).
+    λ_i = ‖T_i v_i‖² is the fp32 Rayleigh quotient of C_i at the final v_i
+    regardless of the precision policy.
     """
     b, r, c = slices.shape
-    v = _maybe_pvary(_init_vectors(b, c, slices.dtype), vary_axes)
+    dt = compute_dtype(precision)
+    s = slices.astype(dt)
 
-    def step(_, v):
-        tv = jnp.einsum("brc,bc->br", slices, v)  # T v
-        w = jnp.einsum("brc,br->bc", slices, tv)  # Tᵀ(T v)
-        return _normalize(w)
+    def matvec(v):
+        tv = jnp.einsum("brc,bc->br", s, v.astype(dt),
+                        preferred_element_type=jnp.float32)
+        return jnp.einsum("brc,br->bc", s, tv.astype(dt),
+                          preferred_element_type=jnp.float32)
 
-    v = jax.lax.fori_loop(0, n_iters, step, v)
-    tv = jnp.einsum("brc,bc->br", slices, v)
+    v = _maybe_pvary(_init_vectors(b, c, jnp.float32), vary_axes)
+    v, iters = _run_adaptive(matvec, v, n_iters, tol, check_every,
+                             axis_name, vary_axes)
+    tv = jnp.einsum("brc,bc->br", slices.astype(jnp.float32), v)
     lam = jnp.sum(tv * tv, axis=-1)
-    return lam, v
+    return lam, v, iters
 
 
-@partial(jax.jit, static_argnames=("n_iters", "use_kernel", "vary_axes"))
+@partial(jax.jit, static_argnames=("n_iters", "tol", "check_every",
+                                   "precision", "use_kernel", "vary_axes",
+                                   "axis_name"))
 def power_iteration_gram(slices: jax.Array, n_iters: int = 60,
-                         use_kernel: bool = False, vary_axes=None):
+                         tol: float = 0.0, check_every: int = 6,
+                         precision: str = "fp32", use_kernel: bool = False,
+                         vary_axes=None, axis_name=None):
     """Paper-faithful path: form C_i = T_iᵀT_i explicitly, then iterate.
 
-    slices: (b, r, c).  Returns (lambdas (b,), vectors (b, c)).
+    slices: (b, r, c).  Returns (lambdas (b,), vectors (b, c), iters ()).
+    The gram is always accumulated and stored in fp32; under bf16_fp32
+    the formation and iteration *operands* are bf16.
     """
+    dt = compute_dtype(precision)
     if use_kernel:
         from repro.kernels import ops as kops
 
-        gram = kops.batched_gram(slices)
+        gram = kops.batched_gram(slices.astype(dt), out_dtype=jnp.float32)
     else:
-        gram = jnp.einsum("brc,brd->bcd", slices, slices)
-    return power_iteration_on_gram(gram, n_iters=n_iters, vary_axes=vary_axes)
+        gram = jnp.einsum("brc,brd->bcd", slices.astype(dt),
+                          slices.astype(dt),
+                          preferred_element_type=jnp.float32)
+    return power_iteration_on_gram(gram, n_iters=n_iters, tol=tol,
+                                   check_every=check_every,
+                                   precision=precision, vary_axes=vary_axes,
+                                   axis_name=axis_name)
 
 
-@partial(jax.jit, static_argnames=("n_iters", "vary_axes"))
-def power_iteration_on_gram(gram: jax.Array, n_iters: int = 60, vary_axes=None):
+@partial(jax.jit, static_argnames=("n_iters", "tol", "check_every",
+                                   "precision", "vary_axes", "axis_name"))
+def power_iteration_on_gram(gram: jax.Array, n_iters: int = 60,
+                            tol: float = 0.0, check_every: int = 6,
+                            precision: str = "fp32", vary_axes=None,
+                            axis_name=None):
     """Power iteration given precomputed covariance matrices (b, c, c)."""
     b, c, _ = gram.shape
-    v = _maybe_pvary(_init_vectors(b, c, gram.dtype), vary_axes)
+    dt = compute_dtype(precision)
+    g = gram.astype(dt)
 
-    def step(_, v):
-        return _normalize(jnp.einsum("bcd,bd->bc", gram, v))
+    def matvec(v):
+        return jnp.einsum("bcd,bd->bc", g, v.astype(dt),
+                          preferred_element_type=jnp.float32)
 
-    v = jax.lax.fori_loop(0, n_iters, step, v)
-    lam = jnp.einsum("bc,bcd,bd->b", v, gram, v)
-    return lam, v
+    v = _maybe_pvary(_init_vectors(b, c, jnp.float32), vary_axes)
+    v, iters = _run_adaptive(matvec, v, n_iters, tol, check_every,
+                             axis_name, vary_axes)
+    lam = jnp.einsum("bc,bcd,bd->b", v, gram.astype(jnp.float32), v)
+    return lam, v, iters
 
 
-def top_eigenpairs(slices: jax.Array, n_iters: int = 60, matrix_free: bool = True,
-                   use_kernel: bool = False, vary_axes=None):
-    """Dispatch between the two paths (cfg.matrix_free selects)."""
-    if matrix_free:
-        if use_kernel:
+def top_eigenpairs(slices: jax.Array, cfg, vary_axes=None, axis_name=None):
+    """Dispatch on MSCConfig: matrix_free/use_kernels select the path;
+    power_tol/power_check_every/precision configure the solver.
+
+    Returns (lambdas (b,), vectors (b, c), iters ()) — iters is the
+    realized sweep count (== cfg.power_iters when the gate never fires).
+    """
+    kw = dict(n_iters=cfg.power_iters, tol=cfg.power_tol,
+              check_every=cfg.power_check_every, precision=cfg.precision,
+              vary_axes=vary_axes, axis_name=axis_name)
+    if cfg.matrix_free:
+        if cfg.use_kernels:
             from repro.kernels import ops as kops
 
-            return kops.power_iterate_matrix_free(slices, n_iters,
-                                                  vary_axes=vary_axes)
-        return power_iteration_matrix_free(slices, n_iters, vary_axes=vary_axes)
-    return power_iteration_gram(slices, n_iters, use_kernel=use_kernel,
-                                vary_axes=vary_axes)
+            return kops.power_iterate_matrix_free(slices, **kw)
+        return power_iteration_matrix_free(slices, **kw)
+    return power_iteration_gram(slices, use_kernel=cfg.use_kernels, **kw)
 
 
 def rayleigh_residual(slices: jax.Array, lam: jax.Array, v: jax.Array):

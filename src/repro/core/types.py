@@ -21,8 +21,24 @@ class MSCConfig:
     Attributes:
       epsilon: similarity threshold (paper's ε). Theorem II.1 requires
         sqrt(ε) ≤ 1/(m - l) for exact recovery guarantees.
-      power_iters: fixed number of power-iteration steps per slice
-        (static control flow; 60 is ample for the paper's planted model).
+      power_iters: cap on power-iteration sweeps per slice (static
+        control flow; 60 is ample for the paper's planted model).
+      power_tol: λ-weighted Rayleigh-residual tolerance for the adaptive
+        convergence gate (DESIGN.md §7.3).  The solver exits early once
+        every slice satisfies (‖C v − λ v‖/max(λ,1))·λ/λ_max ≤ power_tol;
+        high-gap planted problems finish in ~10 sweeps instead of the
+        power_iters cap.  0.0 disables the gate (exact fixed-trip-count
+        seed behavior).  With the gate on, the cap rounds up to a
+        multiple of power_check_every.
+      power_check_every: sweeps between residual checks.  The probe
+        reuses the chunk's final matvec, so its marginal cost is a few
+        vector ops — but each check is a sync point for the parallel
+        schedules, hence not every sweep.
+      precision: "fp32" (default) or "bf16_fp32" — the latter runs the
+        T v / Tᵀ(T v) / gram / similarity contractions with bf16 operands
+        and fp32 accumulation (2× MXU throughput, half the eigensolve HBM
+        traffic on TPU); λ-normalization, the convergence gate, and the
+        final Rayleigh quotients stay fp32.
       matrix_free: if True, iterate v ← Tᵀ(T v) without forming the m3×m3
         covariance (beyond-paper optimization).  If False, form
         C_i = T_iᵀT_i explicitly — the paper-faithful baseline.
@@ -34,6 +50,9 @@ class MSCConfig:
 
     epsilon: float = 1e-6
     power_iters: int = 60
+    power_tol: float = 1e-2
+    power_check_every: int = 6
+    precision: str = "fp32"
     matrix_free: bool = True
     max_extraction_iters: int = 0  # 0 → use m (set at call time)
     use_kernels: bool = False
@@ -52,15 +71,21 @@ class ModeResult:
       d: float[m] — marginal similarity sums (paper's d vector).
       lambdas: float[m] — top eigenvalue per slice (unnormalized).
       n_iters: int — extraction iterations executed until convergence.
+      power_iters_run: int — realized power-iteration sweeps (< cfg.power_iters
+        when the adaptive gate fired early).  Populated by the sequential
+        path; None from the parallel schedules (the counter lives inside
+        shard_map there and is not gathered).
     """
 
     mask: jax.Array
     d: jax.Array
     lambdas: jax.Array
     n_iters: jax.Array
+    power_iters_run: Optional[jax.Array] = None
 
     def tree_flatten(self):
-        return (self.mask, self.d, self.lambdas, self.n_iters), None
+        return (self.mask, self.d, self.lambdas, self.n_iters,
+                self.power_iters_run), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):

@@ -25,8 +25,8 @@ def _gram_kernel(t1_ref, t2_ref, o_ref):
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    a = t1_ref[0].astype(jnp.float32)  # (block_r, block_ci)
-    b = t2_ref[0].astype(jnp.float32)  # (block_r, block_cj)
+    a = t1_ref[0]  # (block_r, block_ci), native operand dtype (fp32 or bf16)
+    b = t2_ref[0]  # (block_r, block_cj)
     o_ref[0, :, :] += jax.lax.dot_general(
         a, b, (((0,), (0,)), ((), ())),  # contract rows: aᵀ·b
         preferred_element_type=jnp.float32,
@@ -34,10 +34,18 @@ def _gram_kernel(t1_ref, t2_ref, o_ref):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("block_r", "block_c", "interpret"))
+                   static_argnames=("block_r", "block_c", "out_dtype",
+                                    "interpret"))
 def batched_gram(slices: jax.Array, *, block_r: int = 256, block_c: int = 128,
-                 interpret: bool = False) -> jax.Array:
-    """(b, r, c) → (b, c, c), accumulated in fp32, cast back to input dtype."""
+                 out_dtype=None, interpret: bool = False) -> jax.Array:
+    """(b, r, c) → (b, c, c), accumulated in fp32.
+
+    Contractions run in the input's operand dtype (bf16 inputs → bf16 MXU
+    passes under the mixed-precision policy) with fp32 accumulation.
+    out_dtype: result dtype; defaults to the input dtype.  The adaptive
+    eigensolver requests fp32 so bf16-operand grams keep their fp32
+    accumulation downstream.
+    """
     b, r, c = slices.shape
     block_r = min(block_r, r)
     block_c = min(block_c, c)
@@ -62,4 +70,4 @@ def batched_gram(slices: jax.Array, *, block_r: int = 256, block_c: int = 128,
         out_shape=jax.ShapeDtypeStruct((b, cp, cp), jnp.float32),
         interpret=interpret,
     )(slices, slices)
-    return out[:, :c, :c].astype(slices.dtype)
+    return out[:, :c, :c].astype(out_dtype or slices.dtype)

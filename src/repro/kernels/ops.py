@@ -27,11 +27,12 @@ def _interpret_default() -> bool:
 
 
 def batched_gram(slices: jax.Array, *, interpret: bool | None = None,
-                 block_r: int = 256, block_c: int = 128) -> jax.Array:
+                 block_r: int = 256, block_c: int = 128,
+                 out_dtype=None) -> jax.Array:
     """Pallas batched slice covariance C_i = T_iᵀT_i (see gram.py)."""
     interpret = _interpret_default() if interpret is None else interpret
     return _gram.batched_gram(slices, block_r=block_r, block_c=block_c,
-                              interpret=interpret)
+                              out_dtype=out_dtype, interpret=interpret)
 
 
 def similarity_rowsum(v_local: jax.Array, v_full: jax.Array, *,
@@ -41,21 +42,57 @@ def similarity_rowsum(v_local: jax.Array, v_full: jax.Array, *,
     return _sim.similarity_rowsum(v_local, v_full, interpret=interpret)
 
 
-def power_iterate_matrix_free(slices: jax.Array, n_iters: int,
-                              vary_axes=None, *,
+def power_iterate_matrix_free(slices: jax.Array, n_iters: int = 60,
+                              tol: float = 0.0, check_every: int = 6,
+                              precision: str = "fp32", vary_axes=None,
+                              axis_name=None, *, block_r: int = 256,
                               interpret: bool | None = None):
-    """Fused VMEM-resident power iteration (see power_iter.py).
+    """Fused r-tiled power iteration (see power_iter.py), adaptive-capable.
 
-    Matches repro.core.power_iter's deterministic init so the kernel path
-    is drop-in for MSCConfig.use_kernels=True.  (vary_axes accepted for
-    API parity; pallas_call output is already device-varying.)
+    Matches repro.core.power_iter's deterministic init and convergence
+    gate so the kernel path is drop-in for MSCConfig.use_kernels=True:
+    when tol > 0, the kernel runs in check_every-sweep chunks inside a
+    lax.while_loop, each chunk emitting the fp32 Rayleigh quotient and
+    residual that feed the shared λ-weighted gate (pmax-reduced over
+    axis_name under shard_map — same lockstep exit as the jnp path).
+    Returns (lam (b,), v (b, c), iters ()); λ is always a final fp32
+    Rayleigh quotient, regardless of the operand precision policy.
     """
-    from repro.core.power_iter import _init_vectors
+    from repro.core.power_iter import (_init_vectors, _maybe_pvary,
+                                       compute_dtype, convergence_gate)
 
     interpret = _interpret_default() if interpret is None else interpret
     b, r, c = slices.shape
-    v0 = _init_vectors(b, c, jnp.float32)
-    return _pi.power_iterate(slices, v0, n_iters, interpret=interpret)
+    s = slices.astype(compute_dtype(precision))
+    v0 = _maybe_pvary(_init_vectors(b, c, jnp.float32), vary_axes)
+
+    def _fp32_rayleigh(v):
+        tv = jnp.einsum("brc,bc->br", slices.astype(jnp.float32), v)
+        return jnp.sum(tv * tv, axis=-1)
+
+    if tol <= 0.0:
+        lam, v = _pi.power_iterate(s, v0, n_iters, block_r=block_r,
+                                   interpret=interpret)
+        if precision != "fp32":
+            lam = _fp32_rayleigh(v)
+        return lam, v, jnp.int32(n_iters)
+
+    k = max(1, min(check_every, n_iters))
+
+    def cond(state):
+        _, it, done = state
+        return (~done) & (it < n_iters)
+
+    def body(state):
+        v, it, _ = state
+        v, lam, resid = _pi.power_iterate_chunk(s, v, k, block_r=block_r,
+                                                interpret=interpret)
+        return v, it + k, convergence_gate(lam, resid, tol, axis_name)
+
+    init = (v0, _maybe_pvary(jnp.int32(0), vary_axes),
+            _maybe_pvary(jnp.bool_(False), vary_axes))
+    v, iters, _ = jax.lax.while_loop(cond, body, init)
+    return _fp32_rayleigh(v), v, iters
 
 
 def flash_attention(q, k, v, *, causal=True, scale=None, q_offset=0,

@@ -1,18 +1,35 @@
-"""Pallas TPU kernel: fused matrix-free power iteration.
+"""Pallas TPU kernel: fused matrix-free power iteration, r-tiled.
 
 The beyond-paper eigensolver (DESIGN.md §7.1) iterates v ← Tᵀ(T v)
 without forming the gram matrix.  Expressed in plain jnp, each iteration
 re-reads the slice T from HBM (2·r·c·4 B per iteration, arithmetic
-intensity ≈ 1 MAC/byte — hopelessly memory-bound).  This kernel pins one
-slice in VMEM for the *entire* iteration loop, so HBM traffic drops from
-`n_iters × slice` to `1 × slice`, turning the eigensolve compute-bound:
+intensity ≈ 1 MAC/byte — hopelessly memory-bound).  This kernel keeps the
+iteration state (v and the w = Tᵀ(T v) accumulator) VMEM-resident and
+streams the slice through VMEM in r-tiles:
 
-  grid = (b,)  — one step per slice
-  block = full (r × c) slice in VMEM (paper sizes: 1000×1000 fp32 = 4 MB)
-  loop  = lax.fori_loop over n_iters, two MXU matvecs + rsqrt normalize.
+  grid  = (b, n_steps, nr)  — slice × sweep × r-tile, r-tile innermost
+  block = (block_r × c) tile of T; v/w/λ blocks are indexed by slice
+          only, so they stay resident across the whole (sweep, tile)
+          subgrid (same revisiting trick as the gram kernel).
 
-v is carried as a (1, c) row vector so every intermediate stays 2-D
-(TPU vregs are (8×128) tiles; 1-D vectors would relayout every op).
+For slices that fit VMEM (nr == 1) the T block index is constant across
+sweeps, so Pallas fetches the slice from HBM exactly once — the original
+whole-slice-resident schedule falls out as the special case.  For
+paper-scale r (1000+) the slice streams tile-by-tile each sweep instead
+of requiring whole-slice residency (DESIGN.md §7.3).
+
+Per r-tile and sweep, two MXU contractions in the *operand dtype of the
+input* (fp32, or bf16 under the mixed-precision policy) with fp32
+accumulation:   tv_tile = v Tᵏᵀ   then   w += tv_tile Tᵏ.
+After the last tile of a sweep, w is normalized into v in fp32.
+
+Two entry points share the kernel body:
+
+* power_iterate      — n_iters sweeps + a trailing λ = ‖T v‖² pass.
+* power_iterate_chunk — k sweeps; additionally emits the fp32 Rayleigh
+  quotient λ = vᵀw and residual ‖w − λv‖ measured at the final sweep
+  (reusing that sweep's matvec), the inputs of the adaptive convergence
+  gate (DESIGN.md §7.3).
 """
 from __future__ import annotations
 
@@ -23,49 +40,113 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _power_kernel(t_ref, v0_ref, lam_ref, v_ref, *, n_iters: int):
-    t = t_ref[0].astype(jnp.float32)      # (r, c), VMEM-resident
-    v = v0_ref[...].astype(jnp.float32)   # (1, c)
+def _power_kernel(t_ref, v0_ref, lam_ref, v_ref, resid_ref, w_ref, *,
+                  n_upd: int, nr: int, lambda_pass: bool, emit_gate: bool):
+    it = pl.program_id(1)
+    rk = pl.program_id(2)
 
-    def step(_, v):
-        tv = jax.lax.dot_general(v, t, (((1,), (1,)), ((), ())),
-                                 preferred_element_type=jnp.float32)  # (1, r)
-        w = jax.lax.dot_general(tv, t, (((1,), (0,)), ((), ())),
-                                preferred_element_type=jnp.float32)   # (1, c)
+    @pl.when((it == 0) & (rk == 0))
+    def _init():
+        v_ref[...] = v0_ref[...].astype(jnp.float32)
+        lam_ref[0, 0] = 0.0
+        resid_ref[0, 0] = 0.0
+
+    @pl.when(rk == 0)
+    def _zero_w():
+        w_ref[...] = jnp.zeros_like(w_ref)
+
+    t = t_ref[0]                                   # (block_r, c), native dtype
+    v = v_ref[...]                                 # (1, c) fp32 state
+    tv = jax.lax.dot_general(v.astype(t.dtype), t, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (1, block_r)
+
+    if lambda_pass:
+        # trailing sweep: accumulate λ = ‖T v‖² instead of updating v
+        @pl.when(it == n_upd)
+        def _lam():
+            lam_ref[0, 0] += jnp.sum(tv * tv)
+
+    @pl.when(it < n_upd)
+    def _accum():
+        w_ref[...] += jax.lax.dot_general(
+            tv.astype(t.dtype), t, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)    # (1, c)
+
+    if emit_gate:
+        # Rayleigh quotient and residual at the final sweep, from the
+        # completed fp32 accumulator w = C v, *before* normalization.
+        @pl.when((it == n_upd - 1) & (rk == nr - 1))
+        def _gate():
+            w = w_ref[...]
+            lam = jnp.sum(w * v)
+            lam_ref[0, 0] = lam
+            resid_ref[0, 0] = jnp.sqrt(jnp.sum((w - lam * v) ** 2))
+
+    @pl.when((it < n_upd) & (rk == nr - 1))
+    def _update():
+        w = w_ref[...]
         nrm = jnp.sqrt(jnp.sum(w * w)) + 1e-30
-        return w / nrm
-
-    v = jax.lax.fori_loop(0, n_iters, step, v)
-    tv = jax.lax.dot_general(v, t, (((1,), (1,)), ((), ())),
-                             preferred_element_type=jnp.float32)
-    lam_ref[0, 0] = jnp.sum(tv * tv)
-    v_ref[...] = v
+        v_ref[...] = w / nrm
 
 
-@functools.partial(jax.jit, static_argnames=("n_iters", "interpret"))
-def power_iterate(slices: jax.Array, v0: jax.Array, n_iters: int,
-                  *, interpret: bool = False):
-    """Fused power iteration.  slices: (b, r, c), v0: (b, c).
-
-    Returns (lam (b,) fp32, v (b, c) fp32) — bit-comparable to
-    ref.power_iterate up to fp32 reduction order.
-    """
+def _call(slices, v0, n_upd, *, lambda_pass, emit_gate, block_r, interpret):
     b, r, c = slices.shape
-    lam, v = pl.pallas_call(
-        functools.partial(_power_kernel, n_iters=n_iters),
-        grid=(b,),
+    block_r = min(block_r, r)
+    rp = pl.cdiv(r, block_r) * block_r
+    if rp != r:  # zero rows contribute nothing to Tᵀ(T v) or ‖T v‖²
+        slices = jnp.pad(slices, ((0, 0), (0, rp - r), (0, 0)))
+    nr = rp // block_r
+    n_steps = n_upd + (1 if lambda_pass else 0)
+
+    lam, v, resid, _w = pl.pallas_call(
+        functools.partial(_power_kernel, n_upd=n_upd, nr=nr,
+                          lambda_pass=lambda_pass, emit_gate=emit_gate),
+        grid=(b, n_steps, nr),
         in_specs=[
-            pl.BlockSpec((1, r, c), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, c), lambda i: (i, 0)),
+            pl.BlockSpec((1, block_r, c), lambda i, it, rk: (i, rk, 0)),
+            pl.BlockSpec((1, c), lambda i, it, rk: (i, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, 1), lambda i: (i, 0)),
-            pl.BlockSpec((1, c), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, it, rk: (i, 0)),
+            pl.BlockSpec((1, c), lambda i, it, rk: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, it, rk: (i, 0)),
+            pl.BlockSpec((1, c), lambda i, it, rk: (i, 0)),  # w scratch
         ],
         out_shape=[
+            jax.ShapeDtypeStruct((b, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, c), jnp.float32),
             jax.ShapeDtypeStruct((b, 1), jnp.float32),
             jax.ShapeDtypeStruct((b, c), jnp.float32),
         ],
         interpret=interpret,
     )(slices, v0)
-    return lam[:, 0], v
+    return lam[:, 0], v, resid[:, 0]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_iters", "block_r", "interpret"))
+def power_iterate(slices: jax.Array, v0: jax.Array, n_iters: int, *,
+                  block_r: int = 256, interpret: bool = False):
+    """Fused power iteration.  slices: (b, r, c), v0: (b, c).
+
+    Returns (lam (b,) fp32, v (b, c) fp32) — bit-comparable to
+    ref.power_iterate up to fp32 reduction order.  λ is computed with the
+    input's operand dtype and fp32 accumulation.
+    """
+    lam, v, _ = _call(slices, v0, n_iters, lambda_pass=True, emit_gate=False,
+                      block_r=block_r, interpret=interpret)
+    return lam, v
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_r", "interpret"))
+def power_iterate_chunk(slices: jax.Array, v: jax.Array, k: int, *,
+                        block_r: int = 256, interpret: bool = False):
+    """k fused sweeps from state v; emits the convergence-gate measurements.
+
+    Returns (v_new (b, c) fp32, lam (b,) fp32, resid (b,) fp32) with
+    λ = vᵀ(C v) and resid = ‖C v − λ v‖ taken at the k-th sweep's
+    pre-normalization iterate (the same probe the jnp adaptive path uses).
+    """
+    lam, v_new, resid = _call(slices, v, k, lambda_pass=False, emit_gate=True,
+                              block_r=block_r, interpret=interpret)
+    return v_new, lam, resid

@@ -49,6 +49,40 @@ def power_iterate(slices: jax.Array, v0: jax.Array, n_iters: int):
     return lam, v
 
 
+def power_iterate_adaptive(slices: jax.Array, v0: jax.Array, n_iters: int,
+                           tol: float, check_every: int = 6):
+    """Convergence-gated power iteration (DESIGN.md §7.3), host-side oracle.
+
+    Runs check_every-sweep chunks; each chunk's final matvec doubles as
+    the residual probe: with w = C v at the pre-normalization iterate,
+    λ = vᵀw and resid = ‖w − λv‖, and the solver stops once
+
+        max_i resid_i/max(λ_i, 1)·λ_i  ≤  tol · max(λ_max, 1e-30).
+
+    The cap rounds up to a multiple of check_every, exactly like the
+    while_loop implementations.  Returns (lam (b,), v (b, c), iters int),
+    λ re-measured as the fp32 Rayleigh quotient ‖T v‖² at the final v.
+    """
+    s = slices.astype(jnp.float32)
+    v = v0.astype(jnp.float32)
+    k = max(1, min(check_every, n_iters))
+    it = 0
+    while it < n_iters:
+        for _ in range(k - 1):
+            w = jnp.einsum("brc,br->bc", s, jnp.einsum("brc,bc->br", s, v))
+            v = w / (jnp.linalg.norm(w, axis=-1, keepdims=True) + 1e-30)
+        w = jnp.einsum("brc,br->bc", s, jnp.einsum("brc,bc->br", s, v))
+        lam = jnp.sum(w * v, axis=-1)
+        resid = jnp.linalg.norm(w - lam[:, None] * v, axis=-1)
+        v = w / (jnp.linalg.norm(w, axis=-1, keepdims=True) + 1e-30)
+        it += k
+        weighted = jnp.max(resid / jnp.maximum(lam, 1.0) * lam)
+        if float(weighted) <= tol * float(jnp.maximum(jnp.max(lam), 1e-30)):
+            break
+    tv = jnp.einsum("brc,bc->br", s, v)
+    return jnp.sum(tv * tv, axis=-1), v, it
+
+
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                     causal: bool = True, scale: float | None = None,
                     q_offset: int = 0, window: int | None = None,

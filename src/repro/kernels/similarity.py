@@ -22,8 +22,8 @@ from jax.experimental import pallas as pl
 
 
 def _sim_kernel(vl_ref, vf_ref, o_ref):
-    a = vl_ref[...].astype(jnp.float32)  # (block_i, c)
-    b = vf_ref[...].astype(jnp.float32)  # (block_j, c)
+    a = vl_ref[...]  # (block_i, c), native operand dtype (fp32 or bf16)
+    b = vf_ref[...]  # (block_j, c)
     s = jax.lax.dot_general(a, b, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)
     o_ref[:, 0] = jnp.sum(jnp.abs(s), axis=1)

@@ -36,7 +36,14 @@ def main(argv=None) -> int:
     ap.add_argument("--relayout", default="gspmd",
                     choices=("gspmd", "collective"),
                     help="flat-schedule mode relayout (§Perf msc it 2)")
-    ap.add_argument("--power-iters", type=int, default=60)
+    ap.add_argument("--power-iters", type=int, default=60,
+                    help="power-iteration sweep cap")
+    ap.add_argument("--power-tol", type=float, default=1e-2,
+                    help="adaptive convergence tolerance (DESIGN.md §7.3); "
+                         "0 = fixed trip count")
+    ap.add_argument("--precision", default="fp32",
+                    choices=("fp32", "bf16_fp32"),
+                    help="eigensolve operand precision policy")
     ap.add_argument("--gram", action="store_true",
                     help="paper-faithful explicit covariance (default: "
                          "matrix-free, beyond-paper)")
@@ -53,11 +60,13 @@ def main(argv=None) -> int:
     eps = args.epsilon if args.epsilon is not None else 0.5 / (m - l) ** 2
     spec = PlantedSpec.paper(m, gamma)
     cfg = MSCConfig(epsilon=eps, power_iters=args.power_iters,
+                    power_tol=args.power_tol, precision=args.precision,
                     matrix_free=not args.gram, max_extraction_iters=m,
                     use_kernels=args.kernels)
 
     print(f"MSC m={m}^3 gamma={gamma} eps={eps:.2e} l={l} "
           f"schedule={args.schedule} matrix_free={not args.gram} "
+          f"power_tol={args.power_tol} precision={args.precision} "
           f"devices={len(jax.devices())}")
 
     if args.schedule == "sequential":
@@ -81,9 +90,12 @@ def main(argv=None) -> int:
         sim = float(similarity_index(c_mats, pred))
         recs.append(rec)
         sims.append(sim)
+        sweeps = [mr.power_iters_run for mr in result.modes]
+        sweeps_s = ("" if any(s is None for s in sweeps)
+                    else f" sweeps={[int(s) for s in sweeps]}")
         print(f"  run {r}: rec={rec:.3f} sim={sim:.3f} "
               f"sizes={[int(mr.size) for mr in result.modes]} "
-              f"t={times[-1]:.2f}s")
+              f"t={times[-1]:.2f}s{sweeps_s}")
 
     import numpy as np
 

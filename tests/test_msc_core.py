@@ -36,15 +36,15 @@ class TestPowerIteration:
     @pytest.mark.parametrize("shape", [(4, 20, 16), (7, 10, 30), (1, 12, 12)])
     def test_matrix_free_matches_eigh(self, shape):
         x = jax.random.normal(jax.random.PRNGKey(0), shape)
-        lam, v = power_iteration_matrix_free(x, n_iters=300)
+        lam, v, _ = power_iteration_matrix_free(x, n_iters=300)
         gram = np.einsum("brc,brd->bcd", x, x)
         w = np.linalg.eigvalsh(gram)[:, -1]
         np.testing.assert_allclose(np.asarray(lam), w, rtol=1e-4)
 
     def test_gram_and_matrix_free_agree(self):
         x = jax.random.normal(jax.random.PRNGKey(1), (5, 24, 18))
-        lam_a, v_a = power_iteration_matrix_free(x, n_iters=200)
-        lam_b, v_b = power_iteration_gram(x, n_iters=200)
+        lam_a, v_a, _ = power_iteration_matrix_free(x, n_iters=200)
+        lam_b, v_b, _ = power_iteration_gram(x, n_iters=200)
         np.testing.assert_allclose(np.asarray(lam_a), np.asarray(lam_b), rtol=1e-4)
         # eigenvectors agree up to sign
         dots = np.abs(np.sum(np.asarray(v_a) * np.asarray(v_b), axis=-1))
@@ -52,7 +52,7 @@ class TestPowerIteration:
 
     def test_rayleigh_residual_small(self):
         x = jax.random.normal(jax.random.PRNGKey(2), (6, 30, 25))
-        lam, v = power_iteration_matrix_free(x, n_iters=300)
+        lam, v, _ = power_iteration_matrix_free(x, n_iters=300)
         resid = rayleigh_residual(x, lam, v)
         assert float(jnp.max(resid)) < 1e-3
 
@@ -62,7 +62,7 @@ class TestPowerIteration:
         v_true = np.zeros(m3); v_true[:l] = 1 / np.sqrt(l)
         w = 200.0 * np.outer(np.ones(m2) / np.sqrt(m2), v_true)
         x = jnp.asarray(w + np.random.RandomState(0).randn(m2, m3))[None]
-        lam, v = power_iteration_matrix_free(x, n_iters=100)
+        lam, v, _ = power_iteration_matrix_free(x, n_iters=100)
         overlap = abs(float(np.dot(np.asarray(v)[0], v_true)))
         assert overlap > 0.99
 

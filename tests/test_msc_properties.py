@@ -2,7 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="hypothesis not installed (pip install -e .[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (
     MSCConfig,
@@ -31,7 +35,7 @@ def rand_tensor(seed, m1, m2, m3):
 def test_similarity_matrix_properties(seed, m):
     """C is symmetric, entries in [0,1], diagonal = λ̃_i² ≤ 1."""
     T = rand_tensor(seed, m, 12, 10)
-    v_rows, lam = normalized_eigrows(mode_slices(T, 0), CFG)
+    v_rows, lam, _ = normalized_eigrows(mode_slices(T, 0), CFG)
     c = np.asarray(similarity_matrix(v_rows))
     np.testing.assert_allclose(c, c.T, atol=1e-5)
     assert (c >= -1e-5).all() and (c <= 1 + 1e-4).all()
@@ -44,8 +48,8 @@ def test_similarity_matrix_properties(seed, m):
 def test_scale_invariance(seed):
     """Scaling T by c>0 scales λ by c² but leaves normalized V, C, d as-is."""
     T = rand_tensor(seed, 14, 11, 9)
-    v1, lam1 = normalized_eigrows(mode_slices(T, 0), CFG)
-    v2, lam2 = normalized_eigrows(mode_slices(3.7 * T, 0), CFG)
+    v1, lam1, _ = normalized_eigrows(mode_slices(T, 0), CFG)
+    v2, lam2, _ = normalized_eigrows(mode_slices(3.7 * T, 0), CFG)
     np.testing.assert_allclose(np.asarray(lam2), 3.7**2 * np.asarray(lam1),
                                rtol=1e-4)
     np.testing.assert_allclose(np.abs(np.asarray(v1)), np.abs(np.asarray(v2)),
@@ -64,7 +68,7 @@ def test_permutation_equivariance(seed, m):
 
 
 def _vrows(T):
-    v, _ = normalized_eigrows(mode_slices(T, 0), CFG)
+    v, _, _ = normalized_eigrows(mode_slices(T, 0), CFG)
     return (v,)
 
 
@@ -118,12 +122,12 @@ def test_padding_equivalence(seed):
     valid prefix of d and the extracted cluster unchanged."""
     T = rand_tensor(seed, 12, 10, 11)
     slices = mode_slices(T, 0)
-    v, _ = normalized_eigrows(slices, CFG)
+    v, _, _ = normalized_eigrows(slices, CFG)
     d = marginal_sums(v)
     pad = jnp.zeros((4,) + slices.shape[1:])
     sp = jnp.concatenate([slices, pad])
     valid = jnp.arange(16) < 12
-    vp, _ = normalized_eigrows(sp, CFG, valid)
+    vp, _, _ = normalized_eigrows(sp, CFG, valid)
     dp = marginal_sums(vp, valid)
     np.testing.assert_allclose(np.asarray(dp[:12]), np.asarray(d), rtol=1e-4,
                                atol=1e-4)

@@ -1,0 +1,196 @@
+"""Adaptive mixed-precision eigensolver (DESIGN.md §7.3).
+
+Covers the satellite matrix: adaptive ≈ fixed-60 across the γ regimes,
+early exit on high-gap inputs (via the returned sweep counter), the
+bf16_fp32 precision policy, and the r-tiled kernel on non-divisible r.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    MSCConfig,
+    PlantedSpec,
+    make_planted_tensor,
+    mode_slices,
+    msc_sequential,
+    planted_masks,
+    recovery_rate,
+)
+from repro.core.power_iter import (
+    _init_vectors,
+    power_iteration_gram,
+    power_iteration_matrix_free,
+)
+from repro.kernels import ops, ref
+from repro.kernels.power_iter import power_iterate, power_iterate_chunk
+
+GAMMAS = {"low": 20.0, "paper": 70.0, "high": 150.0}
+
+
+def planted_slices(gamma, m=45, seed=0):
+    spec = PlantedSpec.paper(m=m, gamma=gamma)
+    return mode_slices(make_planted_tensor(jax.random.PRNGKey(seed), spec), 0)
+
+
+class TestAdaptiveGate:
+    @pytest.mark.parametrize("regime", sorted(GAMMAS))
+    def test_adaptive_matches_fixed60_clusters(self, regime):
+        """End-to-end: adaptive (default cfg) and fixed-60 recover the
+        same cluster masks, and d agrees to the weighted tolerance."""
+        spec = PlantedSpec.paper(m=45, gamma=GAMMAS[regime])
+        T = make_planted_tensor(jax.random.PRNGKey(0), spec)
+        fixed = msc_sequential(T, MSCConfig(epsilon=3e-4, power_tol=0.0))
+        adapt = msc_sequential(T, MSCConfig(epsilon=3e-4))
+        for j in range(3):
+            assert (np.asarray(adapt[j].mask)
+                    == np.asarray(fixed[j].mask)).all(), regime
+            # d entries are O(m)-scale sums; the gate bounds the per-row
+            # perturbation by ~tol·λ̃, so m·tol is the right yardstick
+            np.testing.assert_allclose(np.asarray(adapt[j].d),
+                                       np.asarray(fixed[j].d),
+                                       atol=45 * 1e-2, rtol=0.05)
+
+    def test_early_exit_on_high_gap(self):
+        s = planted_slices(GAMMAS["high"])
+        lam, v, iters = power_iteration_matrix_free(s, 60, tol=1e-2,
+                                                    check_every=6)
+        assert int(iters) <= 12, int(iters)  # ~2 chunks for γ=150
+        # paper-gap acceptance bar: ≤ 1/3 of the fixed-60 sweeps
+        _, _, it_paper = power_iteration_matrix_free(
+            planted_slices(GAMMAS["paper"]), 60, tol=1e-2, check_every=6)
+        assert int(it_paper) <= 20, int(it_paper)
+
+    def test_low_gap_runs_to_cap(self):
+        s = planted_slices(GAMMAS["low"])
+        _, _, iters = power_iteration_matrix_free(s, 60, tol=1e-2,
+                                                  check_every=6)
+        assert int(iters) == 60
+
+    def test_tol_zero_reproduces_fixed_path_bitwise(self):
+        s = planted_slices(GAMMAS["paper"])
+        lam_f, v_f, it_f = power_iteration_matrix_free(s, 24, tol=0.0)
+        # adaptive with an unreachable tol runs the same 24 sweeps
+        lam_a, v_a, it_a = power_iteration_matrix_free(s, 24, tol=1e-30,
+                                                       check_every=6)
+        assert int(it_f) == int(it_a) == 24
+        np.testing.assert_array_equal(np.asarray(v_f), np.asarray(v_a))
+        np.testing.assert_array_equal(np.asarray(lam_f), np.asarray(lam_a))
+
+    def test_gram_path_gates_identically(self):
+        s = planted_slices(GAMMAS["paper"])
+        _, _, it_mf = power_iteration_matrix_free(s, 60, tol=1e-2,
+                                                  check_every=6)
+        _, _, it_g = power_iteration_gram(s, 60, tol=1e-2, check_every=6)
+        assert int(it_mf) == int(it_g)
+
+    def test_sequential_result_reports_realized_sweeps(self):
+        spec = PlantedSpec.paper(m=45, gamma=70.0)
+        T = make_planted_tensor(jax.random.PRNGKey(0), spec)
+        res = msc_sequential(T, MSCConfig(epsilon=3e-4))
+        assert all(int(r.power_iters_run) < 60 for r in res)
+        res_fixed = msc_sequential(T, MSCConfig(epsilon=3e-4, power_tol=0.0))
+        assert all(int(r.power_iters_run) == 60 for r in res_fixed)
+
+
+class TestPrecisionPolicy:
+    @pytest.mark.parametrize("regime", ["paper", "high"])
+    def test_bf16_within_1e2_of_fp32(self, regime):
+        s = planted_slices(GAMMAS[regime])
+        lam32, v32, _ = power_iteration_matrix_free(s, 60, tol=1e-2)
+        lam16, v16, _ = power_iteration_matrix_free(s, 60, tol=1e-2,
+                                                    precision="bf16_fp32")
+        np.testing.assert_allclose(np.asarray(lam16), np.asarray(lam32),
+                                   rtol=1e-2)
+        dots = np.abs(np.sum(np.asarray(v16) * np.asarray(v32), axis=-1))
+        np.testing.assert_allclose(dots, 1.0, atol=1e-2)
+
+    def test_bf16_msc_recovers_planted(self):
+        spec = PlantedSpec.paper(m=45, gamma=70.0)
+        T = make_planted_tensor(jax.random.PRNGKey(0), spec)
+        res = msc_sequential(T, MSCConfig(epsilon=3e-4,
+                                          precision="bf16_fp32"))
+        rec = float(recovery_rate(planted_masks(spec),
+                                  [r.mask for r in res]))
+        assert rec == 1.0
+        ref_res = msc_sequential(T, MSCConfig(epsilon=3e-4))
+        for j in range(3):
+            # d is λ̃-normalized with entries in [0, m]; 1e-2-relative at
+            # the d ≈ l cluster plateau is the satellite's acceptance bar
+            np.testing.assert_allclose(np.asarray(res[j].d),
+                                       np.asarray(ref_res[j].d),
+                                       rtol=5e-2, atol=5e-2)
+
+    def test_lambda_stays_fp32_under_bf16(self):
+        s = planted_slices(GAMMAS["paper"])
+        lam, v, _ = power_iteration_matrix_free(s, 60, tol=1e-2,
+                                                precision="bf16_fp32")
+        assert lam.dtype == jnp.float32 and v.dtype == jnp.float32
+
+    def test_unknown_precision_raises(self):
+        with pytest.raises(ValueError, match="precision"):
+            power_iteration_matrix_free(planted_slices(70.0), 6,
+                                        precision="fp16")
+
+
+class TestRTiledKernel:
+    @pytest.mark.parametrize("shape,block_r", [
+        ((3, 40, 24), 16),   # non-divisible: 40 = 2·16 + 8
+        ((2, 33, 17), 8),    # non-divisible both dims, odd c
+        ((4, 64, 32), 16),   # divisible multi-tile
+        ((1, 10, 10), 256),  # single tile (block_r > r)
+    ])
+    def test_matches_ref_nondivisible_r(self, shape, block_r):
+        x = jax.random.normal(jax.random.PRNGKey(3), shape)
+        v0 = _init_vectors(shape[0], shape[2])
+        lam_k, v_k = power_iterate(x, v0, 20, block_r=block_r,
+                                   interpret=True)
+        lam_r, v_r = ref.power_iterate(x, v0, 20)
+        np.testing.assert_allclose(np.asarray(lam_k), np.asarray(lam_r),
+                                   rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(v_k), np.asarray(v_r),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_chunk_emits_gate_measurements(self):
+        x = jax.random.normal(jax.random.PRNGKey(4), (3, 40, 24))
+        v0 = _init_vectors(3, 24)
+        v_new, lam, resid = power_iterate_chunk(x, v0, 6, block_r=16,
+                                                interpret=True)
+        _, v_ref6 = ref.power_iterate(x, v0, 6)
+        np.testing.assert_allclose(np.asarray(v_new), np.asarray(v_ref6),
+                                   rtol=1e-4, atol=1e-5)
+        # gate probe: λ = vᵀCv and ‖Cv − λv‖ at the pre-normalization iterate
+        _, v5 = ref.power_iterate(x, v0, 5)
+        s = np.asarray(x, np.float64)
+        w = np.einsum("brc,br->bc", s, np.einsum("brc,bc->br", s,
+                                                 np.asarray(v5, np.float64)))
+        lam_want = np.sum(w * np.asarray(v5, np.float64), axis=-1)
+        resid_want = np.linalg.norm(
+            w - lam_want[:, None] * np.asarray(v5, np.float64), axis=-1)
+        np.testing.assert_allclose(np.asarray(lam), lam_want, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(resid), resid_want, rtol=1e-3)
+
+    def test_adaptive_kernel_driver_matches_oracle(self):
+        s = planted_slices(GAMMAS["paper"], m=24)
+        v0 = _init_vectors(s.shape[0], s.shape[2])
+        lam_k, v_k, it_k = ops.power_iterate_matrix_free(
+            s, 60, tol=1e-2, check_every=6, block_r=16, interpret=True)
+        lam_o, v_o, it_o = ref.power_iterate_adaptive(s, v0, 60, 1e-2, 6)
+        assert int(it_k) == it_o
+        np.testing.assert_allclose(np.asarray(lam_k), np.asarray(lam_o),
+                                   rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(v_k), np.asarray(v_o),
+                                   rtol=1e-3, atol=1e-4)
+
+    def test_kernel_msc_path_agrees_with_jnp(self):
+        """use_kernels=True under the adaptive default config."""
+        spec = PlantedSpec.paper(m=24, gamma=70.0)
+        T = make_planted_tensor(jax.random.PRNGKey(1), spec)
+        a = msc_sequential(T, MSCConfig(epsilon=3e-4))
+        b = msc_sequential(T, MSCConfig(epsilon=3e-4, use_kernels=True))
+        for j in range(3):
+            assert (np.asarray(a[j].mask) == np.asarray(b[j].mask)).all()
+            np.testing.assert_allclose(np.asarray(b[j].d),
+                                       np.asarray(a[j].d),
+                                       rtol=1e-3, atol=1e-3)

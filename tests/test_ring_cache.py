@@ -9,9 +9,15 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.models import build_model, forward
+
+try:  # optional dep: pyproject's [test] extra; skip the property class without it
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    given = settings = st = None
 
 
 def _local_cfg(window: int):
@@ -67,14 +73,21 @@ class TestRingCache:
         assert float(jnp.min(jnp.sum(jnp.abs(ck), axis=(0, 2, 3)))) > 0.0
 
 
-from hypothesis import given, settings, strategies as st
-
-
 class TestRingCacheProperty:
-    @settings(max_examples=6, deadline=None)
-    @given(w=st.integers(4, 12), s=st.integers(2, 16),
-           extra=st.integers(1, 6))
-    def test_ring_decode_equals_full_reference(self, w, s, extra):
+    @pytest.mark.skipif(st is None, reason="hypothesis not installed "
+                        "(pip install -e .[test])")
+    def test_ring_decode_equals_full_reference(self):
+        pytest.importorskip("hypothesis")  # belt and braces with skipif
+
+        @settings(max_examples=6, deadline=None)
+        @given(w=st.integers(4, 12), s=st.integers(2, 16),
+               extra=st.integers(1, 6))
+        def prop(w, s, extra):
+            self._check(w, s, extra)
+
+        prop()
+
+    def _check(self, w, s, extra):
         """For any (window, prefill length, decode steps): ring-cache
         decode logits == full-forward logits at the same positions."""
         cfg = _local_cfg(w)
