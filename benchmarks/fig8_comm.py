@@ -2,10 +2,13 @@
 
 The paper uses TAU to measure time in MPI_Allreduce / MPI_Allgather for
 33–123 processes at 1000³.  Here the compiled parallel-MSC HLO is parsed
-for its collectives (the SPMD analogues: all-gather of V, all-reduce of
-λ_max, plus layout collective-permutes) and each kind's ring-model link
-time is reported per device count — reproducing the paper's observation
-that per-collective time *falls* with more processes (smaller shards).
+for its collectives (the SPMD analogues: all-gather of V — or, with
+epilogue="ring", the ppermute chunk stream replacing it (DESIGN.md
+§7.4) — all-reduce of λ_max, plus layout collective-permutes) and each
+kind's ring-model link time is reported per device count — reproducing
+the paper's observation that per-collective time *falls* with more
+processes (smaller shards).  Each (p, m) cell runs under both epilogue
+policies so the allgather-vs-ring traffic swap is visible per kind.
 """
 from __future__ import annotations
 
@@ -27,14 +30,16 @@ _ICI = 50e9
 def run(full: bool = False) -> List[Dict]:
     m = 1000 if full else 256
     ps = (32, 64, 128, 256) if full else (32, 128)
-    specs = [{"schedule": "flat", "p": p, "m": m} for p in ps]
+    specs = [{"schedule": "flat", "p": p, "m": m, "epilogue": epi}
+             for p in ps for epi in ("allgather", "ring")]
     rows = run_subprocess_json(
         _CODE.format(specs=json.dumps(specs)), n_devices=256, timeout=3600)
     out = []
     for r in rows:
         for kind, d in sorted(r["collectives_by_kind"].items()):
             out.append({
-                "p": r["p"], "m": r["m"], "collective": kind,
+                "p": r["p"], "m": r["m"], "epilogue": r["epilogue"],
+                "collective": kind,
                 "count": d["count"],
                 "operand_mib": d["operand_bytes"] / 2**20,
                 "link_mib": d["link_bytes"] / 2**20,

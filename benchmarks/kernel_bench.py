@@ -52,6 +52,18 @@ def run(full: bool = False) -> List[Dict]:
                  "flops": 2.0 * b * 4 * b * c,
                  "vmem_tile_kib": (b * c + 4 * b * c) * 4 / 1024})
 
+    # fused ring-step accumulation (ring epilogue body, DESIGN.md §7.4):
+    # per-chunk shapes — (m/p) local rows against one (m/p)-row chunk.
+    acc = jax.random.normal(key, (b,), jnp.float32)
+    d_k = ops.abs_rowsum(vl, vl, acc, interpret=True)
+    d_r = ref.abs_rowsum(vl, vl, acc)
+    t = time_fn(jax.jit(ref.abs_rowsum), vl, vl, acc)
+    rows.append({"kernel": "abs_rowsum", "shape": f"{b}x{b}x{c}",
+                 "max_err": _maxerr(d_k, d_r),
+                 "ref_ms": t["median_s"] * 1e3,
+                 "flops": 2.0 * b * b * c,
+                 "vmem_tile_kib": (2 * b * c + b) * 4 / 1024})
+
     # fused matrix-free power iteration (fixed-count kernel vs oracle)
     from repro.core.power_iter import _init_vectors
 

@@ -14,7 +14,7 @@ import numpy as np
 
 
 def project(schedule: str, p: int, m: int, power_iters: int = 60,
-            matrix_free: bool = True) -> dict:
+            matrix_free: bool = True, epilogue: str = "allgather") -> dict:
     import jax
     import jax.numpy as jnp
     from jax.sharding import Mesh
@@ -27,7 +27,7 @@ def project(schedule: str, p: int, m: int, power_iters: int = 60,
 
     devices = jax.devices()[:p]
     cfg = MSCConfig(power_iters=power_iters, matrix_free=matrix_free,
-                    max_extraction_iters=m)
+                    epilogue=epilogue, max_extraction_iters=m)
     if schedule == "grouped":
         assert p % 3 == 0, p
         mesh = Mesh(np.asarray(devices).reshape(3, p // 3),
@@ -49,7 +49,7 @@ def project(schedule: str, p: int, m: int, power_iters: int = 60,
     mem = compiled.memory_analysis()
     return {
         "schedule": schedule, "p": p, "m": m,
-        "matrix_free": matrix_free,
+        "matrix_free": matrix_free, "epilogue": epilogue,
         "compute_s": rep.compute_s, "memory_s": rep.memory_s,
         "collective_link_s": rep.collective_link_s,
         "bound_s": rep.bound_s, "dominant": rep.dominant,

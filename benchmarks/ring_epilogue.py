@@ -1,0 +1,140 @@
+"""Ring vs allgather similarity epilogue: predicted and measured traffic.
+
+The tentpole perf claim of DESIGN.md §7.4: the ring epilogue moves the
+same per-link bytes as the all-gather epilogue — (p−1)/p · m·c·B — but
+its peak epilogue buffer is one (m/p)×c chunk instead of the full m×c V
+(p× smaller), and each transfer overlaps the concurrent chunk matmul.
+
+Per (mesh, p, m) cell and epilogue this bench compiles the epilogue in
+isolation (`build_epilogue_rowsum`), parses the compiled collectives
+with the trip-count-aware HLO analyzer, and reports
+
+  * predicted_link_bytes / measured_link_bytes — the roofline comm model
+    (`roofline.epilogue_model`) vs the compiled all-gather / ppermute
+    traffic; the acceptance bar requires agreement within 10%,
+  * measured_buffer_bytes — the epilogue collective's landing-buffer
+    size (full V for allgather, one chunk for ring) — the ring must be
+    ≥ ring_steps× smaller,
+  * max_abs_d_diff — numeric parity between the two epilogues,
+  * predicted latency under the no-overlap (allgather) vs overlapped
+    (ring) model, plus measured CPU walltime for the trajectory.
+
+Measured rows run fp32: XLA:CPU legalizes bf16 collectives to f32, so a
+bf16 byte model can't be validated against CPU HLO (on TPU the operands
+stay bf16 and halve both columns).  Rows land in
+experiments/bench/ring_epilogue.json AND BENCH_ring_epilogue.json at the
+repo root — the perf-trajectory artifact CI uploads.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+from .common import REPO, run_subprocess_json
+
+BENCH_PATH = os.path.join(REPO, "BENCH_ring_epilogue.json")
+
+_CODE = """
+import json
+from benchmarks.ring_epilogue import measure
+print(json.dumps([measure(**s) for s in json.loads('''{specs}''')]))
+"""
+
+
+def measure(mesh_kind: str, p: int, m: int, c: int) -> Dict:
+    """Worker (runs under a forced device count): both epilogues at one cell."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import MSCConfig
+    from repro.core.parallel import build_epilogue_rowsum
+    from repro.roofline import epilogue_model
+    from repro.roofline.hlo import analyze
+    from benchmarks.common import time_fn
+    from jax.sharding import Mesh
+
+    devices = jax.devices()[:p]
+    if mesh_kind == "grouped":
+        assert p % 3 == 0, p
+        mesh = Mesh(np.asarray(devices).reshape(3, p // 3), ("mode", "slice"))
+        axis_name = "slice"
+        ring_steps = p // 3
+    else:
+        mesh = Mesh(np.asarray(devices), ("slice",))
+        axis_name = ("slice",)
+        ring_steps = p
+    v = jax.random.normal(jax.random.PRNGKey(0), (m, c), jnp.float32)
+
+    kind_of = {"allgather": "all-gather", "ring": "collective-permute"}
+    out: Dict[str, Dict] = {}
+    for epilogue in ("allgather", "ring"):
+        cfg = MSCConfig(epilogue=epilogue)
+        run = build_epilogue_rowsum(mesh, cfg, axis_name)
+        compiled = run.lower(
+            jax.ShapeDtypeStruct((m, c), jnp.float32)).compile()
+        an = analyze(compiled.as_text())
+        kind = kind_of[epilogue]
+        stats = [cs for cs in an.collectives if cs.kind.startswith(kind)]
+        by = an.by_kind().get(kind, {})
+        pred = epilogue_model(m, c, ring_steps, epilogue=epilogue)
+        d = np.asarray(run(v))
+        out[epilogue] = {
+            "mesh": mesh_kind, "p": p, "ring_steps": ring_steps,
+            "m": m, "c": c, "epilogue": epilogue,
+            "collective": kind,
+            "collective_count": by.get("count", 0.0),
+            "predicted_link_bytes": pred["link_bytes"],
+            "measured_link_bytes": by.get("link_bytes", 0.0),
+            "predicted_buffer_bytes": pred["peak_buffer_bytes"],
+            "measured_buffer_bytes": max(
+                (cs.output_bytes for cs in stats), default=0.0),
+            "predicted_comm_s": pred["comm_s"],
+            "predicted_compute_s": pred["compute_s"],
+            "predicted_latency_s": pred["latency_s"],
+            "median_ms": time_fn(run, v)["median_s"] * 1e3,
+            "_d": d,
+        }
+
+    rows = []
+    d_ag, d_ring = out["allgather"].pop("_d"), out["ring"].pop("_d")
+    diff = float(np.max(np.abs(d_ag - d_ring)))
+    for epilogue, row in out.items():
+        pl, ml = row["predicted_link_bytes"], row["measured_link_bytes"]
+        row["link_rel_err"] = abs(ml - pl) / pl if pl else 0.0
+        row["max_abs_d_diff"] = diff
+        row["buffer_ratio_vs_allgather"] = (
+            out["allgather"]["measured_buffer_bytes"]
+            / max(row["measured_buffer_bytes"], 1.0))
+        rows.append(row)
+    return {"rows": rows}
+
+
+def run(full: bool = False) -> List[Dict]:
+    if full:
+        specs = [{"mesh_kind": "flat", "p": 8, "m": 1000, "c": 1000},
+                 {"mesh_kind": "flat", "p": 32, "m": 1000, "c": 1000},
+                 {"mesh_kind": "grouped", "p": 24, "m": 1000, "c": 1000}]
+    else:
+        specs = [{"mesh_kind": "flat", "p": 4, "m": 192, "c": 64},
+                 {"mesh_kind": "flat", "p": 8, "m": 45, "c": 45},
+                 {"mesh_kind": "grouped", "p": 6, "m": 64, "c": 64}]
+    rows: List[Dict] = []
+    for spec in specs:
+        res = run_subprocess_json(_CODE.format(specs=json.dumps([spec])),
+                                  n_devices=spec["p"], timeout=1800)
+        rows.extend(res[0]["rows"])
+
+    for row in rows:
+        assert row["link_rel_err"] <= 0.10, (
+            f"comm model off by >10%: {row}")
+        if row["epilogue"] == "ring":
+            assert (row["buffer_ratio_vs_allgather"]
+                    >= row["ring_steps"] * 0.999), (
+                f"ring buffer not {row['ring_steps']}x smaller: {row}")
+
+    with open(BENCH_PATH, "w") as f:
+        json.dump(rows, f, indent=2)
+    print(f"[ring_epilogue] wrote {BENCH_PATH}")
+    return rows

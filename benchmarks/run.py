@@ -6,6 +6,7 @@
   fig8_comm           paper Fig. 8  (per-collective communication breakdown)
   kernel_bench        (new) Pallas kernels vs jnp oracles
   power_iter_bench    (new) adaptive vs fixed-60 eigensolver (DESIGN.md §7.3)
+  ring_epilogue       (new) ring vs allgather epilogue traffic (DESIGN.md §7.4)
 
 Usage:
   PYTHONPATH=src python -m benchmarks.run            # CPU-feasible sizes
@@ -25,8 +26,8 @@ import traceback
 from .common import print_rows, save_rows
 
 ALL = ("fig4_quality", "fig5_strong_scaling", "fig6_data_scaling",
-       "fig8_comm", "kernel_bench", "power_iter_bench")
-QUICK = ("power_iter_bench", "kernel_bench")
+       "fig8_comm", "kernel_bench", "power_iter_bench", "ring_epilogue")
+QUICK = ("power_iter_bench", "kernel_bench", "ring_epilogue")
 
 
 def main(argv=None) -> int:

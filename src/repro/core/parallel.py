@@ -18,7 +18,15 @@ Two schedules:
   (the MPI version has the same restriction in its balanced setting).
 
 Collective mapping (paper → here):
-  MPI_Allgatherv(M)      → lax.all_gather(V_local, slice_axis, tiled)
+  MPI_Allgatherv(M)      → epilogue="allgather": lax.all_gather(V_local,
+                           slice_axis, tiled), or
+                           epilogue="ring": p-1 lax.ppermute steps
+                           streaming (m/p)×c chunks of V around the
+                           slice axis while each device accumulates
+                           d += Σ|V_l · chunkᵀ| against the chunk it
+                           holds (DESIGN.md §7.4) — same link bytes,
+                           O(m·c/p) peak buffer instead of O(m·c), and
+                           the chunk matmul overlaps the next transfer.
   MPI_Allreduce(λ, MAX)  → lax.pmax(λ_local_max, slice_axis)
   MPI_Gatherv(d → root)  → d returned sharded; the (tiny) extraction runs
                            replicated under jit instead of on one root —
@@ -39,10 +47,12 @@ from repro.compat import shard_map
 
 from .extraction import extract_cluster
 from .msc import MODE_PERMS, mode_slices
-from .power_iter import top_eigenpairs
+from .power_iter import compute_dtype, top_eigenpairs
 from .types import ModeResult, MSCConfig, MSCResult
 
 AxisName = Union[str, Tuple[str, ...]]
+
+EPILOGUES = ("allgather", "ring")
 
 
 def _axis_size(mesh: Mesh, axis: AxisName) -> int:
@@ -55,14 +65,85 @@ def _pad_m(m: int, shards: int) -> int:
     return ((m + shards - 1) // shards) * shards
 
 
+def _chunk_rowsum(v_local: jax.Array, chunk: jax.Array,
+                  acc: Optional[jax.Array], cfg: MSCConfig) -> jax.Array:
+    """acc + Σ_j |v_local · chunkᵀ|_{:,j} — one epilogue block contribution."""
+    if cfg.use_kernels:
+        from repro.kernels import ops as kops
+
+        return kops.abs_rowsum(v_local, chunk, acc)
+    prod = jnp.abs(jnp.einsum("ic,jc->ij", v_local, chunk,
+                              preferred_element_type=jnp.float32))
+    d = jnp.sum(prod, axis=1)
+    return d if acc is None else acc + d
+
+
+def _ring_rowsum(v_local: jax.Array, cfg: MSCConfig, axis_name: AxisName,
+                 shards: int) -> jax.Array:
+    """Ring similarity epilogue (DESIGN.md §7.4).
+
+    p-1 lax.ppermute steps circulate the (b, c) chunks of V around the
+    group axis; each device folds the chunk it currently holds into its
+    running row-sums.  Inside the loop body the forward ppermute and the
+    chunk matmul both read the carried chunk and are otherwise
+    independent, so XLA's async collective-permute can hide step k+1's
+    transfer under step k's compute.  The full m×c V is never resident:
+    peak epilogue buffer is one chunk (plus the recv landing buffer).
+    """
+    d = _chunk_rowsum(v_local, v_local, None, cfg)
+    if shards == 1:
+        return d
+    perm = [(i, (i + 1) % shards) for i in range(shards)]
+
+    def body(_, carry):
+        chunk, d = carry
+        nxt = jax.lax.ppermute(chunk, axis_name, perm)
+        return nxt, _chunk_rowsum(v_local, chunk, d, cfg)
+
+    chunk = jax.lax.ppermute(v_local, axis_name, perm)
+    chunk, d = jax.lax.fori_loop(0, shards - 2, body, (chunk, d))
+    # last received chunk needs no forwarding — it completes the ring
+    return _chunk_rowsum(v_local, chunk, d, cfg)
+
+
+def epilogue_rowsum(v_local: jax.Array, *, cfg: MSCConfig,
+                    axis_name: AxisName, shards: int) -> jax.Array:
+    """d_local = row-block sums of |V Vᵀ| from this device's rows of V.
+
+    The paper's MPI_Allgatherv(M) + full |V Vᵀ| row-sum, under the
+    MSCConfig.epilogue policy: "allgather" replicates V (blocking
+    all_gather, O(m·c) peak buffer), "ring" streams chunks neighbor-to-
+    neighbor (O(m·c/p) peak buffer, transfer hidden under compute).
+    Operands are cast to the precision policy's compute dtype *before*
+    the collective, so bf16_fp32 also halves the epilogue link traffic.
+    """
+    if cfg.epilogue not in EPILOGUES:
+        raise ValueError(
+            f"unknown epilogue {cfg.epilogue!r}; expected {EPILOGUES}")
+    dt = compute_dtype(cfg.precision)
+    vl = v_local.astype(dt)
+    if cfg.epilogue == "ring":
+        return _ring_rowsum(vl, cfg, axis_name, shards)
+    # MPI_Allgatherv(M) over the group → full V on every group member
+    v_full = jax.lax.all_gather(vl, axis_name, axis=0, tiled=True)
+    if cfg.use_kernels:
+        from repro.kernels import ops as kops
+
+        return kops.similarity_rowsum(vl, v_full)
+    # row-block of C = |V Vᵀ| and its row sums; padded columns are zero
+    # rows of V and contribute nothing.
+    return _chunk_rowsum(vl, v_full, None, cfg)
+
+
 def _mode_local(
     block: jax.Array,
     valid_local: jax.Array,
     *,
     cfg: MSCConfig,
     axis_name: AxisName,
+    shards: int,
     vary_axes: Optional[Tuple[str, ...]] = None,
-) -> Tuple[jax.Array, jax.Array]:
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Per-device mode computation (paper Alg. 2 body, minus extraction).
 
     block: (b, r, c) — this device's slice block of one mode's unfolding.
@@ -72,40 +153,29 @@ def _mode_local(
       maxima over this axis, so every group member runs the same number of
       sweeps (lockstep exit — padding slices are all-zero and contribute
       zero residual, hence never delay the gate).
+    shards: static size of axis_name (the ring epilogue's step count).
     vary_axes: all mesh axes the data varies over (defaults to axis_name;
       the grouped schedule additionally varies over the "mode" axis).
-    Returns (d_local (b,), lam_local (b,)) — this device's shard of d, λ.
+    Returns (d_local (b,), lam_local (b,), iters (1,)) — this device's
+    shard of d and λ plus the realized power-iteration sweep count
+    (identical on every group member by the lockstep gate; shaped (1,)
+    so it passes through sharded out_specs and is max-reduced outside).
     """
     if vary_axes is None:
         vary = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
     else:
         vary = tuple(vary_axes)
-    lam, vec, _ = top_eigenpairs(block, cfg, vary_axes=vary,
-                                 axis_name=axis_name)
+    lam, vec, iters = top_eigenpairs(block, cfg, vary_axes=vary,
+                                     axis_name=axis_name)
     lam = jnp.where(valid_local, lam, 0.0)
     # MPI_Allreduce(λ, MAX) over the group — fp32 regardless of precision
     lam_max = jax.lax.pmax(jnp.max(lam), axis_name)
     v_local = (lam / jnp.maximum(lam_max, 1e-30))[:, None] * vec
     v_local = jnp.where(valid_local[:, None], v_local, 0.0)
-    # MPI_Allgatherv(M) over the group → full V on every group member
-    v_full = jax.lax.all_gather(v_local, axis_name, axis=0, tiled=True)
-    from .power_iter import compute_dtype
-
-    dt = compute_dtype(cfg.precision)
-    if cfg.use_kernels:
-        from repro.kernels import ops as kops
-
-        d_local = kops.similarity_rowsum(v_local.astype(dt),
-                                         v_full.astype(dt))
-    else:
-        # row-block of C = |V Vᵀ| and its row sums; padded columns are zero
-        # rows of V and contribute nothing.
-        c_local = jnp.abs(jnp.einsum("ic,jc->ij", v_local.astype(dt),
-                                     v_full.astype(dt),
-                                     preferred_element_type=jnp.float32))
-        d_local = jnp.sum(c_local, axis=1)
+    d_local = epilogue_rowsum(v_local, cfg=cfg, axis_name=axis_name,
+                              shards=shards)
     d_local = jnp.where(valid_local, d_local, 0.0)
-    return d_local, lam
+    return d_local, lam, iters[None]
 
 
 def _pad_and_mask(slices: jax.Array, shards: int):
@@ -146,10 +216,10 @@ def build_msc_parallel_flat(
         return _build_flat_collective(mesh, cfg, axis_name, shards, spec_ax)
 
     local = shard_map(
-        partial(_mode_local, cfg=cfg, axis_name=axis_name),
+        partial(_mode_local, cfg=cfg, axis_name=axis_name, shards=shards),
         mesh=mesh,
         in_specs=(in_spec, in_spec),
-        out_specs=(in_spec, in_spec),
+        out_specs=(in_spec, in_spec, in_spec),
     )
 
     @jax.jit
@@ -157,11 +227,12 @@ def build_msc_parallel_flat(
         modes = []
         for j in range(3):
             slices, valid, m = _pad_and_mask(mode_slices(tensor, j), shards)
-            d, lam = local(slices, valid)
+            d, lam, iters = local(slices, valid)
             mask, n_it = extract_cluster(d, cfg.epsilon, valid,
                                          cfg.max_extraction_iters)
             modes.append(ModeResult(mask=mask[:m], d=d[:m],
-                                    lambdas=lam[:m], n_iters=n_it))
+                                    lambdas=lam[:m], n_iters=n_it,
+                                    power_iters_run=jnp.max(iters)))
         return MSCResult(modes=tuple(modes))
 
     return run
@@ -183,7 +254,8 @@ def _build_flat_collective(mesh, cfg, axis_name, shards, spec_ax):
         outs = []
 
         def run_mode(block, valid):
-            return _mode_local(block, valid, cfg=cfg, axis_name=axis_name)
+            return _mode_local(block, valid, cfg=cfg, axis_name=axis_name,
+                               shards=shards)
 
         outs.append(run_mode(t_block, valid0))
 
@@ -207,7 +279,7 @@ def _build_flat_collective(mesh, cfg, axis_name, shards, spec_ax):
     local = shard_map(
         whole, mesh=mesh,
         in_specs=(in_spec, in_spec, in_spec, in_spec),
-        out_specs=tuple((in_spec, in_spec) for _ in range(3)),
+        out_specs=tuple((in_spec, in_spec, in_spec) for _ in range(3)),
     )
 
     @jax.jit
@@ -224,12 +296,13 @@ def _build_flat_collective(mesh, cfg, axis_name, shards, spec_ax):
                        for mp, m in ((m1p, m1), (m2p, m2), (m3p, m3)))
         results = local(t, *valids)
         modes = []
-        for j, ((d, lam), valid, m) in enumerate(
+        for j, ((d, lam, iters), valid, m) in enumerate(
                 zip(results, valids, (m1, m2, m3))):
             mask, n_it = extract_cluster(d, cfg.epsilon, valid,
                                          cfg.max_extraction_iters)
             modes.append(ModeResult(mask=mask[:m], d=d[:m],
-                                    lambdas=lam[:m], n_iters=n_it))
+                                    lambdas=lam[:m], n_iters=n_it,
+                                    power_iters_run=jnp.max(iters)))
         return MSCResult(modes=tuple(modes))
 
     return run
@@ -254,15 +327,16 @@ def build_msc_parallel_grouped(
 
     def local_fn(stack_block, valid_block):
         # stack_block: (1, b, r, c); collectives over slice_axis only →
-        # group-local, the analogue of the MPI group communicator.
-        d, lam = _mode_local(stack_block[0], valid_block[0], cfg=cfg,
-                             axis_name=slice_axis,
-                             vary_axes=(mode_axis, slice_axis))
-        return d[None], lam[None]
+        # group-local, the analogue of the MPI group communicator (the
+        # ring epilogue circulates chunks within each mode group).
+        d, lam, iters = _mode_local(stack_block[0], valid_block[0], cfg=cfg,
+                                    axis_name=slice_axis, shards=shards,
+                                    vary_axes=(mode_axis, slice_axis))
+        return d[None], lam[None], iters[None]
 
     spec = P(mode_axis, slice_axis)
     local = shard_map(local_fn, mesh=mesh, in_specs=(spec, spec),
-                      out_specs=(spec, spec))
+                      out_specs=(spec, spec, spec))
 
     @jax.jit
     def run(tensor: jax.Array) -> MSCResult:
@@ -276,14 +350,47 @@ def build_msc_parallel_grouped(
             stack = jnp.pad(stack, ((0, 0), (0, m_pad - m), (0, 0), (0, 0)))
         valid = jnp.arange(m_pad) < m
         valid3 = jnp.broadcast_to(valid, (3, m_pad))
-        d3, lam3 = local(stack, valid3)
+        d3, lam3, it3 = local(stack, valid3)
         modes = []
         for j in range(3):
             mask, n_it = extract_cluster(d3[j], cfg.epsilon, valid,
                                          cfg.max_extraction_iters)
             modes.append(ModeResult(mask=mask[:m], d=d3[j, :m],
-                                    lambdas=lam3[j, :m], n_iters=n_it))
+                                    lambdas=lam3[j, :m], n_iters=n_it,
+                                    power_iters_run=jnp.max(it3[j])))
         return MSCResult(modes=tuple(modes))
+
+    return run
+
+
+def build_epilogue_rowsum(mesh: Mesh, cfg: MSCConfig,
+                          axis_name: Optional[AxisName] = None):
+    """jitted V (m, c) → d (m,): the similarity epilogue in isolation.
+
+    Compiles just the MPI_Allgatherv-analogue epilogue selected by
+    cfg.epilogue over a row-sharded V (padding rows to even shards, like
+    the full schedules).  benchmarks/ring_epilogue.py compiles this to
+    measure allgather-vs-ring collective traffic without the surrounding
+    eigensolve HLO; tests use it for epilogue-only parity.
+    """
+    if axis_name is None:
+        axis_name = tuple(mesh.axis_names)
+    shards = _axis_size(mesh, axis_name)
+    spec_ax = axis_name if isinstance(axis_name, tuple) else (axis_name,)
+    in_spec = P(spec_ax)
+    local = shard_map(
+        partial(epilogue_rowsum, cfg=cfg, axis_name=axis_name,
+                shards=shards),
+        mesh=mesh, in_specs=(in_spec,), out_specs=in_spec,
+    )
+
+    @jax.jit
+    def run(v_rows: jax.Array) -> jax.Array:
+        m, _ = v_rows.shape
+        m_pad = _pad_m(m, shards)
+        if m_pad != m:
+            v_rows = jnp.pad(v_rows, ((0, m_pad - m), (0, 0)))
+        return local(v_rows)[:m]
 
     return run
 

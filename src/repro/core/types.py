@@ -42,6 +42,18 @@ class MSCConfig:
       matrix_free: if True, iterate v ← Tᵀ(T v) without forming the m3×m3
         covariance (beyond-paper optimization).  If False, form
         C_i = T_iᵀT_i explicitly — the paper-faithful baseline.
+      epilogue: how the parallel schedules assemble the marginal sums d
+        after the per-slice eigensolves (DESIGN.md §7.4):
+        "allgather" — the paper's MPI_Allgatherv analogue: one blocking
+          lax.all_gather replicates the full m×c V on every device, then
+          a single row-block |V_l Vᵀ| row-sum.  Peak epilogue buffer
+          O(m·c) per device; latency = comm + compute.
+        "ring" — p-step lax.ppermute ring: (m/p)×c chunks of V circulate
+          neighbor-to-neighbor while each device folds the chunk it
+          holds into d, so step k's matmul overlaps step k+1's transfer
+          and the full V is never resident.  Peak buffer O(m·c/p);
+          latency ≈ max(comm, compute).  Identical cluster masks.
+        Ignored by the sequential path (no collectives there).
       max_extraction_iters: cap on the Theorem II.1 trimming loop
         (≤ m always suffices: each iteration removes one element).
       use_kernels: route hot spots through the Pallas kernels in
@@ -54,6 +66,7 @@ class MSCConfig:
     power_check_every: int = 6
     precision: str = "fp32"
     matrix_free: bool = True
+    epilogue: str = "allgather"
     max_extraction_iters: int = 0  # 0 → use m (set at call time)
     use_kernels: bool = False
 
@@ -73,8 +86,10 @@ class ModeResult:
       n_iters: int — extraction iterations executed until convergence.
       power_iters_run: int — realized power-iteration sweeps (< cfg.power_iters
         when the adaptive gate fired early).  Populated by the sequential
-        path; None from the parallel schedules (the counter lives inside
-        shard_map there and is not gathered).
+        path AND the parallel schedules: the lockstep convergence gate
+        (pmax over the group axis) makes every group member run the same
+        trip count, so the parallel builders gather the per-device
+        counters and report their max.
     """
 
     mask: jax.Array

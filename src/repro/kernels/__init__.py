@@ -1,7 +1,9 @@
 """Pallas TPU kernels for the perf-critical hot spots.
 
   gram.py            — batched slice covariance C_i = T_iᵀT_i (paper Alg. 1)
-  similarity.py      — fused |V_lVᵀ| row-sums (parallel epilogue, Alg. 2)
+  similarity.py      — fused |V_lVᵀ| row-sums (allgather epilogue, Alg. 2)
+  ring.py            — fused per-chunk |A Bᵀ| row-sum accumulation (the
+                       ring epilogue's step body, DESIGN.md §7.4)
   power_iter.py      — VMEM-resident matrix-free power iteration
   flash_attention.py — chunked online-softmax attention (LM train/prefill)
 

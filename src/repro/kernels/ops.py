@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from . import flash_attention as _fa
 from . import gram as _gram
 from . import power_iter as _pi
+from . import ring as _ring
 from . import similarity as _sim
 from . import ref
 
@@ -40,6 +41,13 @@ def similarity_rowsum(v_local: jax.Array, v_full: jax.Array, *,
     """Fused d = Σ|V_l V_fᵀ| row-sums (see similarity.py)."""
     interpret = _interpret_default() if interpret is None else interpret
     return _sim.similarity_rowsum(v_local, v_full, interpret=interpret)
+
+
+def abs_rowsum(a: jax.Array, b: jax.Array, acc=None, *,
+               interpret: bool | None = None) -> jax.Array:
+    """Fused ring-step accumulation acc + Σ|a bᵀ| row-sums (see ring.py)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return _ring.abs_rowsum(a, b, acc, interpret=interpret)
 
 
 def power_iterate_matrix_free(slices: jax.Array, n_iters: int = 60,

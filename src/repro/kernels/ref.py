@@ -29,6 +29,32 @@ def similarity_rowsum(v_local: jax.Array, v_full: jax.Array) -> jax.Array:
     return jnp.sum(c, axis=1)
 
 
+def abs_rowsum(a: jax.Array, b: jax.Array, acc=None) -> jax.Array:
+    """acc + Σ_j |a @ bᵀ|_{:,j} — one ring-epilogue step (kernels/ring.py).
+
+    a: (bl, c); b: (bc, c); acc: (bl,) fp32 or None.  Returns (bl,) fp32.
+    """
+    s = jnp.abs(a.astype(jnp.float32) @ b.astype(jnp.float32).T)
+    d = jnp.sum(s, axis=1)
+    return d if acc is None else acc.astype(jnp.float32) + d
+
+
+def ring_rowsum(v_chunks, start: int = 0) -> jax.Array:
+    """Ring-schedule row-sums, host-side oracle.
+
+    v_chunks: list of p (m/p, c) chunks of V (device-order partition).
+    Simulates device `start`'s accumulation order: own chunk first, then
+    neighbours' chunks as they arrive around the ring (start-1, start-2,
+    …) — the exact floating-point summation order of the ppermute
+    epilogue, for bit-parity tests against the shard_map implementation.
+    """
+    p = len(v_chunks)
+    d = abs_rowsum(v_chunks[start], v_chunks[start])
+    for step in range(1, p):
+        d = abs_rowsum(v_chunks[start], v_chunks[(start - step) % p], d)
+    return d
+
+
 def power_iterate(slices: jax.Array, v0: jax.Array, n_iters: int):
     """Matrix-free power iteration: v ← normalize(T_iᵀ(T_i v)), n_iters times.
 

@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: fused per-chunk |A Bᵀ| row-sum accumulation.
+
+This is the compute body of the ring similarity epilogue (DESIGN.md
+§7.4): at each of the p ring steps a device holds one (m/p)×c chunk of
+the normalized matrix V and folds its contribution into the running
+marginal sums, d += Σ_j |V_local · chunkᵀ|_{:,j}.  Like the all-gather
+epilogue kernel (similarity.py) the m×m similarity tile never touches
+HBM; unlike it, the accumulator rides through the kernel so the ring
+step is a single fused matmul→|·|→row-reduce→add with no jnp epilogue.
+
+Grid: (i, j) over (bl × bc) tiles, j innermost.  The (block_i, 1) output
+block is revisited across j (classic accumulation schedule): j == 0
+initializes it from the carried-in accumulator, later steps add their
+tile's row-sums.  Operands stay in their native dtype (fp32 or bf16
+under the mixed-precision policy); the dot and the accumulator are fp32.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _abs_rowsum_kernel(a_ref, b_ref, acc_ref, o_ref):
+    a = a_ref[...]  # (block_i, c), native operand dtype (fp32 or bf16)
+    b = b_ref[...]  # (block_j, c)
+    s = jax.lax.dot_general(a, b, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    partial = jnp.sum(jnp.abs(s), axis=1)[:, None]
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = acc_ref[...] + partial
+
+    @pl.when(pl.program_id(1) > 0)
+    def _accumulate():
+        o_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("block_i", "block_j", "interpret"))
+def abs_rowsum(a: jax.Array, b: jax.Array,
+               acc: Optional[jax.Array] = None, *,
+               block_i: int = 128, block_j: int = 128,
+               interpret: bool = False) -> jax.Array:
+    """acc + row-sums of |a @ bᵀ| — the ring-step epilogue, fused.
+
+    a: (bl, c) — this device's rows of V (fixed across ring steps).
+    b: (bc, c) — the circulating chunk of V.
+    acc: (bl,) fp32 running sums, or None for zeros (first step).
+    Zero-padding rows of `b` contribute |0| = 0, which is exactly how the
+    parallel caller pads the slice dimension to even shards.
+    """
+    bl, c = a.shape
+    bc, _ = b.shape
+    acc = jnp.zeros((bl,), jnp.float32) if acc is None \
+        else acc.astype(jnp.float32)
+    block_i = min(block_i, bl)
+    block_j = min(block_j, bc)
+    ip = pl.cdiv(bl, block_i) * block_i
+    jp = pl.cdiv(bc, block_j) * block_j
+    if ip != bl:
+        a = jnp.pad(a, ((0, ip - bl), (0, 0)))
+        acc = jnp.pad(acc, (0, ip - bl))
+    if jp != bc:
+        b = jnp.pad(b, ((0, jp - bc), (0, 0)))
+
+    out = pl.pallas_call(
+        _abs_rowsum_kernel,
+        grid=(ip // block_i, jp // block_j),
+        in_specs=[
+            pl.BlockSpec((block_i, c), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_j, c), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_i, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_i, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((ip, 1), jnp.float32),
+        interpret=interpret,
+    )(a, b, acc[:, None])
+    return out[:bl, 0]

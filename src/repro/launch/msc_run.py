@@ -36,6 +36,10 @@ def main(argv=None) -> int:
     ap.add_argument("--relayout", default="gspmd",
                     choices=("gspmd", "collective"),
                     help="flat-schedule mode relayout (§Perf msc it 2)")
+    ap.add_argument("--epilogue", default="allgather",
+                    choices=("allgather", "ring"),
+                    help="similarity epilogue: blocking all_gather of V "
+                         "vs ppermute-streamed ring (DESIGN.md §7.4)")
     ap.add_argument("--power-iters", type=int, default=60,
                     help="power-iteration sweep cap")
     ap.add_argument("--power-tol", type=float, default=1e-2,
@@ -61,13 +65,13 @@ def main(argv=None) -> int:
     spec = PlantedSpec.paper(m, gamma)
     cfg = MSCConfig(epsilon=eps, power_iters=args.power_iters,
                     power_tol=args.power_tol, precision=args.precision,
-                    matrix_free=not args.gram, max_extraction_iters=m,
-                    use_kernels=args.kernels)
+                    matrix_free=not args.gram, epilogue=args.epilogue,
+                    max_extraction_iters=m, use_kernels=args.kernels)
 
     print(f"MSC m={m}^3 gamma={gamma} eps={eps:.2e} l={l} "
           f"schedule={args.schedule} matrix_free={not args.gram} "
           f"power_tol={args.power_tol} precision={args.precision} "
-          f"devices={len(jax.devices())}")
+          f"epilogue={args.epilogue} devices={len(jax.devices())}")
 
     if args.schedule == "sequential":
         run = lambda t: msc_sequential(t, cfg)  # noqa: E731

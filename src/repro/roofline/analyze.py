@@ -116,6 +116,56 @@ class RooflineReport:
                 f"roofline={self.roofline_fraction:5.1%}")
 
 
+def epilogue_model(m: int, c: int, p: int, *, epilogue: str = "allgather",
+                   dtype_bytes: float = 4.0, hw: HwSpec = V5E) -> Dict:
+    """Analytic comm/compute/memory model of the MSC similarity epilogue.
+
+    Models the Alg. 2 epilogue (d = row-sums of |V Vᵀ|, V ∈ R^{m×c})
+    per device on a p-device ring, for both MSCConfig.epilogue policies
+    (DESIGN.md §7.4).  Both move the same per-link bytes —
+    (p−1)/p · m·c·B — but differ in peak buffer and overlap:
+
+      allgather: one blocking all_gather replicates V (peak buffer
+        m·c·B), then the row-block matmul runs — latency is the *sum*
+        comm_s + compute_s.
+      ring: p−1 ppermute steps of one (m/p)×c chunk each (peak buffer
+        chunk_bytes); each transfer is hidden under the concurrent chunk
+        matmul — latency ≈ first chunk's compute + (p−1)·max(step comm,
+        step compute).
+
+    m is padded to even shards exactly like the schedules pad it, so the
+    predicted bytes match the compiled collectives (fig8 / BENCH_ring_
+    epilogue contract: within 10%).  Returns a dict of link_bytes,
+    peak_buffer_bytes, comm_s, compute_s, latency_s (plus the inputs).
+    """
+    if epilogue not in ("allgather", "ring"):
+        raise ValueError(f"unknown epilogue {epilogue!r}")
+    m_pad = ((m + p - 1) // p) * p
+    rows = m_pad // p
+    chunk_bytes = rows * c * dtype_bytes
+    full_bytes = m_pad * c * dtype_bytes
+    # per-device epilogue matmul: (m/p) × c rows against all m_pad rows
+    flops = 2.0 * rows * m_pad * c
+    compute_s = flops / hw.peak_flops_bf16
+    link_bytes = (p - 1) * chunk_bytes  # == full_bytes * (p-1)/p, both
+    comm_s = link_bytes / hw.ici_bw
+    if epilogue == "allgather":
+        peak_buffer = full_bytes
+        latency_s = comm_s + compute_s
+    else:
+        peak_buffer = chunk_bytes
+        step_comm = chunk_bytes / hw.ici_bw
+        step_compute = compute_s / p
+        latency_s = step_compute + (p - 1) * max(step_comm, step_compute)
+    return {
+        "epilogue": epilogue, "m": m, "c": c, "p": p,
+        "dtype_bytes": dtype_bytes,
+        "link_bytes": link_bytes, "peak_buffer_bytes": peak_buffer,
+        "chunk_bytes": chunk_bytes, "flops": flops,
+        "comm_s": comm_s, "compute_s": compute_s, "latency_s": latency_s,
+    }
+
+
 def _memory_stats_dict(compiled) -> Dict:
     try:
         ms = compiled.memory_analysis()

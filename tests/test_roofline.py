@@ -131,3 +131,41 @@ assert 0.5 < rep.flops_ratio <= 1.5, rep.flops_ratio
 print("OK")
 """, 4)
         assert "OK" in out
+
+
+class TestEpilogueModel:
+    def test_link_bytes_equal_buffer_differs(self):
+        from repro.roofline import epilogue_model
+
+        m, c, p = 1000, 1000, 8
+        ag = epilogue_model(m, c, p, epilogue="allgather")
+        ring = epilogue_model(m, c, p, epilogue="ring")
+        # both move (p-1)/p * m_pad*c*B per link
+        assert ag["link_bytes"] == ring["link_bytes"]
+        assert ag["link_bytes"] == pytest.approx((p - 1) * (1000 // p) * c * 4)
+        # ring peak buffer is exactly p x smaller (one chunk vs full V)
+        assert ag["peak_buffer_bytes"] == p * ring["peak_buffer_bytes"]
+        # overlap: ring latency strictly below comm + compute
+        assert ring["latency_s"] < ag["latency_s"]
+        assert ring["latency_s"] >= max(ring["comm_s"],
+                                        ring["compute_s"]) * 0.99
+
+    def test_padding_rounds_up_to_shards(self):
+        from repro.roofline import epilogue_model
+
+        r = epilogue_model(45, 45, 8, epilogue="ring")
+        assert r["chunk_bytes"] == (48 // 8) * 45 * 4
+        assert r["link_bytes"] == 7 * r["chunk_bytes"]
+
+    def test_bf16_halves_traffic(self):
+        from repro.roofline import epilogue_model
+
+        f32 = epilogue_model(64, 64, 4, epilogue="ring")
+        bf16 = epilogue_model(64, 64, 4, epilogue="ring", dtype_bytes=2)
+        assert bf16["link_bytes"] * 2 == f32["link_bytes"]
+
+    def test_rejects_unknown(self):
+        from repro.roofline import epilogue_model
+
+        with pytest.raises(ValueError):
+            epilogue_model(10, 10, 2, epilogue="bogus")
