@@ -40,10 +40,12 @@ def run(full: bool = False) -> List[Dict]:
                  "flops": 2.0 * b * r * c * c,
                  "vmem_tile_kib": (64 * c + 64 * 64) * 4 / 1024})
 
-    # fused similarity row-sum
+    # fused similarity row-sum — the allgather epilogue's one-shot call
+    # into the consolidated abs_rowsum kernel, checked against the
+    # retired similarity.py kernel's oracle
     vl = jax.random.normal(key, (b, c), jnp.float32)
     vf = jax.random.normal(key, (4 * b, c), jnp.float32)
-    d_k = ops.similarity_rowsum(vl, vf, interpret=True)
+    d_k = ops.abs_rowsum(vl, vf, interpret=True)
     d_r = ref.similarity_rowsum(vl, vf)
     t = time_fn(jax.jit(ref.similarity_rowsum), vl, vf)
     rows.append({"kernel": "similarity_rowsum", "shape": f"{b}x{4*b}x{c}",

@@ -7,6 +7,7 @@
   kernel_bench        (new) Pallas kernels vs jnp oracles
   power_iter_bench    (new) adaptive vs fixed-60 eigensolver (DESIGN.md §7.3)
   ring_epilogue       (new) ring vs allgather epilogue traffic (DESIGN.md §7.4)
+  inner_shard         (new) 2-D (slice,inner) memory/latency (DESIGN.md §7.5)
 
 Usage:
   PYTHONPATH=src python -m benchmarks.run            # CPU-feasible sizes
@@ -26,8 +27,9 @@ import traceback
 from .common import print_rows, save_rows
 
 ALL = ("fig4_quality", "fig5_strong_scaling", "fig6_data_scaling",
-       "fig8_comm", "kernel_bench", "power_iter_bench", "ring_epilogue")
-QUICK = ("power_iter_bench", "kernel_bench", "ring_epilogue")
+       "fig8_comm", "kernel_bench", "power_iter_bench", "ring_epilogue",
+       "inner_shard")
+QUICK = ("power_iter_bench", "kernel_bench", "ring_epilogue", "inner_shard")
 
 
 def main(argv=None) -> int:

@@ -5,6 +5,7 @@ Public API:
   make_planted_tensor, planted_masks, planted_factors (synthetic data, §IV)
   msc_sequential, msc_similarity_matrices             (Alg. 1 reference)
   build_msc_parallel, make_msc_mesh                   (Alg. 2, shard_map)
+  ModeSchedule, epilogue_rowsum                       (schedule substrate)
   extract_cluster, max_gap_init, trim_to_theorem      (cluster extraction)
   recovery_rate, similarity_index                     (Eq. 6 metrics)
   wishart_mu_sigma, tw_threshold, theorem_threshold   (§II statistics)
@@ -33,6 +34,7 @@ from .parallel import (
     build_msc_parallel_grouped,
     make_msc_mesh,
 )
+from .schedule import ModeSchedule, build_epilogue_rowsum, epilogue_rowsum
 from .extraction import extract_cluster, max_gap_init, trim_to_theorem
 from .metrics import recovery_rate, similarity_index, similarity_index_mode
 from .stats import (

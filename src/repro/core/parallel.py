@@ -1,14 +1,20 @@
 """Parallel MSC via shard_map (paper Alg. 2, adapted to SPMD/TPU).
 
-Two schedules:
+All schedules are thin *layout declarations* over the shared
+`core/schedule.py:ModeSchedule` substrate, which owns the padding and
+validity masks, the PartitionSpecs, the per-device Alg. 2 body
+(eigensolve → λ pmax → normalize → similarity epilogue), the lockstep
+convergence gating, and the epilogue dispatch.  What remains here is
+only what genuinely differs per schedule: which mesh axes play which
+role, and how the tensor moves between the three mode layouts.
 
-* **flat** (beyond-paper): the three modes are processed one after another,
-  each using *all* devices along a (possibly composite) mesh axis.  Per
-  mode this gives 3× the parallelism of the paper's grouped layout and
-  holds one layout of the tensor at a time.  Because all three modes live
-  in one jit, XLA's scheduler is free to interleave mode-2's eigensolves
-  with mode-1's collectives — recovering the paper's cross-mode overlap
-  without dedicating processes to it.
+* **flat** (beyond-paper): the three modes are processed one after
+  another, each using *all* slice-axis devices.  Per mode this gives 3×
+  the parallelism of the paper's grouped layout and holds one layout of
+  the tensor at a time.  Because all three modes live in one jit, XLA's
+  scheduler is free to interleave mode-2's eigensolves with mode-1's
+  collectives — recovering the paper's cross-mode overlap without
+  dedicating processes to it.
 
 * **grouped** (paper-faithful): mesh axes ("mode"=3, "slice"=p/3), the
   MPI 3-group layout of Fig. 3.  The stacked unfoldings are sharded
@@ -16,6 +22,13 @@ Two schedules:
   its slicing axis; collectives run over the "slice" axis only — the
   exact analogue of the paper's group communicators.  Cube tensors only
   (the MPI version has the same restriction in its balanced setting).
+
+* **2-D ("slice", "inner") meshes** (DESIGN.md §7.5): every schedule
+  additionally accepts an "inner" mesh axis that shards the
+  *within-slice* row dim r, dropping per-device tensor memory to
+  O(m·r·c/(p·q)) so a single slice can exceed one device's HBM.  The
+  eigensolve contractions psum over "inner"; the λ reduction, gate, and
+  epilogue stay on the slice axes (see core/schedule.py).
 
 Collective mapping (paper → here):
   MPI_Allgatherv(M)      → epilogue="allgather": lax.all_gather(V_local,
@@ -32,166 +45,53 @@ Collective mapping (paper → here):
                            replicated under jit instead of on one root —
                            removes the root bottleneck and the final
                            Gatherv(J) entirely.
+  (new, no MPI analogue) → lax.psum(partial Tᵀ(T v), "inner") — the
+                           distributed eigensolve contraction.
 """
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Optional, Sequence, Tuple, Union
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
 from repro.compat import shard_map
+from repro.launch.mesh import make_msc_mesh  # noqa: F401  (public re-export)
 
-from .extraction import extract_cluster
-from .msc import MODE_PERMS, mode_slices
-from .power_iter import compute_dtype, top_eigenpairs
-from .types import ModeResult, MSCConfig, MSCResult
-
-AxisName = Union[str, Tuple[str, ...]]
-
-EPILOGUES = ("allgather", "ring")
+from .msc import mode_slices
+from .schedule import (EPILOGUES, ModeSchedule, axis_arg,  # noqa: F401
+                       build_epilogue_rowsum, epilogue_rowsum, norm_axes,
+                       pad_to)
+from .types import MSCConfig, MSCResult
 
 
-def _axis_size(mesh: Mesh, axis: AxisName) -> int:
-    if isinstance(axis, str):
-        return mesh.shape[axis]
-    return math.prod(mesh.shape[a] for a in axis)
+def _flat_schedule(mesh: Mesh, cfg: MSCConfig, axis_name,
+                   inner_axis) -> ModeSchedule:
+    """Resolve the flat schedule's axis roles.
 
-
-def _pad_m(m: int, shards: int) -> int:
-    return ((m + shards - 1) // shards) * shards
-
-
-def _chunk_rowsum(v_local: jax.Array, chunk: jax.Array,
-                  acc: Optional[jax.Array], cfg: MSCConfig) -> jax.Array:
-    """acc + Σ_j |v_local · chunkᵀ|_{:,j} — one epilogue block contribution."""
-    if cfg.use_kernels:
-        from repro.kernels import ops as kops
-
-        return kops.abs_rowsum(v_local, chunk, acc)
-    prod = jnp.abs(jnp.einsum("ic,jc->ij", v_local, chunk,
-                              preferred_element_type=jnp.float32))
-    d = jnp.sum(prod, axis=1)
-    return d if acc is None else acc + d
-
-
-def _ring_rowsum(v_local: jax.Array, cfg: MSCConfig, axis_name: AxisName,
-                 shards: int) -> jax.Array:
-    """Ring similarity epilogue (DESIGN.md §7.4).
-
-    p-1 lax.ppermute steps circulate the (b, c) chunks of V around the
-    group axis; each device folds the chunk it currently holds into its
-    running row-sums.  Inside the loop body the forward ppermute and the
-    chunk matmul both read the carried chunk and are otherwise
-    independent, so XLA's async collective-permute can hide step k+1's
-    transfer under step k's compute.  The full m×c V is never resident:
-    peak epilogue buffer is one chunk (plus the recv landing buffer).
+    axis_name=None derives the roles from the mesh via the MSC logical
+    axes (sharding/specs.py): "inner" shards rows when present, every
+    other axis composes the slice axis — so 1-D and production
+    (data, model) meshes behave exactly as before 2-D sharding.
     """
-    d = _chunk_rowsum(v_local, v_local, None, cfg)
-    if shards == 1:
-        return d
-    perm = [(i, (i + 1) % shards) for i in range(shards)]
-
-    def body(_, carry):
-        chunk, d = carry
-        nxt = jax.lax.ppermute(chunk, axis_name, perm)
-        return nxt, _chunk_rowsum(v_local, chunk, d, cfg)
-
-    chunk = jax.lax.ppermute(v_local, axis_name, perm)
-    chunk, d = jax.lax.fori_loop(0, shards - 2, body, (chunk, d))
-    # last received chunk needs no forwarding — it completes the ring
-    return _chunk_rowsum(v_local, chunk, d, cfg)
-
-
-def epilogue_rowsum(v_local: jax.Array, *, cfg: MSCConfig,
-                    axis_name: AxisName, shards: int) -> jax.Array:
-    """d_local = row-block sums of |V Vᵀ| from this device's rows of V.
-
-    The paper's MPI_Allgatherv(M) + full |V Vᵀ| row-sum, under the
-    MSCConfig.epilogue policy: "allgather" replicates V (blocking
-    all_gather, O(m·c) peak buffer), "ring" streams chunks neighbor-to-
-    neighbor (O(m·c/p) peak buffer, transfer hidden under compute).
-    Operands are cast to the precision policy's compute dtype *before*
-    the collective, so bf16_fp32 also halves the epilogue link traffic.
-    """
-    if cfg.epilogue not in EPILOGUES:
-        raise ValueError(
-            f"unknown epilogue {cfg.epilogue!r}; expected {EPILOGUES}")
-    dt = compute_dtype(cfg.precision)
-    vl = v_local.astype(dt)
-    if cfg.epilogue == "ring":
-        return _ring_rowsum(vl, cfg, axis_name, shards)
-    # MPI_Allgatherv(M) over the group → full V on every group member
-    v_full = jax.lax.all_gather(vl, axis_name, axis=0, tiled=True)
-    if cfg.use_kernels:
-        from repro.kernels import ops as kops
-
-        return kops.similarity_rowsum(vl, v_full)
-    # row-block of C = |V Vᵀ| and its row sums; padded columns are zero
-    # rows of V and contribute nothing.
-    return _chunk_rowsum(vl, v_full, None, cfg)
-
-
-def _mode_local(
-    block: jax.Array,
-    valid_local: jax.Array,
-    *,
-    cfg: MSCConfig,
-    axis_name: AxisName,
-    shards: int,
-    vary_axes: Optional[Tuple[str, ...]] = None,
-) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Per-device mode computation (paper Alg. 2 body, minus extraction).
-
-    block: (b, r, c) — this device's slice block of one mode's unfolding.
-    valid_local: bool (b,) — False on padding slices.
-    axis_name: mesh axes the collectives run over (the "group communicator").
-      The adaptive eigensolver's convergence gate pmax-reduces its residual
-      maxima over this axis, so every group member runs the same number of
-      sweeps (lockstep exit — padding slices are all-zero and contribute
-      zero residual, hence never delay the gate).
-    shards: static size of axis_name (the ring epilogue's step count).
-    vary_axes: all mesh axes the data varies over (defaults to axis_name;
-      the grouped schedule additionally varies over the "mode" axis).
-    Returns (d_local (b,), lam_local (b,), iters (1,)) — this device's
-    shard of d and λ plus the realized power-iteration sweep count
-    (identical on every group member by the lockstep gate; shaped (1,)
-    so it passes through sharded out_specs and is max-reduced outside).
-    """
-    if vary_axes is None:
-        vary = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
+    if axis_name is not None:
+        slice_axes, inner_axes = norm_axes(axis_name), norm_axes(inner_axis)
     else:
-        vary = tuple(vary_axes)
-    lam, vec, iters = top_eigenpairs(block, cfg, vary_axes=vary,
-                                     axis_name=axis_name)
-    lam = jnp.where(valid_local, lam, 0.0)
-    # MPI_Allreduce(λ, MAX) over the group — fp32 regardless of precision
-    lam_max = jax.lax.pmax(jnp.max(lam), axis_name)
-    v_local = (lam / jnp.maximum(lam_max, 1e-30))[:, None] * vec
-    v_local = jnp.where(valid_local[:, None], v_local, 0.0)
-    d_local = epilogue_rowsum(v_local, cfg=cfg, axis_name=axis_name,
-                              shards=shards)
-    d_local = jnp.where(valid_local, d_local, 0.0)
-    return d_local, lam, iters[None]
+        from repro.sharding.specs import msc_axes
 
-
-def _pad_and_mask(slices: jax.Array, shards: int):
-    m = slices.shape[0]
-    m_pad = _pad_m(m, shards)
-    if m_pad != m:
-        slices = jnp.pad(slices, ((0, m_pad - m), (0, 0), (0, 0)))
-    valid = jnp.arange(m_pad) < m
-    return slices, valid, m
+        slice_axes, inner_axes = msc_axes(
+            mesh, inner_axis=inner_axis if inner_axis is not None else "inner")
+    return ModeSchedule(mesh, cfg, slice_axes, inner_axes)
 
 
 def build_msc_parallel_flat(
     mesh: Mesh,
     cfg: MSCConfig,
-    axis_name: Optional[AxisName] = None,
+    axis_name=None,
     relayout: str = "gspmd",
+    inner_axis: Optional[str] = None,
 ):
     """jitted tensor → MSCResult, flat schedule (all devices per mode).
 
@@ -200,109 +100,113 @@ def build_msc_parallel_flat(
                      partitioner picks the collectives.  Measured on
                      m=1000/256 devices: ~6-8 GiB/device of involuntary
                      full-rematerialization fusions (§Perf msc it 2).
-      "collective" — one explicit `lax.all_to_all` per extra mode inside
-                     shard_map (the SPMD analogue of the paper's
-                     per-group redistribution, Fig. 3): exactly
+      "collective" — explicit `lax.all_to_all`s inside shard_map (the
+                     SPMD analogue of the paper's per-group
+                     redistribution, Fig. 3): exactly
                      tensor_bytes/device of link traffic, no
-                     materialized intermediates.
+                     materialized intermediates.  On 2-D meshes one
+                     extra all_to_all over "inner" first frees the
+                     row-sharded dim (see _build_flat_collective).
     """
-    if axis_name is None:
-        axis_name = tuple(mesh.axis_names)
-    shards = _axis_size(mesh, axis_name)
-    spec_ax = axis_name if isinstance(axis_name, tuple) else (axis_name,)
-    in_spec = P(spec_ax)
-
+    sched = _flat_schedule(mesh, cfg, axis_name, inner_axis)
     if relayout == "collective":
-        return _build_flat_collective(mesh, cfg, axis_name, shards, spec_ax)
-
-    local = shard_map(
-        partial(_mode_local, cfg=cfg, axis_name=axis_name, shards=shards),
-        mesh=mesh,
-        in_specs=(in_spec, in_spec),
-        out_specs=(in_spec, in_spec, in_spec),
-    )
+        return _build_flat_collective(sched)
+    if relayout != "gspmd":
+        raise ValueError(f"unknown relayout {relayout!r}; "
+                         f"expected 'gspmd' or 'collective'")
 
     @jax.jit
     def run(tensor: jax.Array) -> MSCResult:
         modes = []
         for j in range(3):
-            slices, valid, m = _pad_and_mask(mode_slices(tensor, j), shards)
-            d, lam, iters = local(slices, valid)
-            mask, n_it = extract_cluster(d, cfg.epsilon, valid,
-                                         cfg.max_extraction_iters)
-            modes.append(ModeResult(mask=mask[:m], d=d[:m],
-                                    lambdas=lam[:m], n_iters=n_it,
-                                    power_iters_run=jnp.max(iters)))
+            d, lam, iters, valid, m = sched.run_mode(mode_slices(tensor, j))
+            modes.append(sched.finalize_mode(d, lam, iters, valid, m))
         return MSCResult(modes=tuple(modes))
 
     return run
 
 
-def _build_flat_collective(mesh, cfg, axis_name, shards, spec_ax):
+def _build_flat_collective(sched: ModeSchedule):
     """Flat schedule with explicit all_to_all relayout (§Perf msc it 2).
 
-    The tensor is distributed once, sharded along mode-1 slices; modes 2
-    and 3 re-slice it with ONE tiled all_to_all each (split the target
-    mode's axis, concatenate the gathered mode-1 rows).  Padding rows
-    are zero and drop out of every covariance (TᵀT sums over rows), so
-    the per-mode valid masks only gate the *slice* index."""
-    in_spec = P(spec_ax)
+    The tensor is distributed once — mode-1 slices over the slice axes,
+    mode-1 rows (= m2) over the inner axes — and each dim is padded up
+    front to the multiple its all_to_all splits demand (m1: p·q, m2:
+    lcm(p, q), m3: p) so each relayout is a clean tiled all_to_all.
+    Zero row-padding drops out of every covariance (TᵀT
+    sums over rows); zero *column*-padding is neutralized by masking
+    the eigensolver's start vector to the true column count (`c_valid`,
+    bit-identical iterates — see core/power_iter._init_vectors), so the
+    per-mode valid masks still only gate the slice index.
 
-    def whole(t_block, valid0, valid1, valid2):
-        # t_block: (B0, m2, m3) — my mode-1 slice block (m1 pre-padded).
-        b0, m2, m3 = t_block.shape
-        outs = []
+    Relayout on a (p, q) mesh (q=1 degenerates to the 1-D paths):
+      step A (shared):  all_to_all over "inner" (split m1, concat m2)
+                        frees the row-sharded dim: every device now
+                        holds full m2/m3 ranges of a (m1/(p·q))-row
+                        block — m1 re-shards jointly over both axes,
+                        which is harmless because m1 is a pure
+                        contraction dim for modes 2 and 3.
+      mode 2:           all_to_all over slice (split m2, concat m1).
+      mode 3:           all_to_all over slice (split m3, concat m1).
+    Each a2a moves exactly tensor_bytes/device of link traffic.
+    """
+    mesh, cfg = sched.mesh, sched.cfg
+    slice_ax, inner_ax = sched.slice_axis, sched.inner_axis
+    p, q = sched.slice_shards, sched.inner_shards
+    # per-dim pad multiples: m1 is split by p then re-split by q (step
+    # A); m2 is inner-sharded (q) and later slice-split (p); m3 is only
+    # ever slice-split — keeping each minimal avoids inflating the c
+    # width (m3 is the column dim of modes 1/2, m2 of mode 3)
+    m1_mult = p * q
+    m2_mult = p * q // math.gcd(p, q)
+    m3_mult = p
+    in_spec = sched.vector_spec
 
-        def run_mode(block, valid):
-            return _mode_local(block, valid, cfg=cfg, axis_name=axis_name,
-                               shards=shards)
+    def whole(t_block, valid0, valid1, valid2, *, c_valids):
+        # t_block: (m1P/p, m2P/q, m3P) — my block of the mode-1 layout.
+        outs = [sched.mode_local(t_block, valid0, c_valid=c_valids[0])]
 
-        outs.append(run_mode(t_block, valid0))
-
-        # mode 2: pad m2 locally, all_to_all(split ax1 → concat ax0)
-        m2p = _pad_m(m2, shards)
-        blk = jnp.pad(t_block, ((0, 0), (0, m2p - m2), (0, 0)))
-        blk = jax.lax.all_to_all(blk, axis_name, split_axis=1,
-                                 concat_axis=0, tiled=True)
-        # (m1_pad, B1, m3) → slice-major (B1, m1_pad, m3)
-        outs.append(run_mode(jnp.transpose(blk, (1, 0, 2)), valid1))
-
-        # mode 3: pad m3 locally, all_to_all(split ax2 → concat ax0)
-        m3p = _pad_m(m3, shards)
-        blk = jnp.pad(t_block, ((0, 0), (0, 0), (0, m3p - m3)))
-        blk = jax.lax.all_to_all(blk, axis_name, split_axis=2,
-                                 concat_axis=0, tiled=True)
-        # (m1_pad, m2, B2) → slice-major (B2, m1_pad, m2)
-        outs.append(run_mode(jnp.transpose(blk, (2, 0, 1)), valid2))
+        blk = t_block
+        if sched.inner_axes:  # step A: free the inner-sharded dim
+            blk = jax.lax.all_to_all(blk, inner_ax, split_axis=0,
+                                     concat_axis=1, tiled=True)
+        # mode 2: m2 takes the slice axes; (m1P/(pq), m2P, m3P) →
+        # (m1P/q, m2P/p, m3P) → slice-major (m2P/p, m1P/q, m3P)
+        b2 = jax.lax.all_to_all(blk, slice_ax, split_axis=1,
+                                concat_axis=0, tiled=True)
+        outs.append(sched.mode_local(jnp.transpose(b2, (1, 0, 2)), valid1,
+                                     c_valid=c_valids[1]))
+        # mode 3: m3 takes the slice axes → slice-major (m3P/p, m1P/q, m2P)
+        b3 = jax.lax.all_to_all(blk, slice_ax, split_axis=2,
+                                concat_axis=0, tiled=True)
+        outs.append(sched.mode_local(jnp.transpose(b3, (2, 0, 1)), valid2,
+                                     c_valid=c_valids[2]))
         return tuple(outs)
-
-    local = shard_map(
-        whole, mesh=mesh,
-        in_specs=(in_spec, in_spec, in_spec, in_spec),
-        out_specs=tuple((in_spec, in_spec, in_spec) for _ in range(3)),
-    )
 
     @jax.jit
     def run(tensor: jax.Array) -> MSCResult:
         m1, m2, m3 = tensor.shape
-        m1p, m2p, m3p = (_pad_m(m, shards) for m in (m1, m2, m3))
-        t = jnp.pad(tensor, ((0, m1p - m1), (0, 0), (0, 0)))
-        # pin the padded tensor's layout to mode-1-slice sharding so the
+        m1p, m2p, m3p = (pad_to(m, mult) for m, mult in
+                         ((m1, m1_mult), (m2, m2_mult), (m3, m3_mult)))
+        t = jnp.pad(tensor, ((0, m1p - m1), (0, m2p - m2), (0, m3p - m3)))
+        # pin the padded tensor's layout to (slice, inner) sharding so the
         # initial redistribution is one well-defined reshard instead of
         # GSPMD's replicate-then-slice fallback (§Perf msc it 2b)
         t = jax.lax.with_sharding_constraint(
-            t, NamedSharding(mesh, P(spec_ax)))
+            t, NamedSharding(mesh, sched.block_spec))
+        local = shard_map(
+            # c of modes 1/2 is m3, of mode 3 is m2 (static per shape)
+            lambda *a: whole(*a, c_valids=(m3, m3, m2)),
+            mesh=mesh,
+            in_specs=(sched.block_spec, in_spec, in_spec, in_spec),
+            out_specs=tuple((in_spec, in_spec, in_spec) for _ in range(3)),
+        )
         valids = tuple(jnp.arange(mp) < m
                        for mp, m in ((m1p, m1), (m2p, m2), (m3p, m3)))
         results = local(t, *valids)
         modes = []
-        for j, ((d, lam, iters), valid, m) in enumerate(
-                zip(results, valids, (m1, m2, m3))):
-            mask, n_it = extract_cluster(d, cfg.epsilon, valid,
-                                         cfg.max_extraction_iters)
-            modes.append(ModeResult(mask=mask[:m], d=d[:m],
-                                    lambdas=lam[:m], n_iters=n_it,
-                                    power_iters_run=jnp.max(iters)))
+        for (d, lam, iters), valid, m in zip(results, valids, (m1, m2, m3)):
+            modes.append(sched.finalize_mode(d, lam, iters, valid, m))
         return MSCResult(modes=tuple(modes))
 
     return run
@@ -313,30 +217,36 @@ def build_msc_parallel_grouped(
     cfg: MSCConfig,
     mode_axis: str = "mode",
     slice_axis: str = "slice",
+    inner_axis: Optional[str] = None,
 ):
     """jitted tensor → MSCResult, paper-faithful 3-group schedule.
 
     Requires mesh.shape[mode_axis] == 3 and a cube tensor.  The stacked
-    unfoldings (3, m, r, c) are sharded (mode, slice): each group of
-    p/3 devices holds exactly its own unfolding, block-distributed along
-    the slicing axis — the data layout of paper Fig. 3.
+    unfoldings (3, m, r, c) are sharded (mode, slice[, inner]): each
+    group of p/3 devices holds exactly its own unfolding,
+    block-distributed along the slicing axis (and, on 3-D meshes, its
+    rows along the inner axis) — the data layout of paper Fig. 3.
     """
     if mesh.shape[mode_axis] != 3:
-        raise ValueError(f"grouped schedule needs {mode_axis}=3, got mesh {mesh.shape}")
-    shards = mesh.shape[slice_axis]
+        raise ValueError(
+            f"grouped schedule needs {mode_axis}=3, got mesh {mesh.shape}")
+    if inner_axis is None and "inner" in mesh.shape:
+        inner_axis = "inner"
+    sched = ModeSchedule(mesh, cfg, slice_axes=(slice_axis,),
+                         inner_axes=norm_axes(inner_axis),
+                         group_axes=(mode_axis,))
 
     def local_fn(stack_block, valid_block):
-        # stack_block: (1, b, r, c); collectives over slice_axis only →
+        # stack_block: (1, b, r, c); collectives over slice/inner only →
         # group-local, the analogue of the MPI group communicator (the
         # ring epilogue circulates chunks within each mode group).
-        d, lam, iters = _mode_local(stack_block[0], valid_block[0], cfg=cfg,
-                                    axis_name=slice_axis, shards=shards,
-                                    vary_axes=(mode_axis, slice_axis))
+        d, lam, iters = sched.mode_local(stack_block[0], valid_block[0])
         return d[None], lam[None], iters[None]
 
-    spec = P(mode_axis, slice_axis)
-    local = shard_map(local_fn, mesh=mesh, in_specs=(spec, spec),
-                      out_specs=(spec, spec, spec))
+    local = shard_map(local_fn, mesh=mesh,
+                      in_specs=(sched.stacked_block_spec,
+                                sched.stacked_vector_spec),
+                      out_specs=(sched.stacked_vector_spec,) * 3)
 
     @jax.jit
     def run(tensor: jax.Array) -> MSCResult:
@@ -345,73 +255,27 @@ def build_msc_parallel_grouped(
             raise ValueError("grouped schedule requires a cube tensor")
         stack = jnp.stack([mode_slices(tensor, j) for j in range(3)])
         m = m1
-        m_pad = _pad_m(m, shards)
-        if m_pad != m:
-            stack = jnp.pad(stack, ((0, 0), (0, m_pad - m), (0, 0), (0, 0)))
+        m_pad, r_pad = sched.pad_amounts(m, m)
+        if (m_pad, r_pad) != (m, m):
+            stack = jnp.pad(stack, ((0, 0), (0, m_pad - m),
+                                    (0, r_pad - m), (0, 0)))
+        # as in the flat paths: pin the stacked layout (§Perf msc it 2b)
+        stack = jax.lax.with_sharding_constraint(
+            stack, NamedSharding(mesh, sched.stacked_block_spec))
         valid = jnp.arange(m_pad) < m
         valid3 = jnp.broadcast_to(valid, (3, m_pad))
         d3, lam3, it3 = local(stack, valid3)
         modes = []
         for j in range(3):
-            mask, n_it = extract_cluster(d3[j], cfg.epsilon, valid,
-                                         cfg.max_extraction_iters)
-            modes.append(ModeResult(mask=mask[:m], d=d3[j, :m],
-                                    lambdas=lam3[j, :m], n_iters=n_it,
-                                    power_iters_run=jnp.max(it3[j])))
+            modes.append(sched.finalize_mode(d3[j], lam3[j], it3[j],
+                                             valid, m))
         return MSCResult(modes=tuple(modes))
 
     return run
 
 
-def build_epilogue_rowsum(mesh: Mesh, cfg: MSCConfig,
-                          axis_name: Optional[AxisName] = None):
-    """jitted V (m, c) → d (m,): the similarity epilogue in isolation.
-
-    Compiles just the MPI_Allgatherv-analogue epilogue selected by
-    cfg.epilogue over a row-sharded V (padding rows to even shards, like
-    the full schedules).  benchmarks/ring_epilogue.py compiles this to
-    measure allgather-vs-ring collective traffic without the surrounding
-    eigensolve HLO; tests use it for epilogue-only parity.
-    """
-    if axis_name is None:
-        axis_name = tuple(mesh.axis_names)
-    shards = _axis_size(mesh, axis_name)
-    spec_ax = axis_name if isinstance(axis_name, tuple) else (axis_name,)
-    in_spec = P(spec_ax)
-    local = shard_map(
-        partial(epilogue_rowsum, cfg=cfg, axis_name=axis_name,
-                shards=shards),
-        mesh=mesh, in_specs=(in_spec,), out_specs=in_spec,
-    )
-
-    @jax.jit
-    def run(v_rows: jax.Array) -> jax.Array:
-        m, _ = v_rows.shape
-        m_pad = _pad_m(m, shards)
-        if m_pad != m:
-            v_rows = jnp.pad(v_rows, ((0, m_pad - m), (0, 0)))
-        return local(v_rows)[:m]
-
-    return run
-
-
-def make_msc_mesh(schedule: str = "flat", devices=None) -> Mesh:
-    """Device mesh for MSC.  flat: 1-D ("slice",).  grouped: ("mode","slice")
-    with mode=3 (device count must be a multiple of 3, as in the paper)."""
-    devices = jax.devices() if devices is None else devices
-    n = len(devices)
-    import numpy as np
-
-    if schedule == "flat":
-        return Mesh(np.asarray(devices), ("slice",))
-    if schedule == "grouped":
-        if n % 3:
-            raise ValueError(f"grouped schedule needs 3|p, got p={n}")
-        return Mesh(np.asarray(devices).reshape(3, n // 3), ("mode", "slice"))
-    raise ValueError(f"unknown schedule {schedule!r}")
-
-
-def build_msc_parallel(mesh: Mesh, cfg: MSCConfig, schedule: str = "flat", **kw):
+def build_msc_parallel(mesh: Mesh, cfg: MSCConfig, schedule: str = "flat",
+                       **kw):
     if schedule == "flat":
         return build_msc_parallel_flat(mesh, cfg, **kw)
     if schedule == "grouped":

@@ -34,6 +34,18 @@ Mixed precision (DESIGN.md §7.3): `precision="bf16_fp32"` runs the
 T v / Tᵀ(T v) einsums with bf16 operands and fp32 accumulation
 (`preferred_element_type`); normalization, the convergence gate, and the
 final Rayleigh quotient stay in fp32.
+
+Inner-axis sharding (DESIGN.md §7.5): when `inner_axis` names a mesh
+axis, each device holds only a (b, r/q, c) row-block of its slices and
+every contraction over r becomes a local partial + `lax.psum` over the
+inner axis — T v, Tᵀ(T v), the explicit gram, and the final Rayleigh
+quotient ‖T v‖².  v, λ, and the convergence gate then live replicated
+across the inner axis (the eigenvector dim c is never sharded), so the
+lockstep-exit contract over the slice axes is unchanged.  `c_valid`
+masks the deterministic start vector to the first c_valid entries when a
+relayout had to zero-pad the column dim: padded columns stay exactly
+zero through every matvec and norm, making the padded run bit-identical
+to the unpadded one.
 """
 from __future__ import annotations
 
@@ -55,12 +67,20 @@ def compute_dtype(precision: str):
     raise ValueError(f"unknown precision {precision!r}; expected {PRECISIONS}")
 
 
-def _init_vectors(batch: int, dim: int, dtype=jnp.float32) -> jax.Array:
+def _init_vectors(batch: int, dim: int, dtype=jnp.float32,
+                  c_valid: Optional[int] = None) -> jax.Array:
     """Deterministic start vectors with guaranteed overlap with any
     non-negative planted direction: ones + a fixed low-amplitude
-    perturbation (breaks ties/orthogonal starts without a PRNG key)."""
+    perturbation (breaks ties/orthogonal starts without a PRNG key).
+
+    c_valid: when the column dim was zero-padded (dim > true c), mask
+    the init to the first c_valid entries and normalize over them — the
+    resulting iterates are bit-identical to the unpadded solve (padded
+    columns are zero in T, so they stay exactly zero forever)."""
     pert = 0.01 * jnp.sin(1.37 * jnp.arange(dim, dtype=dtype) + 0.3)
     v0 = jnp.ones((dim,), dtype) + pert
+    if c_valid is not None and c_valid < dim:
+        v0 = jnp.where(jnp.arange(dim) < c_valid, v0, 0.0)
     v0 = v0 / jnp.linalg.norm(v0)
     return jnp.broadcast_to(v0, (batch, dim))
 
@@ -81,6 +101,15 @@ def _maybe_pvary(v, vary_axes):
         axes = (vary_axes,) if isinstance(vary_axes, str) else tuple(vary_axes)
         return pvary(v, axes)
     return v
+
+
+def _psum_inner(x, inner_axis):
+    """All-reduce a partial contraction over the inner (row-shard) axis.
+
+    The identity when inner_axis is None.  Outputs are replicated over
+    the inner axis — the replication ladder's step *down* (its step up
+    is `_maybe_pvary(x, inner_axis)` on the way into a contraction)."""
+    return jax.lax.psum(x, inner_axis) if inner_axis is not None else x
 
 
 def convergence_gate(lam: jax.Array, resid: jax.Array, tol: float,
@@ -138,14 +167,18 @@ def _run_adaptive(matvec, v, n_iters: int, tol: float, check_every: int,
 
 
 @partial(jax.jit, static_argnames=("n_iters", "tol", "check_every",
-                                   "precision", "vary_axes", "axis_name"))
+                                   "precision", "vary_axes", "axis_name",
+                                   "inner_axis", "c_valid"))
 def power_iteration_matrix_free(slices: jax.Array, n_iters: int = 60,
                                 tol: float = 0.0, check_every: int = 6,
                                 precision: str = "fp32",
-                                vary_axes=None, axis_name=None):
+                                vary_axes=None, axis_name=None,
+                                inner_axis=None, c_valid=None):
     """Top eigenpair of T_iᵀT_i for a batch of slices, without forming C_i.
 
-    slices: (b, r, c).  Returns (lambdas (b,), vectors (b, c), iters ()).
+    slices: (b, r, c) — with inner_axis set, r is this device's row-block
+    of each slice and both matvec halves psum their partials over it.
+    Returns (lambdas (b,), vectors (b, c), iters ()).
     λ_i = ‖T_i v_i‖² is the fp32 Rayleigh quotient of C_i at the final v_i
     regardless of the precision policy.
     """
@@ -154,31 +187,38 @@ def power_iteration_matrix_free(slices: jax.Array, n_iters: int = 60,
     s = slices.astype(dt)
 
     def matvec(v):
-        tv = jnp.einsum("brc,bc->br", s, v.astype(dt),
+        vb = _maybe_pvary(v, inner_axis)
+        tv = jnp.einsum("brc,bc->br", s, vb.astype(dt),
                         preferred_element_type=jnp.float32)
-        return jnp.einsum("brc,br->bc", s, tv.astype(dt),
-                          preferred_element_type=jnp.float32)
+        w = jnp.einsum("brc,br->bc", s, tv.astype(dt),
+                       preferred_element_type=jnp.float32)
+        return _psum_inner(w, inner_axis)
 
-    v = _maybe_pvary(_init_vectors(b, c, jnp.float32), vary_axes)
+    v = _maybe_pvary(_init_vectors(b, c, jnp.float32, c_valid), vary_axes)
     v, iters = _run_adaptive(matvec, v, n_iters, tol, check_every,
                              axis_name, vary_axes)
-    tv = jnp.einsum("brc,bc->br", slices.astype(jnp.float32), v)
-    lam = jnp.sum(tv * tv, axis=-1)
+    tv = jnp.einsum("brc,bc->br", slices.astype(jnp.float32),
+                    _maybe_pvary(v, inner_axis))
+    lam = _psum_inner(jnp.sum(tv * tv, axis=-1), inner_axis)
     return lam, v, iters
 
 
 @partial(jax.jit, static_argnames=("n_iters", "tol", "check_every",
                                    "precision", "use_kernel", "vary_axes",
-                                   "axis_name"))
+                                   "axis_name", "inner_axis", "c_valid"))
 def power_iteration_gram(slices: jax.Array, n_iters: int = 60,
                          tol: float = 0.0, check_every: int = 6,
                          precision: str = "fp32", use_kernel: bool = False,
-                         vary_axes=None, axis_name=None):
+                         vary_axes=None, axis_name=None, inner_axis=None,
+                         c_valid=None):
     """Paper-faithful path: form C_i = T_iᵀT_i explicitly, then iterate.
 
     slices: (b, r, c).  Returns (lambdas (b,), vectors (b, c), iters ()).
     The gram is always accumulated and stored in fp32; under bf16_fp32
-    the formation and iteration *operands* are bf16.
+    the formation and iteration *operands* are bf16.  With inner_axis
+    set, the r·c² formation MACs split q ways (partial gram over local
+    rows, one psum); the c×c result is replicated over the inner axis
+    and the iteration proceeds without further collectives.
     """
     dt = compute_dtype(precision)
     if use_kernel:
@@ -189,18 +229,20 @@ def power_iteration_gram(slices: jax.Array, n_iters: int = 60,
         gram = jnp.einsum("brc,brd->bcd", slices.astype(dt),
                           slices.astype(dt),
                           preferred_element_type=jnp.float32)
+    gram = _psum_inner(gram, inner_axis)
     return power_iteration_on_gram(gram, n_iters=n_iters, tol=tol,
                                    check_every=check_every,
                                    precision=precision, vary_axes=vary_axes,
-                                   axis_name=axis_name)
+                                   axis_name=axis_name, c_valid=c_valid)
 
 
 @partial(jax.jit, static_argnames=("n_iters", "tol", "check_every",
-                                   "precision", "vary_axes", "axis_name"))
+                                   "precision", "vary_axes", "axis_name",
+                                   "c_valid"))
 def power_iteration_on_gram(gram: jax.Array, n_iters: int = 60,
                             tol: float = 0.0, check_every: int = 6,
                             precision: str = "fp32", vary_axes=None,
-                            axis_name=None):
+                            axis_name=None, c_valid=None):
     """Power iteration given precomputed covariance matrices (b, c, c)."""
     b, c, _ = gram.shape
     dt = compute_dtype(precision)
@@ -210,23 +252,27 @@ def power_iteration_on_gram(gram: jax.Array, n_iters: int = 60,
         return jnp.einsum("bcd,bd->bc", g, v.astype(dt),
                           preferred_element_type=jnp.float32)
 
-    v = _maybe_pvary(_init_vectors(b, c, jnp.float32), vary_axes)
+    v = _maybe_pvary(_init_vectors(b, c, jnp.float32, c_valid), vary_axes)
     v, iters = _run_adaptive(matvec, v, n_iters, tol, check_every,
                              axis_name, vary_axes)
     lam = jnp.einsum("bc,bcd,bd->b", v, gram.astype(jnp.float32), v)
     return lam, v, iters
 
 
-def top_eigenpairs(slices: jax.Array, cfg, vary_axes=None, axis_name=None):
+def top_eigenpairs(slices: jax.Array, cfg, vary_axes=None, axis_name=None,
+                   inner_axis=None, c_valid=None):
     """Dispatch on MSCConfig: matrix_free/use_kernels select the path;
     power_tol/power_check_every/precision configure the solver.
 
+    inner_axis: mesh axis the slice rows are sharded over (contractions
+    psum over it); c_valid: static column-validity bound under c-padding.
     Returns (lambdas (b,), vectors (b, c), iters ()) — iters is the
     realized sweep count (== cfg.power_iters when the gate never fires).
     """
     kw = dict(n_iters=cfg.power_iters, tol=cfg.power_tol,
               check_every=cfg.power_check_every, precision=cfg.precision,
-              vary_axes=vary_axes, axis_name=axis_name)
+              vary_axes=vary_axes, axis_name=axis_name,
+              inner_axis=inner_axis, c_valid=c_valid)
     if cfg.matrix_free:
         if cfg.use_kernels:
             from repro.kernels import ops as kops

@@ -1,0 +1,392 @@
+"""ModeSchedule — the shared substrate of every parallel MSC schedule.
+
+Before this layer, `core/parallel.py` held three near-duplicate builders
+(flat/gspmd, flat/collective, grouped) that each re-implemented the same
+shard_map plumbing: slice padding + validity masks, PartitionSpec
+construction, the per-device Alg. 2 body (eigensolve → λ pmax →
+normalize → similarity epilogue), lockstep convergence gating, and the
+epilogue dispatch.  `ModeSchedule` owns all of that once; the schedules
+in `core/parallel.py` are now thin *layout declarations* over it.
+
+Mesh model — 2-D ("slice", "inner") sharding:
+
+  slice_axes — shard the slice index m (the paper's only parallel dim;
+      the "group communicator" of Alg. 2 / Fig. 3).  λ-max reduction,
+      the lockstep convergence gate, and the similarity epilogue
+      (all_gather or ppermute ring) all run over these axes.
+  inner_axes — NEW: shard the *within-slice* row (contraction) dim r.
+      Each device holds a (b, r/q, c) sub-block, so per-device tensor
+      memory is O(m·r·c/(p·q)) and a single huge slice can exceed one
+      device's HBM — the memory wall both 1-D schedules hit at paper
+      scale.  The T·v / Tᵀ(T v) / gram contractions compute partial
+      sums over local rows and `lax.psum` over "inner" (the
+      consensus-style distributed eigensolve contraction); v, λ, and
+      the epilogue stay replicated across "inner" because c is never
+      sharded (the per-slice eigenvector must stay whole).
+  group_axes — axes the data varies over without participating in any
+      collective (the grouped schedule's "mode"=3 axis: one unfolding
+      per group, exactly paper Fig. 3).
+
+Padding contract: the slice dim pads to a multiple of the slice shards
+and r to a multiple of the inner shards — zero rows contribute exactly
+nothing to TᵀT, ‖T v‖², or the epilogue, so only the slice-index mask
+is ever consulted.  When a relayout forces padding of a *column* dim c
+(the flat-collective path pads all tensor dims to p·q multiples), the
+eigensolver's deterministic start vector is masked and renormalized over
+the first `c_valid` entries, which makes the padded-c iterates
+bit-identical to the unpadded ones (zero columns stay exactly zero
+through every matvec and norm).
+
+Replication discipline (jax ≥ 0.6 vma semantics; on the 0.4.x
+compat path these are value-level no-ops): loop carries are typed as
+varying over group+slice axes only; operands entering an inner-sharded
+contraction are `pvary`-lifted onto the inner axes and the partial
+results `psum`-lowered back, so d/λ leave the shard_map replicated over
+"inner" and the out_specs never mention it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
+
+from .extraction import extract_cluster
+from .power_iter import compute_dtype, top_eigenpairs
+from .types import ModeResult, MSCConfig
+
+AxisName = Union[str, Tuple[str, ...]]
+Axes = Tuple[str, ...]
+
+EPILOGUES = ("allgather", "ring")
+
+
+def norm_axes(ax: Optional[AxisName]) -> Axes:
+    """None | "a" | ("a", "b") → canonical tuple form."""
+    if ax is None:
+        return ()
+    return (ax,) if isinstance(ax, str) else tuple(ax)
+
+
+def axis_arg(axes: Axes) -> Optional[AxisName]:
+    """Canonical tuple → the form jax collectives take (str when single)."""
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else axes
+
+
+def _spec_entry(axes: Axes):
+    """Canonical tuple → a PartitionSpec entry."""
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else axes
+
+
+def pad_to(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+# ------------------------------------------------------------------ epilogue
+
+def _chunk_rowsum(v_local: jax.Array, chunk: jax.Array,
+                  acc: Optional[jax.Array], cfg: MSCConfig) -> jax.Array:
+    """acc + Σ_j |v_local · chunkᵀ|_{:,j} — one epilogue block contribution.
+
+    Both epilogues route through the same accumulating kernel
+    (`kernels/ring.py:abs_rowsum`): the allgather epilogue is the
+    degenerate single-chunk case (acc=None, chunk=the gathered V).
+    """
+    if cfg.use_kernels:
+        from repro.kernels import ops as kops
+
+        return kops.abs_rowsum(v_local, chunk, acc)
+    prod = jnp.abs(jnp.einsum("ic,jc->ij", v_local, chunk,
+                              preferred_element_type=jnp.float32))
+    d = jnp.sum(prod, axis=1)
+    return d if acc is None else acc + d
+
+
+def _ring_rowsum(v_local: jax.Array, cfg: MSCConfig, axis_name: AxisName,
+                 shards: int) -> jax.Array:
+    """Ring similarity epilogue (DESIGN.md §7.4).
+
+    p-1 lax.ppermute steps circulate the (b, c) chunks of V around the
+    group axis; each device folds the chunk it currently holds into its
+    running row-sums.  Inside the loop body the forward ppermute and the
+    chunk matmul both read the carried chunk and are otherwise
+    independent, so XLA's async collective-permute can hide step k+1's
+    transfer under step k's compute.  The full m×c V is never resident:
+    peak epilogue buffer is one chunk (plus the recv landing buffer).
+    """
+    d = _chunk_rowsum(v_local, v_local, None, cfg)
+    if shards == 1:
+        return d
+    perm = [(i, (i + 1) % shards) for i in range(shards)]
+
+    def body(_, carry):
+        chunk, d = carry
+        nxt = jax.lax.ppermute(chunk, axis_name, perm)
+        return nxt, _chunk_rowsum(v_local, chunk, d, cfg)
+
+    chunk = jax.lax.ppermute(v_local, axis_name, perm)
+    chunk, d = jax.lax.fori_loop(0, shards - 2, body, (chunk, d))
+    # last received chunk needs no forwarding — it completes the ring
+    return _chunk_rowsum(v_local, chunk, d, cfg)
+
+
+def epilogue_rowsum(v_local: jax.Array, *, cfg: MSCConfig,
+                    axis_name: AxisName, shards: int) -> jax.Array:
+    """d_local = row-block sums of |V Vᵀ| from this device's rows of V.
+
+    The paper's MPI_Allgatherv(M) + full |V Vᵀ| row-sum, under the
+    MSCConfig.epilogue policy: "allgather" replicates V (blocking
+    all_gather, O(m·c) peak buffer), "ring" streams chunks neighbor-to-
+    neighbor (O(m·c/p) peak buffer, transfer hidden under compute).
+    Operands are cast to the precision policy's compute dtype *before*
+    the collective, so bf16_fp32 also halves the epilogue link traffic.
+    On 2-D meshes the collectives run over the slice axes only; "inner"
+    devices hold replicated V rows and recompute identical sums.
+    """
+    if cfg.epilogue not in EPILOGUES:
+        raise ValueError(
+            f"unknown epilogue {cfg.epilogue!r}; expected {EPILOGUES}")
+    dt = compute_dtype(cfg.precision)
+    vl = v_local.astype(dt)
+    if cfg.epilogue == "ring":
+        return _ring_rowsum(vl, cfg, axis_name, shards)
+    # MPI_Allgatherv(M) over the group → full V on every group member
+    v_full = jax.lax.all_gather(vl, axis_name, axis=0, tiled=True)
+    # row-block of C = |V Vᵀ| and its row sums; padded columns are zero
+    # rows of V and contribute nothing.
+    return _chunk_rowsum(vl, v_full, None, cfg)
+
+
+# -------------------------------------------------------------- ModeSchedule
+
+@dataclasses.dataclass(frozen=True)
+class ModeSchedule:
+    """One mode-layout declaration: which mesh axes shard what.
+
+    Owns every piece of shard_map plumbing the schedules share — see the
+    module docstring.  The flat schedule instantiates one ModeSchedule
+    and runs the three modes through it sequentially; the grouped
+    schedule adds `group_axes=("mode",)` and runs the stacked unfoldings
+    in one shot.
+    """
+
+    mesh: Mesh
+    cfg: MSCConfig
+    slice_axes: Axes
+    inner_axes: Axes = ()
+    group_axes: Axes = ()
+
+    def __post_init__(self):
+        all_axes = self.group_axes + self.slice_axes + self.inner_axes
+        missing = [a for a in all_axes if a not in self.mesh.shape]
+        if missing:
+            raise ValueError(f"axes {missing} not in mesh {self.mesh.shape}")
+        if len(set(all_axes)) != len(all_axes):
+            raise ValueError(f"overlapping axis roles: {all_axes}")
+        if not self.slice_axes:
+            raise ValueError("ModeSchedule needs at least one slice axis")
+
+    # ---- static mesh facts -------------------------------------------
+    @property
+    def slice_shards(self) -> int:
+        return math.prod(self.mesh.shape[a] for a in self.slice_axes)
+
+    @property
+    def inner_shards(self) -> int:
+        return math.prod(self.mesh.shape[a] for a in self.inner_axes) \
+            if self.inner_axes else 1
+
+    @property
+    def slice_axis(self) -> AxisName:
+        """Collective axis-name form of the slice axes."""
+        return axis_arg(self.slice_axes)
+
+    @property
+    def inner_axis(self) -> Optional[AxisName]:
+        return axis_arg(self.inner_axes)
+
+    @property
+    def vary_axes(self) -> Axes:
+        """Axes the eigensolver loop carries vary over (NOT "inner": the
+        carries are psum-replicated across it, see module docstring)."""
+        return self.group_axes + self.slice_axes
+
+    # ---- PartitionSpecs ----------------------------------------------
+    @property
+    def block_spec(self) -> P:
+        """(b, r, c) slice-major blocks: (slice, inner, replicated)."""
+        return P(_spec_entry(self.slice_axes),
+                 _spec_entry(self.inner_axes), None)
+
+    @property
+    def vector_spec(self) -> P:
+        """(b,) per-slice vectors (valid mask, d, λ): slice-sharded,
+        replicated over inner."""
+        return P(_spec_entry(self.slice_axes))
+
+    @property
+    def stacked_block_spec(self) -> P:
+        """(mode, b, r, c) stacked unfoldings (grouped schedule)."""
+        return P(_spec_entry(self.group_axes),
+                 _spec_entry(self.slice_axes),
+                 _spec_entry(self.inner_axes), None)
+
+    @property
+    def stacked_vector_spec(self) -> P:
+        return P(_spec_entry(self.group_axes), _spec_entry(self.slice_axes))
+
+    # ---- padding / masking -------------------------------------------
+    def pad_amounts(self, m: int, r: int) -> Tuple[int, int]:
+        """(m_pad, r_pad): slice dim to even slice shards, row dim to
+        even inner shards (zero rows drop out of every contraction)."""
+        return pad_to(m, self.slice_shards), pad_to(r, self.inner_shards)
+
+    def pad_slices(self, slices: jax.Array):
+        """(m, r, c) → (padded (m', r', c), valid (m',), m)."""
+        m, r, _ = slices.shape
+        m_pad, r_pad = self.pad_amounts(m, r)
+        if (m_pad, r_pad) != (m, r):
+            slices = jnp.pad(slices, ((0, m_pad - m), (0, r_pad - r), (0, 0)))
+        valid = jnp.arange(m_pad) < m
+        return slices, valid, m
+
+    # ---- the shared per-device body (paper Alg. 2, minus extraction) --
+    def mode_local(self, block: jax.Array, valid_local: jax.Array,
+                   c_valid: Optional[int] = None):
+        """Per-device mode computation.
+
+        block: (b, r_local, c) — this device's sub-block of one mode's
+          unfolding (slice-sharded rows of slices; inner-sharded rows
+          *within* each slice when inner_axes is set).
+        valid_local: bool (b,) — False on padding slices.
+        c_valid: static column-validity bound when the relayout padded c
+          (None ⇔ all columns valid).
+
+        The adaptive eigensolver's convergence gate pmax-reduces its
+        residual maxima over the slice axes, so every group member runs
+        the same number of sweeps (lockstep exit — padding slices are
+        all-zero and contribute zero residual, hence never delay the
+        gate).  Inner-sharded contractions psum their partials over the
+        inner axes inside each sweep.
+
+        Returns (d_local (b,), lam_local (b,), iters (1,)) — this
+        device's shard of d and λ plus the realized power-iteration
+        sweep count (identical on every group member by the lockstep
+        gate; shaped (1,) so it passes through sharded out_specs and is
+        max-reduced outside).
+        """
+        lam, vec, iters = top_eigenpairs(
+            block, self.cfg, vary_axes=self.vary_axes,
+            axis_name=self.slice_axis, inner_axis=self.inner_axis,
+            c_valid=c_valid)
+        lam = jnp.where(valid_local, lam, 0.0)
+        # MPI_Allreduce(λ, MAX) over the group — fp32 regardless of precision
+        lam_max = jax.lax.pmax(jnp.max(lam), self.slice_axis)
+        v_local = (lam / jnp.maximum(lam_max, 1e-30))[:, None] * vec
+        v_local = jnp.where(valid_local[:, None], v_local, 0.0)
+        d_local = epilogue_rowsum(v_local, cfg=self.cfg,
+                                  axis_name=self.slice_axis,
+                                  shards=self.slice_shards)
+        d_local = jnp.where(valid_local, d_local, 0.0)
+        return d_local, lam, iters[None]
+
+    # ---- shard_map entry points --------------------------------------
+    def build_mode_fn(self, c_valid: Optional[int] = None):
+        """shard_map'd (slices (m', r', c), valid (m',)) → (d, λ, iters).
+
+        iters comes back as one counter per slice-shard (global shape
+        (slice_shards,)); callers max-reduce it into ModeResult.
+        """
+        return shard_map(
+            partial(self.mode_local, c_valid=c_valid),
+            mesh=self.mesh,
+            in_specs=(self.block_spec, self.vector_spec),
+            out_specs=(self.vector_spec, self.vector_spec,
+                       self.vector_spec),
+        )
+
+    def run_mode(self, slices: jax.Array):
+        """Pad one mode's slice-major tensor and run it (flat schedule)."""
+        from jax.sharding import NamedSharding
+
+        padded, valid, m = self.pad_slices(slices)
+        # pin the padded block layout so the initial distribution is one
+        # well-defined reshard instead of GSPMD's replicate-then-slice
+        # fallback (§Perf msc it 2b — without this the tensor argument
+        # lands replicated on every device whenever padding intervenes)
+        padded = jax.lax.with_sharding_constraint(
+            padded, NamedSharding(self.mesh, self.block_spec))
+        d, lam, iters = self.build_mode_fn()(padded, valid)
+        return d, lam, iters, valid, m
+
+    def finalize_mode(self, d, lam, iters, valid, m: int) -> ModeResult:
+        """Replicated cluster extraction + trimming (the tiny epilogue the
+        paper Gathers to a root; running it under jit on every device
+        removes the root bottleneck entirely)."""
+        mask, n_it = extract_cluster(d, self.cfg.epsilon, valid,
+                                     self.cfg.max_extraction_iters)
+        return ModeResult(mask=mask[:m], d=d[:m], lambdas=lam[:m],
+                          n_iters=n_it, power_iters_run=jnp.max(iters))
+
+
+def build_mode_runner(sched: ModeSchedule, c_valid: Optional[int] = None):
+    """jitted (padded slices (m', r', c), valid (m',)) → (d, λ, iters):
+    one mode's eigensolve + epilogue stage in isolation, with the inputs
+    explicitly *committed* to the schedule's shardings.
+
+    Unlike the full pipelines — whose tensor argument GSPMD may leave
+    replicated when padding/transposes sit between it and the shard_map
+    — the compiled module here receives the block already distributed,
+    exactly as it would arrive at production scale (where the whole
+    point of the inner axis is that no device can hold full slices).
+    benchmarks/inner_shard.py compiles this to measure the per-device
+    eigensolve working set; tests use it for stage-level parity.
+    """
+    from jax.sharding import NamedSharding
+
+    in_sh = (NamedSharding(sched.mesh, sched.block_spec),
+             NamedSharding(sched.mesh, sched.vector_spec))
+    fn = sched.build_mode_fn(c_valid=c_valid)
+    return jax.jit(lambda block, valid: fn(block, valid),
+                   in_shardings=in_sh)
+
+
+def build_epilogue_rowsum(mesh: Mesh, cfg: MSCConfig,
+                          axis_name: Optional[AxisName] = None):
+    """jitted V (m, c) → d (m,): the similarity epilogue in isolation.
+
+    Compiles just the MPI_Allgatherv-analogue epilogue selected by
+    cfg.epilogue over a row-sharded V (padding rows to even shards, like
+    the full schedules).  benchmarks/ring_epilogue.py compiles this to
+    measure allgather-vs-ring collective traffic without the surrounding
+    eigensolve HLO; tests use it for epilogue-only parity.
+    """
+    axes = norm_axes(axis_name) if axis_name is not None \
+        else tuple(mesh.axis_names)
+    shards = math.prod(mesh.shape[a] for a in axes)
+    in_spec = P(_spec_entry(axes))
+    local = shard_map(
+        partial(epilogue_rowsum, cfg=cfg, axis_name=axis_arg(axes),
+                shards=shards),
+        mesh=mesh, in_specs=(in_spec,), out_specs=in_spec,
+    )
+
+    @jax.jit
+    def run(v_rows: jax.Array) -> jax.Array:
+        m, _ = v_rows.shape
+        m_pad = pad_to(m, shards)
+        if m_pad != m:
+            v_rows = jnp.pad(v_rows, ((0, m_pad - m), (0, 0)))
+        return local(v_rows)[:m]
+
+    return run

@@ -1,10 +1,14 @@
 """Pallas TPU kernels for the perf-critical hot spots.
 
   gram.py            — batched slice covariance C_i = T_iᵀT_i (paper Alg. 1)
-  similarity.py      — fused |V_lVᵀ| row-sums (allgather epilogue, Alg. 2)
-  ring.py            — fused per-chunk |A Bᵀ| row-sum accumulation (the
-                       ring epilogue's step body, DESIGN.md §7.4)
-  power_iter.py      — VMEM-resident matrix-free power iteration
+  ring.py            — fused per-chunk |A Bᵀ| row-sum accumulation: the
+                       single epilogue kernel (ring steps AND the
+                       allgather epilogue's one-shot case; the former
+                       similarity.py kernel is retired into it,
+                       DESIGN.md §7.4/§7.5)
+  power_iter.py      — VMEM-resident matrix-free power iteration (whole
+                       sweeps fused, or per-sweep power_matvec on
+                       inner-sharded meshes)
   flash_attention.py — chunked online-softmax attention (LM train/prefill)
 
 ops.py exposes jit'd wrappers with CPU-interpret fallback; ref.py holds

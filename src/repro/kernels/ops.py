@@ -18,7 +18,6 @@ from . import flash_attention as _fa
 from . import gram as _gram
 from . import power_iter as _pi
 from . import ring as _ring
-from . import similarity as _sim
 from . import ref
 
 
@@ -36,16 +35,14 @@ def batched_gram(slices: jax.Array, *, interpret: bool | None = None,
                               out_dtype=out_dtype, interpret=interpret)
 
 
-def similarity_rowsum(v_local: jax.Array, v_full: jax.Array, *,
-                      interpret: bool | None = None) -> jax.Array:
-    """Fused d = Σ|V_l V_fᵀ| row-sums (see similarity.py)."""
-    interpret = _interpret_default() if interpret is None else interpret
-    return _sim.similarity_rowsum(v_local, v_full, interpret=interpret)
-
-
 def abs_rowsum(a: jax.Array, b: jax.Array, acc=None, *,
                interpret: bool | None = None) -> jax.Array:
-    """Fused ring-step accumulation acc + Σ|a bᵀ| row-sums (see ring.py)."""
+    """Fused accumulation acc + Σ|a bᵀ| row-sums (see ring.py).
+
+    The single epilogue kernel: the ring epilogue calls it once per
+    circulating chunk with the running accumulator, the allgather
+    epilogue once with the full gathered V and acc=None (the schedule
+    that the retired similarity.py kernel hard-coded)."""
     interpret = _interpret_default() if interpret is None else interpret
     return _ring.abs_rowsum(a, b, acc, interpret=interpret)
 
@@ -53,7 +50,8 @@ def abs_rowsum(a: jax.Array, b: jax.Array, acc=None, *,
 def power_iterate_matrix_free(slices: jax.Array, n_iters: int = 60,
                               tol: float = 0.0, check_every: int = 6,
                               precision: str = "fp32", vary_axes=None,
-                              axis_name=None, *, block_r: int = 256,
+                              axis_name=None, inner_axis=None,
+                              c_valid=None, *, block_r: int = 256,
                               interpret: bool | None = None):
     """Fused r-tiled power iteration (see power_iter.py), adaptive-capable.
 
@@ -63,20 +61,42 @@ def power_iterate_matrix_free(slices: jax.Array, n_iters: int = 60,
     lax.while_loop, each chunk emitting the fp32 Rayleigh quotient and
     residual that feed the shared λ-weighted gate (pmax-reduced over
     axis_name under shard_map — same lockstep exit as the jnp path).
+
+    Axis-aware path (DESIGN.md §7.5): with inner_axis set, each device
+    holds only a row-block of every slice, so multi-sweep fusion is
+    impossible — each sweep needs a cross-device psum of the partial
+    w = Tᵀ(T v) before normalization.  The dispatch drops to one fused
+    r-tiled `power_matvec` kernel launch per sweep, with the shared jnp
+    driver (`_run_adaptive`) supplying the psum, normalization, and the
+    lockstep gate.  c_valid masks the deterministic init under column
+    padding, exactly like the jnp path.
+
     Returns (lam (b,), v (b, c), iters ()); λ is always a final fp32
     Rayleigh quotient, regardless of the operand precision policy.
     """
     from repro.core.power_iter import (_init_vectors, _maybe_pvary,
+                                       _psum_inner, _run_adaptive,
                                        compute_dtype, convergence_gate)
 
     interpret = _interpret_default() if interpret is None else interpret
     b, r, c = slices.shape
     s = slices.astype(compute_dtype(precision))
-    v0 = _maybe_pvary(_init_vectors(b, c, jnp.float32), vary_axes)
+    v0 = _maybe_pvary(_init_vectors(b, c, jnp.float32, c_valid), vary_axes)
 
     def _fp32_rayleigh(v):
-        tv = jnp.einsum("brc,bc->br", slices.astype(jnp.float32), v)
-        return jnp.sum(tv * tv, axis=-1)
+        tv = jnp.einsum("brc,bc->br", slices.astype(jnp.float32),
+                        _maybe_pvary(v, inner_axis))
+        return _psum_inner(jnp.sum(tv * tv, axis=-1), inner_axis)
+
+    if inner_axis is not None:
+        def matvec(v):
+            w = _pi.power_matvec(s, _maybe_pvary(v, inner_axis),
+                                 block_r=block_r, interpret=interpret)
+            return _psum_inner(w, inner_axis)
+
+        v, iters = _run_adaptive(matvec, v0, n_iters, tol, check_every,
+                                 axis_name, vary_axes)
+        return _fp32_rayleigh(v), v, iters
 
     if tol <= 0.0:
         lam, v = _pi.power_iterate(s, v0, n_iters, block_r=block_r,

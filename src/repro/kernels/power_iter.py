@@ -23,13 +23,18 @@ input* (fp32, or bf16 under the mixed-precision policy) with fp32
 accumulation:   tv_tile = v Tᵏᵀ   then   w += tv_tile Tᵏ.
 After the last tile of a sweep, w is normalized into v in fp32.
 
-Two entry points share the kernel body:
+Three entry points share the kernel body:
 
 * power_iterate      — n_iters sweeps + a trailing λ = ‖T v‖² pass.
 * power_iterate_chunk — k sweeps; additionally emits the fp32 Rayleigh
   quotient λ = vᵀw and residual ‖w − λv‖ measured at the final sweep
   (reusing that sweep's matvec), the inputs of the adaptive convergence
   gate (DESIGN.md §7.3).
+* power_matvec       — ONE unnormalized sweep, returning the raw fp32
+  accumulator w = Tᵀ(T v).  The building block of the inner-sharded
+  solver (DESIGN.md §7.5): when each device holds only a row-block of
+  T, the caller must lax.psum the partial w over the inner mesh axis
+  *before* normalizing, so normalization cannot live in the kernel.
 """
 from __future__ import annotations
 
@@ -41,7 +46,8 @@ from jax.experimental import pallas as pl
 
 
 def _power_kernel(t_ref, v0_ref, lam_ref, v_ref, resid_ref, w_ref, *,
-                  n_upd: int, nr: int, lambda_pass: bool, emit_gate: bool):
+                  n_upd: int, nr: int, lambda_pass: bool, emit_gate: bool,
+                  normalize: bool = True):
     it = pl.program_id(1)
     rk = pl.program_id(2)
 
@@ -82,14 +88,16 @@ def _power_kernel(t_ref, v0_ref, lam_ref, v_ref, resid_ref, w_ref, *,
             lam_ref[0, 0] = lam
             resid_ref[0, 0] = jnp.sqrt(jnp.sum((w - lam * v) ** 2))
 
-    @pl.when((it < n_upd) & (rk == nr - 1))
-    def _update():
-        w = w_ref[...]
-        nrm = jnp.sqrt(jnp.sum(w * w)) + 1e-30
-        v_ref[...] = w / nrm
+    if normalize:
+        @pl.when((it < n_upd) & (rk == nr - 1))
+        def _update():
+            w = w_ref[...]
+            nrm = jnp.sqrt(jnp.sum(w * w)) + 1e-30
+            v_ref[...] = w / nrm
 
 
-def _call(slices, v0, n_upd, *, lambda_pass, emit_gate, block_r, interpret):
+def _call(slices, v0, n_upd, *, lambda_pass, emit_gate, block_r, interpret,
+          normalize=True):
     b, r, c = slices.shape
     block_r = min(block_r, r)
     rp = pl.cdiv(r, block_r) * block_r
@@ -98,9 +106,10 @@ def _call(slices, v0, n_upd, *, lambda_pass, emit_gate, block_r, interpret):
     nr = rp // block_r
     n_steps = n_upd + (1 if lambda_pass else 0)
 
-    lam, v, resid, _w = pl.pallas_call(
+    lam, v, resid, w = pl.pallas_call(
         functools.partial(_power_kernel, n_upd=n_upd, nr=nr,
-                          lambda_pass=lambda_pass, emit_gate=emit_gate),
+                          lambda_pass=lambda_pass, emit_gate=emit_gate,
+                          normalize=normalize),
         grid=(b, n_steps, nr),
         in_specs=[
             pl.BlockSpec((1, block_r, c), lambda i, it, rk: (i, rk, 0)),
@@ -120,7 +129,7 @@ def _call(slices, v0, n_upd, *, lambda_pass, emit_gate, block_r, interpret):
         ],
         interpret=interpret,
     )(slices, v0)
-    return lam[:, 0], v, resid[:, 0]
+    return lam[:, 0], v, resid[:, 0], w
 
 
 @functools.partial(jax.jit,
@@ -133,8 +142,9 @@ def power_iterate(slices: jax.Array, v0: jax.Array, n_iters: int, *,
     ref.power_iterate up to fp32 reduction order.  λ is computed with the
     input's operand dtype and fp32 accumulation.
     """
-    lam, v, _ = _call(slices, v0, n_iters, lambda_pass=True, emit_gate=False,
-                      block_r=block_r, interpret=interpret)
+    lam, v, _, _ = _call(slices, v0, n_iters, lambda_pass=True,
+                         emit_gate=False, block_r=block_r,
+                         interpret=interpret)
     return lam, v
 
 
@@ -147,6 +157,23 @@ def power_iterate_chunk(slices: jax.Array, v: jax.Array, k: int, *,
     λ = vᵀ(C v) and resid = ‖C v − λ v‖ taken at the k-th sweep's
     pre-normalization iterate (the same probe the jnp adaptive path uses).
     """
-    lam, v_new, resid = _call(slices, v, k, lambda_pass=False, emit_gate=True,
-                              block_r=block_r, interpret=interpret)
+    lam, v_new, resid, _ = _call(slices, v, k, lambda_pass=False,
+                                 emit_gate=True, block_r=block_r,
+                                 interpret=interpret)
     return v_new, lam, resid
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def power_matvec(slices: jax.Array, v: jax.Array, *,
+                 block_r: int = 256, interpret: bool = False):
+    """One unnormalized r-tiled sweep: w = Tᵀ(T v), fp32 accumulator.
+
+    slices: (b, r, c) — typically a row-block of each slice on an
+    inner-sharded mesh; v: (b, c) fp32.  Returns w (b, c) fp32 with NO
+    normalization applied — inner-sharded callers psum partial w over
+    the mesh axis first, then normalize (core/power_iter._run_adaptive
+    drives the sweep loop and the convergence gate).
+    """
+    _, _, _, w = _call(slices, v, 1, lambda_pass=False, emit_gate=False,
+                       normalize=False, block_r=block_r, interpret=interpret)
+    return w

@@ -1,12 +1,14 @@
 """Pallas TPU kernel: fused per-chunk |A Bᵀ| row-sum accumulation.
 
-This is the compute body of the ring similarity epilogue (DESIGN.md
-§7.4): at each of the p ring steps a device holds one (m/p)×c chunk of
-the normalized matrix V and folds its contribution into the running
-marginal sums, d += Σ_j |V_local · chunkᵀ|_{:,j}.  Like the all-gather
-epilogue kernel (similarity.py) the m×m similarity tile never touches
-HBM; unlike it, the accumulator rides through the kernel so the ring
-step is a single fused matmul→|·|→row-reduce→add with no jnp epilogue.
+This is the compute body of BOTH similarity epilogues (DESIGN.md §7.4):
+at each of the p ring steps a device holds one (m/p)×c chunk of the
+normalized matrix V and folds its contribution into the running
+marginal sums, d += Σ_j |V_local · chunkᵀ|_{:,j}; the allgather
+epilogue is the degenerate single-chunk call (b = the gathered full V,
+acc = None — the schedule the retired similarity.py kernel hard-coded
+with a partials buffer).  The m×m similarity tile never touches HBM,
+and the accumulator rides through the kernel so each step is a single
+fused matmul→|·|→row-reduce→add with no jnp epilogue.
 
 Grid: (i, j) over (bl × bc) tiles, j innermost.  The (block_i, 1) output
 block is revisited across j (classic accumulation schedule): j == 0

@@ -4,4 +4,5 @@ NOTE: `repro.launch.dryrun` sets XLA_FLAGS at import — import it only in
 a dedicated process (``python -m repro.launch.dryrun``).  This package
 __init__ deliberately imports nothing device-related.
 """
-from .mesh import make_local_mesh, make_production_mesh, mesh_name, chips
+from .mesh import (chips, make_local_mesh, make_msc_mesh,
+                   make_production_mesh, mesh_name, msc_mesh_shape)

@@ -5,7 +5,7 @@ touches jax device state.  The dry-run (launch/dryrun.py) sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
 import so these meshes can be built with placeholder devices; everything
 else (smoke tests, benches, examples) sees the real device count and uses
-`make_local_mesh` / `core.parallel.make_msc_mesh`.
+`make_local_mesh` / `make_msc_mesh` (re-exported by `core.parallel`).
 
 Topology (TPU v5e target): one pod = 16×16 = 256 chips; multi-pod adds a
 leading "pod"=2 axis (512 chips).  Axis roles:
@@ -44,6 +44,74 @@ def make_local_mesh(model_axis: int = 1) -> Mesh:
         model_axis -= 1
     return Mesh(np.asarray(devices).reshape(n // model_axis, model_axis),
                 ("data", "model"))
+
+
+def msc_mesh_shape(schedule: str, n: int, shape=None):
+    """(axis_names, dims) of an MSC mesh over n devices — validated.
+
+    flat:    1-D ("slice",) by default; shape=(p, q) adds the "inner"
+             axis (2-D within-slice sharding, DESIGN.md §7.5).
+    grouped: ("mode", "slice") with mode=3 (paper Fig. 3); shape=(s, q)
+             (mode=3 implied) or (3, s, q) adds "inner".
+
+    Raises ValueError with the usable factorizations when the device
+    count does not divide — the old behavior silently took whatever
+    jax.devices() returned and crashed later inside shard_map.
+    """
+    shape = tuple(int(s) for s in shape) if shape is not None else None
+    if schedule == "flat":
+        if shape is None:
+            shape = (n,)
+        if len(shape) not in (1, 2):
+            raise ValueError(
+                f"flat schedule takes shape=(slice,) or (slice, inner), "
+                f"got {shape}")
+        if math.prod(shape) != n:
+            hints = [(n, 1)] + ([(n // 2, 2)] if n % 2 == 0 else [])
+            raise ValueError(
+                f"mesh shape {shape} uses {math.prod(shape)} devices but "
+                f"{n} are available; pick p*q == {n} "
+                f"(e.g. {' or '.join(map(str, hints))})")
+        axes = ("slice",) if len(shape) == 1 else ("slice", "inner")
+        return axes, shape
+    if schedule == "grouped":
+        if shape is not None and len(shape) == 3:
+            if shape[0] != 3:
+                raise ValueError(
+                    f"grouped schedule needs mode=3 groups (paper Fig. 3), "
+                    f"got leading dim {shape[0]} in {shape}")
+            shape = shape[1:]
+        if n % 3:
+            raise ValueError(
+                f"grouped schedule needs 3 | device count, got p={n}; "
+                f"nearest usable counts are {n - n % 3 or 3} and "
+                f"{n + 3 - n % 3}")
+        if shape is None:
+            shape = (n // 3,)
+        if len(shape) not in (1, 2):
+            raise ValueError(
+                f"grouped schedule takes shape=(slice,), (slice, inner) or "
+                f"(3, slice, inner), got {shape}")
+        if 3 * math.prod(shape) != n:
+            raise ValueError(
+                f"grouped mesh shape {shape} needs 3*{math.prod(shape)}="
+                f"{3 * math.prod(shape)} devices but {n} are available; "
+                f"pick slice*inner == {n // 3}")
+        axes = ("mode", "slice") if len(shape) == 1 \
+            else ("mode", "slice", "inner")
+        return axes, (3,) + shape
+    raise ValueError(f"unknown schedule {schedule!r}")
+
+
+def make_msc_mesh(schedule: str = "flat", devices=None, shape=None) -> Mesh:
+    """Device mesh for MSC.  flat: ("slice",) or ("slice", "inner");
+    grouped: ("mode", "slice"[, "inner"]) with mode=3 (device count a
+    multiple of 3, as in the paper).  shape= overrides the default
+    1-D factorization — (p, q) for flat, (s, q) or (3, s, q) for
+    grouped — and is validated against the device count."""
+    devices = jax.devices() if devices is None else devices
+    axes, dims = msc_mesh_shape(schedule, len(devices), shape)
+    return Mesh(np.asarray(devices).reshape(dims), axes)
 
 
 def mesh_name(mesh: Mesh) -> str:

@@ -33,6 +33,12 @@ def main(argv=None) -> int:
                     help="similarity threshold (default: Thm II.1-valid)")
     ap.add_argument("--schedule", default="flat",
                     choices=("sequential", "flat", "grouped"))
+    ap.add_argument("--mesh-shape", default=None,
+                    help="explicit mesh factorization, e.g. '4,2' = "
+                         "(slice=4, inner=2): the inner axis shards the "
+                         "within-slice rows so per-device memory is "
+                         "O(m*r*c/(p*q)) (DESIGN.md §7.5); grouped "
+                         "takes 'slice,inner' per mode group")
     ap.add_argument("--relayout", default="gspmd",
                     choices=("gspmd", "collective"),
                     help="flat-schedule mode relayout (§Perf msc it 2)")
@@ -76,7 +82,10 @@ def main(argv=None) -> int:
     if args.schedule == "sequential":
         run = lambda t: msc_sequential(t, cfg)  # noqa: E731
     else:
-        mesh = make_msc_mesh(args.schedule)
+        shape = (tuple(int(s) for s in args.mesh_shape.split(","))
+                 if args.mesh_shape else None)
+        mesh = make_msc_mesh(args.schedule, shape=shape)
+        print(f"mesh: {dict(mesh.shape)}")
         kw = ({"relayout": args.relayout} if args.schedule == "flat" else {})
         run = build_msc_parallel(mesh, cfg, schedule=args.schedule, **kw)
 

@@ -1,4 +1,5 @@
 from .hw import V5E, CHIPS_PER_POD, HwSpec
 from .hlo import HloAnalysis, analyze, shape_bytes
-from .analyze import (RooflineReport, active_param_count, epilogue_model,
-                      model_flops, report_from_compiled, save_report)
+from .analyze import (RooflineReport, active_param_count, eigensolve_model,
+                      epilogue_model, model_flops, report_from_compiled,
+                      save_report)

@@ -166,6 +166,52 @@ def epilogue_model(m: int, c: int, p: int, *, epilogue: str = "allgather",
     }
 
 
+def eigensolve_model(m: int, r: int, c: int, p: int, q: int = 1, *,
+                     sweeps: int = 12, dtype_bytes: float = 4.0,
+                     hw: HwSpec = V5E) -> Dict:
+    """Analytic memory/comm/compute model of the 2-D sharded eigensolve.
+
+    Models the matrix-free power iteration on a ("slice"=p, "inner"=q)
+    mesh (DESIGN.md §7.5): each device holds a (m/p, r/q, c) block of
+    the slice-major tensor and every sweep computes a partial
+    w = Tᵀ(T v) over its local rows, followed by one lax.psum of the
+    (m/p, c) fp32 partial over the q inner devices.
+
+      block_bytes_per_device = m/p · r/q · c · B  — the dominant
+        eigensolve buffer; growing q at fixed p shrinks it q× (the
+        BENCH_inner_shard acceptance bar).
+      psum_link_bytes = sweeps · 2(q−1)/q · (m/p)·c·4  — the extra
+        inner-axis reduce bytes per device (ring all-reduce of the fp32
+        accumulator; zero when q = 1, i.e. the 1-D schedules).
+      compute_s = sweeps · 4·(m/p)·(r/q)·c / peak — the two matvec
+        halves; the psum is a sync point inside each sweep (v must be
+        complete before normalization), so the no-overlap latency is
+        sweeps · (step_compute + step_comm).
+
+    Dims are padded to even shards exactly like ModeSchedule pads them.
+    """
+    m_pad = ((m + p - 1) // p) * p
+    r_pad = ((r + q - 1) // q) * q
+    b_loc, r_loc = m_pad // p, r_pad // q
+    block_bytes = b_loc * r_loc * c * dtype_bytes
+    w_bytes = b_loc * c * 4.0  # fp32 partial accumulator
+    step_link = 2.0 * (q - 1) / q * w_bytes if q > 1 else 0.0
+    step_flops = 4.0 * b_loc * r_loc * c
+    step_compute = step_flops / hw.peak_flops_bf16
+    step_comm = step_link / hw.ici_bw
+    return {
+        "m": m, "r": r, "c": c, "p": p, "q": q, "sweeps": sweeps,
+        "dtype_bytes": dtype_bytes,
+        "block_bytes_per_device": block_bytes,
+        "w_partial_bytes": w_bytes,
+        "psum_link_bytes": sweeps * step_link,
+        "flops": sweeps * step_flops,
+        "comm_s": sweeps * step_comm,
+        "compute_s": sweeps * step_compute,
+        "latency_s": sweeps * (step_compute + step_comm),
+    }
+
+
 def _memory_stats_dict(compiled) -> Dict:
     try:
         ms = compiled.memory_analysis()

@@ -1,6 +1,9 @@
 from .specs import (
     ShardingRules,
     DEFAULT_RULES,
+    MSC_RULES,
+    MSC_TABLE,
+    msc_axes,
     spec_for_def,
     param_specs,
     batch_spec,

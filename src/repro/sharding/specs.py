@@ -164,3 +164,45 @@ def shardings_for(tree_of_specs, mesh: Mesh):
     return __import__("jax").tree.map(
         lambda s: NamedSharding(mesh, s), tree_of_specs,
         is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------- MSC ----
+# Logical axes of the MSC arrays (core/schedule.py).  MSC data is not
+# ParamDefs, but its dims carry the same kind of logical names so every
+# layer (schedule, dry-run, roofline) resolves shardings from one table:
+#
+#   "msc_slice" — the slice index m (paper's candidate set J_k): the
+#                 only parallel dim of Alg. 2, sharded over "slice"
+#                 (or whatever composite axis the mesh offers).
+#   "msc_inner" — the within-slice row/contraction dim r: sharded over
+#                 "inner" when present (2-D meshes, DESIGN.md §7.5),
+#                 replicated otherwise.
+#   "msc_col"   — the eigenvector dim c: NEVER sharded — the per-slice
+#                 eigensolve and the |V Vᵀ| epilogue both need whole
+#                 rows of V, and sharding c would psum every matvec's
+#                 *output* instead of its contraction.
+#   "msc_mode"  — the grouped schedule's unfolding index (3 groups,
+#                 paper Fig. 3).
+MSC_TABLE: Dict[str, Candidates] = {
+    "msc_slice": (("slice",),),
+    "msc_inner": (("inner",), ()),
+    "msc_col": ((),),
+    "msc_mode": (("mode",),),
+}
+MSC_RULES = ShardingRules(table=MSC_TABLE, batch_axes=("slice",))
+
+
+def msc_axes(mesh: Mesh, inner_axis: Optional[str] = "inner",
+             mode_axis: str = "mode") -> Tuple[Axes, Axes]:
+    """(slice_axes, inner_axes) for an MSC mesh.
+
+    The inner axis is taken when present in the mesh; every other axis
+    except the grouped schedule's mode axis composes the (possibly
+    composite) slice axis — so production (data, model) meshes keep
+    flattening onto the slice index exactly as before 2-D sharding.
+    """
+    inner: Axes = (inner_axis,) if inner_axis and inner_axis in mesh.shape \
+        else ()
+    slices = tuple(a for a in mesh.axis_names
+                   if a not in inner and a != mode_axis)
+    return slices, inner

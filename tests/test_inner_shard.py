@@ -1,0 +1,246 @@
+"""2-D ("slice", "inner") sharding (DESIGN.md §7.5): parity + meshes.
+
+Coverage layers:
+  * sequential-oracle parity of the flat schedule across the mesh
+    factorizations (slice, inner) ∈ {(2,2), (4,2), (2,4), (8,1)} with
+    non-divisible slice/row padding, both precisions, both epilogues
+    (subprocess shard_map tests, like tests/test_msc_parallel.py);
+  * the double-all_to_all collective relayout and the Pallas-kernel
+    (per-sweep power_matvec + psum) paths on 2-D meshes;
+  * the grouped schedule on a ("mode", "slice", "inner") mesh;
+  * make_msc_mesh / msc_mesh_shape validation and shape= overrides;
+  * the roofline eigensolve_model's inner-axis reduce bytes;
+  * an in-process variant for the CI multi-device matrix, which picks
+    its factorization from MSC_MESH_SHAPE (8x1, 4x2).
+"""
+import os
+
+import jax
+import pytest
+
+from repro.launch.mesh import msc_mesh_shape
+from repro.roofline import eigensolve_model
+
+# m=45 is divisible by neither 2, 4 nor 8, so the slice AND row padding
+# paths are always on; the oracle comparison sweeps both precisions and
+# both epilogues at each factorization.
+INNER_PARITY = r"""
+import jax, numpy as np
+from repro.core import (MSCConfig, PlantedSpec, make_planted_tensor,
+                        msc_sequential, build_msc_parallel_flat,
+                        make_msc_mesh)
+p, q = {p}, {q}
+mesh = make_msc_mesh("flat", devices=jax.devices()[:p * q], shape=(p, q))
+spec = PlantedSpec.paper(m=45, gamma=70.0)
+T = make_planted_tensor(jax.random.PRNGKey(0), spec)
+for precision, rtol in (("fp32", 3e-5), ("bf16_fp32", 3e-2)):
+    ref = msc_sequential(T, MSCConfig(epsilon=3e-4, precision=precision))
+    for epi in ("allgather", "ring"):
+        cfg = MSCConfig(epsilon=3e-4, precision=precision, epilogue=epi)
+        res = build_msc_parallel_flat(mesh, cfg)(T)
+        for j in range(3):
+            np.testing.assert_allclose(np.asarray(res[j].d),
+                                       np.asarray(ref[j].d),
+                                       rtol=rtol, atol=rtol)
+            assert (np.asarray(res[j].mask) == np.asarray(ref[j].mask)).all()
+            assert int(res[j].power_iters_run) == int(ref[j].power_iters_run)
+print("OK")
+"""
+
+
+@pytest.mark.parametrize("p,q", [(2, 2), (4, 2), (2, 4), (8, 1)])
+def test_inner_shard_matches_sequential(subproc, p, q):
+    out = subproc(INNER_PARITY.format(p=p, q=q), p * q)
+    assert "OK" in out
+
+
+# Non-cube tensor: every mode has a different (m, r, c), none divisible
+# by the mesh dims — slice, row, AND (on the collective path) column
+# padding all engage at once.
+NONCUBE_2D = r"""
+import jax, numpy as np
+from repro.core import (MSCConfig, PlantedSpec, make_planted_tensor,
+                        msc_sequential, build_msc_parallel_flat,
+                        make_msc_mesh)
+spec = PlantedSpec(shape=(37, 44, 29), cluster_sizes=(4, 4, 3), gamma=60.0)
+T = make_planted_tensor(jax.random.PRNGKey(1), spec)
+cfg = MSCConfig(epsilon=1e-4)
+ref = msc_sequential(T, cfg)
+for shape, relayout in (((2, 2), "gspmd"), ((2, 2), "collective"),
+                        ((4, 2), "collective")):
+    mesh = make_msc_mesh("flat", devices=jax.devices()[:shape[0] * shape[1]],
+                         shape=shape)
+    res = build_msc_parallel_flat(mesh, cfg, relayout=relayout)(T)
+    for j in range(3):
+        np.testing.assert_allclose(np.asarray(res[j].d), np.asarray(ref[j].d),
+                                   rtol=3e-5, atol=3e-5)
+        assert (np.asarray(res[j].mask) == np.asarray(ref[j].mask)).all()
+print("OK")
+"""
+
+
+def test_noncube_padding_and_collective_relayout(subproc):
+    assert "OK" in subproc(NONCUBE_2D, 8)
+
+
+# Pallas kernels on the inner axis: the dispatch drops to one fused
+# power_matvec launch per sweep with a psum between (kernels/ops.py),
+# for both the matrix-free and the explicit-gram solver.  The non-cube
+# collective-relayout case additionally exercises the fused kernels
+# under column padding (c_valid masked init).
+KERNELS_2D = r"""
+import jax, numpy as np
+from repro.core import (MSCConfig, PlantedSpec, make_planted_tensor,
+                        msc_sequential, build_msc_parallel_flat,
+                        make_msc_mesh)
+mesh = make_msc_mesh("flat", shape=(2, 2))
+cube = PlantedSpec.paper(m=36, gamma=70.0)
+noncube = PlantedSpec(shape=(27, 34, 21), cluster_sizes=(3, 3, 2),
+                      gamma=60.0)
+for spec, eps, relayout in ((cube, 3e-4, "gspmd"),
+                            (noncube, 1e-4, "collective")):
+    T = make_planted_tensor(jax.random.PRNGKey(2), spec)
+    for matrix_free, rtol in ((True, 3e-5), (False, 1e-4)):
+        cfg = MSCConfig(epsilon=eps, matrix_free=matrix_free,
+                        use_kernels=True, epilogue="ring")
+        ref = msc_sequential(T, cfg.with_(use_kernels=False))
+        res = build_msc_parallel_flat(mesh, cfg, relayout=relayout)(T)
+        for j in range(3):
+            np.testing.assert_allclose(np.asarray(res[j].d),
+                                       np.asarray(ref[j].d),
+                                       rtol=rtol, atol=rtol)
+            assert (np.asarray(res[j].mask) == np.asarray(ref[j].mask)).all()
+print("OK")
+"""
+
+
+def test_kernels_on_inner_axis(subproc):
+    assert "OK" in subproc(KERNELS_2D, 4)
+
+
+# Grouped schedule on ("mode"=3, "slice"=2, "inner"=2): the per-group
+# ring epilogue circulates over "slice" while the eigensolve psums over
+# "inner" inside each group.
+GROUPED_3D = r"""
+import jax, numpy as np
+from repro.core import (MSCConfig, PlantedSpec, make_planted_tensor,
+                        msc_sequential, build_msc_parallel, make_msc_mesh)
+spec = PlantedSpec.paper(m=45, gamma=70.0)
+T = make_planted_tensor(jax.random.PRNGKey(0), spec)
+mesh = make_msc_mesh("grouped", shape=(2, 2))
+assert dict(mesh.shape) == {"mode": 3, "slice": 2, "inner": 2}, mesh.shape
+for epi in ("allgather", "ring"):
+    cfg = MSCConfig(epsilon=3e-4, epilogue=epi)
+    ref = msc_sequential(T, cfg)
+    res = build_msc_parallel(mesh, cfg, "grouped")(T)
+    for j in range(3):
+        np.testing.assert_allclose(np.asarray(res[j].d), np.asarray(ref[j].d),
+                                   rtol=3e-5, atol=3e-5)
+        assert (np.asarray(res[j].mask) == np.asarray(ref[j].mask)).all()
+print("OK")
+"""
+
+
+def test_grouped_with_inner_axis(subproc):
+    assert "OK" in subproc(GROUPED_3D, 12)
+
+
+# ------------------------------------------------ mesh validation ----
+
+class TestMscMeshShape:
+    def test_flat_default_is_1d(self):
+        assert msc_mesh_shape("flat", 8) == (("slice",), (8,))
+
+    def test_flat_2d_override(self):
+        assert msc_mesh_shape("flat", 8, (4, 2)) == (("slice", "inner"),
+                                                     (4, 2))
+
+    def test_flat_wrong_product_reports_count(self):
+        with pytest.raises(ValueError, match="8 are available"):
+            msc_mesh_shape("flat", 8, (4, 4))
+
+    def test_flat_too_many_dims(self):
+        with pytest.raises(ValueError, match="slice, inner"):
+            msc_mesh_shape("flat", 8, (2, 2, 2))
+
+    def test_grouped_default(self):
+        assert msc_mesh_shape("grouped", 6) == (("mode", "slice"), (3, 2))
+
+    def test_grouped_inner_override(self):
+        assert msc_mesh_shape("grouped", 12, (2, 2)) == (
+            ("mode", "slice", "inner"), (3, 2, 2))
+
+    def test_grouped_explicit_mode_dim(self):
+        assert msc_mesh_shape("grouped", 12, (3, 2, 2)) == (
+            ("mode", "slice", "inner"), (3, 2, 2))
+
+    def test_grouped_rejects_non_mode3(self):
+        with pytest.raises(ValueError, match="mode=3"):
+            msc_mesh_shape("grouped", 8, (2, 2, 2))
+
+    def test_grouped_reports_nearest_usable_counts(self):
+        with pytest.raises(ValueError, match="6 and 9"):
+            msc_mesh_shape("grouped", 7)
+
+    def test_grouped_wrong_product(self):
+        with pytest.raises(ValueError, match="slice\\*inner == 4"):
+            msc_mesh_shape("grouped", 12, (2, 4))
+
+    def test_unknown_schedule(self):
+        with pytest.raises(ValueError, match="unknown schedule"):
+            msc_mesh_shape("spiral", 8)
+
+
+# ------------------------------------------------ roofline model ----
+
+class TestEigensolveModel:
+    def test_no_inner_axis_means_no_reduce_bytes(self):
+        r = eigensolve_model(1000, 1000, 1000, p=8, q=1, sweeps=12)
+        assert r["psum_link_bytes"] == 0.0
+        assert r["comm_s"] == 0.0
+
+    def test_block_shrinks_q_times(self):
+        r1 = eigensolve_model(960, 960, 960, p=8, q=1)
+        r4 = eigensolve_model(960, 960, 960, p=8, q=4)
+        assert r1["block_bytes_per_device"] == pytest.approx(
+            4 * r4["block_bytes_per_device"])
+
+    def test_psum_bytes_are_ring_allreduce_of_w(self):
+        m, c, p, q, sweeps = 96, 96, 4, 3, 10
+        r = eigensolve_model(m, 96, c, p=p, q=q, sweeps=sweeps)
+        want = sweeps * 2.0 * (q - 1) / q * (m // p) * c * 4
+        assert r["psum_link_bytes"] == pytest.approx(want)
+
+    def test_padding_matches_schedule(self):
+        r = eigensolve_model(45, 45, 45, p=2, q=4)
+        # pad_to(45,2)//2 = 23 rows of pad_to(45,4)//4 = 12 r-rows
+        assert r["block_bytes_per_device"] == 23 * 12 * 45 * 4
+
+
+# ------------------------------------------- in-process CI matrix ----
+
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs >= 8 devices (CI multi-device job)")
+def test_inner_shard_in_process():
+    """Real multi-device shard_map path, no subprocess; the CI job
+    matrix sets MSC_MESH_SHAPE to each factorization of its 8 forced
+    host devices (8x1, 4x2)."""
+    import numpy as np
+
+    from repro.core import (MSCConfig, PlantedSpec, make_planted_tensor,
+                            msc_sequential, build_msc_parallel_flat,
+                            make_msc_mesh)
+
+    p, q = (int(x) for x in
+            os.environ.get("MSC_MESH_SHAPE", "4x2").split("x"))
+    mesh = make_msc_mesh("flat", devices=jax.devices()[:p * q], shape=(p, q))
+    spec = PlantedSpec.paper(m=45, gamma=70.0)
+    T = make_planted_tensor(jax.random.PRNGKey(0), spec)
+    cfg = MSCConfig(epsilon=3e-4, epilogue="ring")
+    ref_res = msc_sequential(T, cfg)
+    res = build_msc_parallel_flat(mesh, cfg)(T)
+    for j in range(3):
+        np.testing.assert_allclose(np.asarray(res[j].d),
+                                   np.asarray(ref_res[j].d),
+                                   rtol=3e-5, atol=3e-5)
+        assert (np.asarray(res[j].mask) == np.asarray(ref_res[j].mask)).all()

@@ -11,8 +11,9 @@ import pytest
 
 from repro.kernels import ops, ref
 from repro.kernels.gram import batched_gram as gram_kernel
-from repro.kernels.similarity import similarity_rowsum as sim_kernel
+from repro.kernels.ring import abs_rowsum as ring_kernel
 from repro.kernels.power_iter import power_iterate as pi_kernel
+from repro.kernels.power_iter import power_matvec as pm_kernel
 from repro.kernels.flash_attention import flash_attention as fa_kernel
 from repro.core.power_iter import _init_vectors
 
@@ -54,25 +55,38 @@ class TestGramKernel:
         np.testing.assert_allclose(g, np.swapaxes(g, 1, 2), atol=1e-4)
 
 
-class TestSimilarityKernel:
+class TestSimilarityConsolidation:
+    """The allgather epilogue now routes through the accumulating
+    abs_rowsum kernel (kernels/ring.py); the retired similarity.py
+    kernel's semantics survive as the ref.similarity_rowsum oracle,
+    which the consolidated kernel must reproduce in the one-shot
+    (acc=None, full-V) configuration."""
+
     @pytest.mark.parametrize("bl,m,c", [
         (4, 16, 8), (17, 61, 33), (128, 256, 64), (1, 7, 5), (100, 100, 130),
     ])
     @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-    def test_matches_ref(self, bl, m, c, dtype):
+    def test_matches_retired_similarity_oracle(self, bl, m, c, dtype):
         vl = rnd(4, (bl, c), dtype)
         vf = rnd(5, (m, c), dtype)
-        got = sim_kernel(vl, vf, block_i=16, block_j=32, interpret=True)
+        got = ring_kernel(vl, vf, block_i=16, block_j=32, interpret=True)
         want = ref.similarity_rowsum(vl, vf)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    **tol(dtype))
+
+    def test_ops_dispatch_matches_oracle(self):
+        vl, vf = rnd(4, (24, 16)), rnd(5, (40, 16))
+        got = ops.abs_rowsum(vl, vf, interpret=True)
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(ref.similarity_rowsum(vl, vf)),
+                                   rtol=1e-5, atol=1e-5)
 
     def test_zero_padding_rows_contribute_nothing(self):
         vl = rnd(6, (8, 16))
         vf = rnd(7, (24, 16))
         vf_pad = jnp.concatenate([vf, jnp.zeros((9, 16))])
-        a = sim_kernel(vl, vf, block_i=8, block_j=8, interpret=True)
-        b = sim_kernel(vl, vf_pad, block_i=8, block_j=8, interpret=True)
+        a = ring_kernel(vl, vf, block_i=8, block_j=8, interpret=True)
+        b = ring_kernel(vl, vf_pad, block_i=8, block_j=8, interpret=True)
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
 
 
@@ -95,6 +109,28 @@ class TestPowerIterKernel:
         lam, _ = pi_kernel(x, v0, 300, interpret=True)
         want = np.linalg.eigvalsh(np.einsum("brc,brd->bcd", x, x))[:, -1]
         np.testing.assert_allclose(np.asarray(lam), want, rtol=1e-4)
+
+    @pytest.mark.parametrize("shape", [(2, 12, 10), (3, 33, 17)])
+    def test_power_matvec_is_unnormalized_sweep(self, shape):
+        # the inner-sharded building block: w = Tᵀ(T v), no normalization
+        x = rnd(10, shape)
+        v = _init_vectors(shape[0], shape[2])
+        got = pm_kernel(x, v, block_r=8, interpret=True)
+        tv = jnp.einsum("brc,bc->br", x, v)
+        want = jnp.einsum("brc,br->bc", x, tv)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_power_matvec_row_blocks_sum_to_full_sweep(self):
+        # psum semantics: partial w over row-blocks sums to the full w —
+        # the exact contraction the inner axis distributes
+        x = rnd(11, (2, 24, 16))
+        v = _init_vectors(2, 16)
+        full = pm_kernel(x, v, interpret=True)
+        parts = sum(pm_kernel(x[:, i * 6:(i + 1) * 6], v, interpret=True)
+                    for i in range(4))
+        np.testing.assert_allclose(np.asarray(parts), np.asarray(full),
+                                   rtol=1e-5, atol=1e-5)
 
 
 class TestFlashAttentionKernel:
