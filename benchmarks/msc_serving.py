@@ -1,0 +1,131 @@
+"""Batched multi-tensor MSC serving: one dispatch vs a request loop.
+
+The tentpole perf claim of DESIGN.md §7.6: small-tensor MSC requests
+are dispatch-bound — Python dispatch, executable launch, and above all
+the per-collective rendezvous latency of the parallel schedules dwarf
+the per-request compute — so packing B requests into ONE batched
+dispatch (leading request dim through ModeSchedule, one executable from
+the serving cache) amortizes every fixed cost B ways while the payload
+compute is unchanged.
+
+Per (mesh p×q, m, B) cell this bench runs the same request set through
+two warmed engines — `MSCServeEngine(max_batch=B)` (one dispatch) and
+`max_batch=1` (a B-iteration single-request loop) — and reports
+
+  * batched_ms / looped_ms and their ratio `throughput_ratio`
+    (cold compile excluded: both engines warm their executable caches
+    before timing) — the acceptance bar requires ≥ 3× at B=8,
+  * masks_identical — cluster masks bit-identical per request between
+    the two paths (both go through the same bucket padding),
+  * warm_recompiles — executable-cache compiles observed during a
+    second dispatch at an already-warm bucket; MUST be 0 (the
+    zero-retrace contract),
+  * the `roofline.serving_model` speedup prediction at the measured
+    per-dispatch overhead, for the trajectory record.
+
+Rows land in experiments/bench/msc_serving.json AND
+BENCH_msc_serving.json at the repo root (the CI perf artifact).  Each
+row carries `bf16_cpu_caveat` metadata mirroring BENCH_ring_epilogue:
+measured rows run fp32 because XLA:CPU legalizes bf16 collectives to
+f32 — on TPU the bf16_fp32 policy halves the batched epilogue/relayout
+link bytes as well.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+from .common import REPO, run_subprocess_json
+
+BENCH_PATH = os.path.join(REPO, "BENCH_msc_serving.json")
+
+BF16_CPU_CAVEAT = (
+    "measured at fp32: XLA:CPU legalizes bf16 collectives to f32, so the "
+    "bf16_fp32 policy's halved link bytes are TPU-only (see "
+    "BENCH_ring_epilogue.json)")
+
+_CODE = """
+import json
+from benchmarks.msc_serving import measure
+print(json.dumps([measure(**s) for s in json.loads('''{specs}''')]))
+"""
+
+
+def measure(p: int, q: int, m: int, B: int, epilogue: str) -> Dict:
+    """Worker (runs under a forced device count): one serving cell."""
+    import jax
+
+    from repro.core import (MSCConfig, PlantedSpec, make_planted_tensor,
+                            make_msc_mesh)
+    from repro.roofline import serving_model
+    from repro.serving import MSCServeEngine
+    from benchmarks.common import time_fn
+
+    mesh = make_msc_mesh("flat", devices=jax.devices()[:p * q], shape=(p, q))
+    cfg = MSCConfig(epsilon=3e-4, epilogue=epilogue)
+    # B same-bucket requests with slightly different true dims, so the
+    # per-request validity masks and column bounds are all exercised
+    tensors = [make_planted_tensor(
+        jax.random.PRNGKey(i),
+        PlantedSpec.paper(m - (i % 3), gamma=70.0)) for i in range(B)]
+
+    batched = MSCServeEngine(mesh, cfg, max_batch=B)
+    looped = MSCServeEngine(mesh, cfg, max_batch=1)
+    res_b = batched.run(tensors)   # warms the caches (cold compile here,
+    res_l = looped.run(tensors)    # excluded from the timed section)
+
+    masks_identical = all(
+        (rb[j].mask == rl[j].mask).all()
+        for rb, rl in zip(res_b, res_l) for j in range(3))
+
+    before = batched.stats
+    batched.run(tensors)
+    warm = batched.stats.delta(before)
+
+    t_b = time_fn(batched.run, tensors)
+    t_l = time_fn(looped.run, tensors)
+    dispatch_s = max(t_l["median_s"] / B - t_b["median_s"] / B, 0.0)
+    pred = serving_model((m, m, m), B, p, q, epilogue=epilogue,
+                         dispatch_s=dispatch_s)
+    return {
+        "p": p, "q": q, "m": m, "B": B, "epilogue": epilogue,
+        "precision": "fp32",
+        "batched_ms": t_b["median_s"] * 1e3,
+        "looped_ms": t_l["median_s"] * 1e3,
+        "throughput_ratio": t_l["median_s"] / t_b["median_s"],
+        "masks_identical": bool(masks_identical),
+        "warm_recompiles": warm.compiles,
+        "warm_cache_hits": warm.cache_hits,
+        "executables_compiled": batched.stats.compiles,
+        "predicted_speedup": pred["speedup"],
+        "bf16_cpu_caveat": None,  # filled by run() from BF16_CPU_CAVEAT
+    }
+
+
+def run(full: bool = False) -> List[Dict]:
+    if full:
+        specs = [{"p": 8, "q": 1, "m": 45, "B": 8, "epilogue": "allgather"},
+                 {"p": 4, "q": 2, "m": 45, "B": 8, "epilogue": "ring"},
+                 {"p": 8, "q": 1, "m": 45, "B": 16, "epilogue": "ring"}]
+    else:
+        specs = [{"p": 8, "q": 1, "m": 21, "B": 8, "epilogue": "allgather"},
+                 {"p": 4, "q": 2, "m": 21, "B": 8, "epilogue": "ring"}]
+    rows: List[Dict] = []
+    for spec in specs:
+        res = run_subprocess_json(_CODE.format(specs=json.dumps([spec])),
+                                  n_devices=spec["p"] * spec["q"],
+                                  timeout=1800)
+        rows.extend(res)
+    for row in rows:
+        row["bf16_cpu_caveat"] = BF16_CPU_CAVEAT
+        assert row["masks_identical"], f"mask mismatch: {row}"
+        assert row["warm_recompiles"] == 0, f"warm bucket recompiled: {row}"
+        if row["B"] >= 8:
+            assert row["throughput_ratio"] >= 3.0, (
+                f"batched dispatch not 3x the request loop: {row}")
+
+    with open(BENCH_PATH, "w") as f:
+        json.dump(rows, f, indent=2)
+    print(f"[msc_serving] wrote {BENCH_PATH}")
+    return rows

@@ -8,6 +8,7 @@
   power_iter_bench    (new) adaptive vs fixed-60 eigensolver (DESIGN.md §7.3)
   ring_epilogue       (new) ring vs allgather epilogue traffic (DESIGN.md §7.4)
   inner_shard         (new) 2-D (slice,inner) memory/latency (DESIGN.md §7.5)
+  msc_serving         (new) batched vs looped request serving (DESIGN.md §7.6)
 
 Usage:
   PYTHONPATH=src python -m benchmarks.run            # CPU-feasible sizes
@@ -28,8 +29,9 @@ from .common import print_rows, save_rows
 
 ALL = ("fig4_quality", "fig5_strong_scaling", "fig6_data_scaling",
        "fig8_comm", "kernel_bench", "power_iter_bench", "ring_epilogue",
-       "inner_shard")
-QUICK = ("power_iter_bench", "kernel_bench", "ring_epilogue", "inner_shard")
+       "inner_shard", "msc_serving")
+QUICK = ("power_iter_bench", "kernel_bench", "ring_epilogue", "inner_shard",
+         "msc_serving")
 
 
 def main(argv=None) -> int:

@@ -29,6 +29,7 @@ from .msc import (
     cluster_mode_slices,
 )
 from .parallel import (
+    build_msc_batched,
     build_msc_parallel,
     build_msc_parallel_flat,
     build_msc_parallel_grouped,

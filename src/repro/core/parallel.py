@@ -60,7 +60,7 @@ from jax.sharding import Mesh, NamedSharding
 from repro.compat import shard_map
 from repro.launch.mesh import make_msc_mesh  # noqa: F401  (public re-export)
 
-from .msc import mode_slices
+from .msc import MODE_PERMS, mode_slices
 from .schedule import (EPILOGUES, ModeSchedule, axis_arg,  # noqa: F401
                        build_epilogue_rowsum, epilogue_rowsum, norm_axes,
                        pad_to)
@@ -269,6 +269,47 @@ def build_msc_parallel_grouped(
         for j in range(3):
             modes.append(sched.finalize_mode(d3[j], lam3[j], it3[j],
                                              valid, m))
+        return MSCResult(modes=tuple(modes))
+
+    return run
+
+
+def build_msc_batched(
+    mesh: Mesh,
+    cfg: MSCConfig,
+    axis_name=None,
+    inner_axis: Optional[str] = None,
+):
+    """jitted (tensors (B, M1, M2, M3), dims (B, 3)) → batched MSCResult.
+
+    The request-batched flat schedule (DESIGN.md §7.6): B independent
+    MSC decompositions — bucket-padded to one shape by the serving
+    engine, true sizes in `dims` — run through ONE set of compiled
+    shard_map bodies.  Per mode, the leading request dim rides
+    replicated through ModeSchedule's batched specs, the eigensolver
+    gates each request independently (per-request `power_iters_run`,
+    batch-max lockstep exit), the epilogue collectives move one
+    B-times-larger message over the same schedule, and extraction vmaps
+    over requests.  Every field of the returned ModeResults carries a
+    leading B dim at the bucket-padded size; callers slice
+    `[i, :dims[i, j]]` per request (MSCServeEngine does this on host).
+
+    Because `dims` is a traced argument, one executable serves *any*
+    request sizes inside its bucket — the zero-retrace contract of the
+    serving engine's executable cache.
+    """
+    sched = _flat_schedule(mesh, cfg, axis_name, inner_axis)
+    # column dim of modes 1/2 is m3, of mode 3 is m2 (see MODE_PERMS)
+    c_of = (2, 2, 1)
+
+    @jax.jit
+    def run(batch: jax.Array, dims: jax.Array) -> MSCResult:
+        modes = []
+        for j in range(3):
+            perm = (0,) + tuple(a + 1 for a in MODE_PERMS[j])
+            d, lam, iters, valid = sched.run_mode_batched(
+                jnp.transpose(batch, perm), dims[:, j], dims[:, c_of[j]])
+            modes.append(sched.finalize_mode_batched(d, lam, iters, valid))
         return MSCResult(modes=tuple(modes))
 
     return run

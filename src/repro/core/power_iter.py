@@ -45,7 +45,17 @@ lockstep-exit contract over the slice axes is unchanged.  `c_valid`
 masks the deterministic start vector to the first c_valid entries when a
 relayout had to zero-pad the column dim: padded columns stay exactly
 zero through every matvec and norm, making the padded run bit-identical
-to the unpadded one.
+to the unpadded one.  It may be a static int (the relayout paths) or a
+traced array (the serving path's per-request column bounds).
+
+Request batching (DESIGN.md §7.6): every solver is rank-polymorphic in
+a leading request dim — slices (B, b, r, c) runs B independent MSC
+requests through one set of fused contractions.  The convergence gate
+then issues one verdict *per request* (maxima reduce over the slice dim
+only): a converged request's iterate freezes and its counter stops,
+while the while_loop exits on the batch-max (all requests done) so the
+lockstep contract over the mesh is preserved.  `iters` comes back with
+the request shape — per-request realized sweeps, not the batch max.
 """
 from __future__ import annotations
 
@@ -67,22 +77,31 @@ def compute_dtype(precision: str):
     raise ValueError(f"unknown precision {precision!r}; expected {PRECISIONS}")
 
 
-def _init_vectors(batch: int, dim: int, dtype=jnp.float32,
-                  c_valid: Optional[int] = None) -> jax.Array:
+def _init_vectors(batch, dim: int, dtype=jnp.float32,
+                  c_valid=None) -> jax.Array:
     """Deterministic start vectors with guaranteed overlap with any
     non-negative planted direction: ones + a fixed low-amplitude
     perturbation (breaks ties/orthogonal starts without a PRNG key).
 
+    batch: an int (the slice count) or a tuple of leading dims —
+    (B, b) for the request-batched solvers.
+
     c_valid: when the column dim was zero-padded (dim > true c), mask
     the init to the first c_valid entries and normalize over them — the
     resulting iterates are bit-identical to the unpadded solve (padded
-    columns are zero in T, so they stay exactly zero forever)."""
+    columns are zero in T, so they stay exactly zero forever).  Accepts
+    a scalar (static or traced) or a per-request array broadcastable
+    against the batch dims (e.g. (B, 1) for batch=(B, b)): the serving
+    engine's buckets pad every request to one shape, so each request
+    masks to its own true column count."""
+    shape = (batch,) if isinstance(batch, int) else tuple(batch)
     pert = 0.01 * jnp.sin(1.37 * jnp.arange(dim, dtype=dtype) + 0.3)
     v0 = jnp.ones((dim,), dtype) + pert
-    if c_valid is not None and c_valid < dim:
-        v0 = jnp.where(jnp.arange(dim) < c_valid, v0, 0.0)
-    v0 = v0 / jnp.linalg.norm(v0)
-    return jnp.broadcast_to(v0, (batch, dim))
+    if c_valid is not None:
+        cv = jnp.asarray(c_valid)
+        v0 = jnp.where(jnp.arange(dim) < cv[..., None], v0, 0.0)
+    v0 = v0 / jnp.linalg.norm(v0, axis=-1, keepdims=True)
+    return jnp.broadcast_to(v0, (*shape, dim))
 
 
 def _normalize(v, eps=1e-30):
@@ -116,16 +135,54 @@ def convergence_gate(lam: jax.Array, resid: jax.Array, tol: float,
                      axis_name=None) -> jax.Array:
     """True once every slice's λ-weighted residual is below tol.
 
-    lam: (b,) Rayleigh quotients; resid: (b,) ‖C v − λ v‖ per slice.
-    Under shard_map, axis_name reduces both maxima over the group axis so
-    all devices reach the same verdict (collective-safe lockstep exit).
+    lam: (..., b) Rayleigh quotients; resid: (..., b) ‖C v − λ v‖ per
+    slice.  Maxima reduce over the slice dim only, so any leading
+    request dims get one independent verdict each.  Under shard_map,
+    axis_name reduces both maxima over the group axis so all devices
+    reach the same verdict (collective-safe lockstep exit).
     """
-    weighted = jnp.max(resid / jnp.maximum(lam, 1.0) * lam)
-    lam_max = jnp.max(lam)
+    weighted = jnp.max(resid / jnp.maximum(lam, 1.0) * lam, axis=-1)
+    lam_max = jnp.max(lam, axis=-1)
     if axis_name is not None:
         weighted = jax.lax.pmax(weighted, axis_name)
         lam_max = jax.lax.pmax(lam_max, axis_name)
     return weighted <= tol * jnp.maximum(lam_max, 1e-30)
+
+
+def _gated_loop(chunk_fn, v, n_iters: int, k: int, tol: float,
+                axis_name, vary_axes):
+    """Lockstep-gated chunked while_loop shared by the jnp and kernel paths.
+
+    chunk_fn(v) -> (v_new, lam, resid): k sweeps from v with the gate
+    probe measured at the final sweep; v is (..., b, c), lam/resid
+    (..., b).  Leading dims of v are independent requests: each gets its
+    own gate verdict, and once a request converges its iterate freezes
+    (the carried v keeps the converged state — bit-identical to running
+    that request alone) and its counter stops, while the loop itself
+    exits on the batch-max (all requests done) so every device still
+    takes the same trip count.  Returns (v, iters) with iters shaped
+    like the request dims (scalar for the unbatched solvers).
+    """
+    gshape = v.shape[:-2]
+
+    def cond(state):
+        _, _, it, done = state
+        return jnp.any(~done) & (it < n_iters)
+
+    def body(state):
+        v, iters, it, done = state
+        v_new, lam, resid = chunk_fn(v)
+        fired = convergence_gate(lam, resid, tol, axis_name)
+        v = jnp.where(done[..., None, None], v, v_new)
+        iters = jnp.where(done, iters, it + k)
+        return v, iters, it + k, done | fired
+
+    init = (v,
+            _maybe_pvary(jnp.zeros(gshape, jnp.int32), vary_axes),
+            _maybe_pvary(jnp.int32(0), vary_axes),
+            _maybe_pvary(jnp.zeros(gshape, bool), vary_axes))
+    v, iters, _, _ = jax.lax.while_loop(cond, body, init)
+    return v, iters
 
 
 def _run_adaptive(matvec, v, n_iters: int, tol: float, check_every: int,
@@ -141,34 +198,25 @@ def _run_adaptive(matvec, v, n_iters: int, tol: float, check_every: int,
 
     if tol <= 0.0:
         v = jax.lax.fori_loop(0, n_iters, step, v)
-        return v, jnp.int32(n_iters)
+        return v, jnp.full(v.shape[:-2], n_iters, jnp.int32)
 
     k = max(1, min(check_every, n_iters))
 
-    def cond(state):
-        _, it, done = state
-        return (~done) & (it < n_iters)
-
-    def chunk(state):
-        v, it, _ = state
+    def chunk_fn(v):
         v = jax.lax.fori_loop(0, k - 1, step, v)
         # final sweep of the chunk doubles as the residual probe: w = C v
         # is both the convergence measurement and the next iterate.
         w = matvec(v)
         lam = jnp.sum(w * v, axis=-1)  # Rayleigh quotient (v is unit)
-        resid = jnp.linalg.norm(w - lam[:, None] * v, axis=-1)
-        done = convergence_gate(lam, resid, tol, axis_name)
-        return _normalize(w), it + k, done
+        resid = jnp.linalg.norm(w - lam[..., None] * v, axis=-1)
+        return _normalize(w), lam, resid
 
-    init = (v, _maybe_pvary(jnp.int32(0), vary_axes),
-            _maybe_pvary(jnp.bool_(False), vary_axes))
-    v, iters, _ = jax.lax.while_loop(cond, chunk, init)
-    return v, iters
+    return _gated_loop(chunk_fn, v, n_iters, k, tol, axis_name, vary_axes)
 
 
 @partial(jax.jit, static_argnames=("n_iters", "tol", "check_every",
                                    "precision", "vary_axes", "axis_name",
-                                   "inner_axis", "c_valid"))
+                                   "inner_axis"))
 def power_iteration_matrix_free(slices: jax.Array, n_iters: int = 60,
                                 tol: float = 0.0, check_every: int = 6,
                                 precision: str = "fp32",
@@ -176,28 +224,31 @@ def power_iteration_matrix_free(slices: jax.Array, n_iters: int = 60,
                                 inner_axis=None, c_valid=None):
     """Top eigenpair of T_iᵀT_i for a batch of slices, without forming C_i.
 
-    slices: (b, r, c) — with inner_axis set, r is this device's row-block
-    of each slice and both matvec halves psum their partials over it.
-    Returns (lambdas (b,), vectors (b, c), iters ()).
+    slices: (b, r, c), or (B, b, r, c) for B independent requests — with
+    inner_axis set, r is this device's row-block of each slice and both
+    matvec halves psum their partials over it.
+    Returns (lambdas (..., b), vectors (..., b, c), iters with the
+    request shape — () unbatched, (B,) batched).
     λ_i = ‖T_i v_i‖² is the fp32 Rayleigh quotient of C_i at the final v_i
     regardless of the precision policy.
     """
-    b, r, c = slices.shape
+    c = slices.shape[-1]
     dt = compute_dtype(precision)
     s = slices.astype(dt)
 
     def matvec(v):
         vb = _maybe_pvary(v, inner_axis)
-        tv = jnp.einsum("brc,bc->br", s, vb.astype(dt),
+        tv = jnp.einsum("...rc,...c->...r", s, vb.astype(dt),
                         preferred_element_type=jnp.float32)
-        w = jnp.einsum("brc,br->bc", s, tv.astype(dt),
+        w = jnp.einsum("...rc,...r->...c", s, tv.astype(dt),
                        preferred_element_type=jnp.float32)
         return _psum_inner(w, inner_axis)
 
-    v = _maybe_pvary(_init_vectors(b, c, jnp.float32, c_valid), vary_axes)
+    v = _maybe_pvary(_init_vectors(slices.shape[:-2], c, jnp.float32,
+                                   c_valid), vary_axes)
     v, iters = _run_adaptive(matvec, v, n_iters, tol, check_every,
                              axis_name, vary_axes)
-    tv = jnp.einsum("brc,bc->br", slices.astype(jnp.float32),
+    tv = jnp.einsum("...rc,...c->...r", slices.astype(jnp.float32),
                     _maybe_pvary(v, inner_axis))
     lam = _psum_inner(jnp.sum(tv * tv, axis=-1), inner_axis)
     return lam, v, iters
@@ -205,7 +256,7 @@ def power_iteration_matrix_free(slices: jax.Array, n_iters: int = 60,
 
 @partial(jax.jit, static_argnames=("n_iters", "tol", "check_every",
                                    "precision", "use_kernel", "vary_axes",
-                                   "axis_name", "inner_axis", "c_valid"))
+                                   "axis_name", "inner_axis"))
 def power_iteration_gram(slices: jax.Array, n_iters: int = 60,
                          tol: float = 0.0, check_every: int = 6,
                          precision: str = "fp32", use_kernel: bool = False,
@@ -213,7 +264,8 @@ def power_iteration_gram(slices: jax.Array, n_iters: int = 60,
                          c_valid=None):
     """Paper-faithful path: form C_i = T_iᵀT_i explicitly, then iterate.
 
-    slices: (b, r, c).  Returns (lambdas (b,), vectors (b, c), iters ()).
+    slices: (b, r, c) or request-batched (B, b, r, c).  Returns
+    (lambdas (..., b), vectors (..., b, c), iters with the request shape).
     The gram is always accumulated and stored in fp32; under bf16_fp32
     the formation and iteration *operands* are bf16.  With inner_axis
     set, the r·c² formation MACs split q ways (partial gram over local
@@ -226,7 +278,7 @@ def power_iteration_gram(slices: jax.Array, n_iters: int = 60,
 
         gram = kops.batched_gram(slices.astype(dt), out_dtype=jnp.float32)
     else:
-        gram = jnp.einsum("brc,brd->bcd", slices.astype(dt),
+        gram = jnp.einsum("...rc,...rd->...cd", slices.astype(dt),
                           slices.astype(dt),
                           preferred_element_type=jnp.float32)
     gram = _psum_inner(gram, inner_axis)
@@ -237,25 +289,25 @@ def power_iteration_gram(slices: jax.Array, n_iters: int = 60,
 
 
 @partial(jax.jit, static_argnames=("n_iters", "tol", "check_every",
-                                   "precision", "vary_axes", "axis_name",
-                                   "c_valid"))
+                                   "precision", "vary_axes", "axis_name"))
 def power_iteration_on_gram(gram: jax.Array, n_iters: int = 60,
                             tol: float = 0.0, check_every: int = 6,
                             precision: str = "fp32", vary_axes=None,
                             axis_name=None, c_valid=None):
-    """Power iteration given precomputed covariance matrices (b, c, c)."""
-    b, c, _ = gram.shape
+    """Power iteration given covariance matrices (..., b, c, c)."""
+    c = gram.shape[-1]
     dt = compute_dtype(precision)
     g = gram.astype(dt)
 
     def matvec(v):
-        return jnp.einsum("bcd,bd->bc", g, v.astype(dt),
+        return jnp.einsum("...cd,...d->...c", g, v.astype(dt),
                           preferred_element_type=jnp.float32)
 
-    v = _maybe_pvary(_init_vectors(b, c, jnp.float32, c_valid), vary_axes)
+    v = _maybe_pvary(_init_vectors(gram.shape[:-2], c, jnp.float32,
+                                   c_valid), vary_axes)
     v, iters = _run_adaptive(matvec, v, n_iters, tol, check_every,
                              axis_name, vary_axes)
-    lam = jnp.einsum("bc,bcd,bd->b", v, gram.astype(jnp.float32), v)
+    lam = jnp.einsum("...c,...cd,...d->...", v, gram.astype(jnp.float32), v)
     return lam, v, iters
 
 
@@ -265,9 +317,12 @@ def top_eigenpairs(slices: jax.Array, cfg, vary_axes=None, axis_name=None,
     power_tol/power_check_every/precision configure the solver.
 
     inner_axis: mesh axis the slice rows are sharded over (contractions
-    psum over it); c_valid: static column-validity bound under c-padding.
-    Returns (lambdas (b,), vectors (b, c), iters ()) — iters is the
-    realized sweep count (== cfg.power_iters when the gate never fires).
+    psum over it); c_valid: column-validity bound under c-padding (a
+    static int, or a per-request array on the batched serving path).
+    slices may carry a leading request dim (B, b, r, c).
+    Returns (lambdas (..., b), vectors (..., b, c), iters) — iters is
+    the realized sweep count per request (== cfg.power_iters when the
+    gate never fires), shaped () unbatched / (B,) batched.
     """
     kw = dict(n_iters=cfg.power_iters, tol=cfg.power_tol,
               check_every=cfg.power_check_every, precision=cfg.precision,

@@ -43,6 +43,14 @@ varying over group+slice axes only; operands entering an inner-sharded
 contraction are `pvary`-lifted onto the inner axes and the partial
 results `psum`-lowered back, so d/λ leave the shard_map replicated over
 "inner" and the out_specs never mention it.
+
+Request batching (DESIGN.md §7.6): the batched entry points
+(`build_batched_mode_fn` / `run_mode_batched` / `finalize_mode_batched`)
+run B independent requests through the same per-device body — the
+leading request dim rides replicated through every PartitionSpec, the
+convergence gate issues per-request verdicts under a batch-max lockstep
+exit, and the serving engine's bucket padding reuses the validity-mask
+contract with *traced* per-request slice counts and column bounds.
 """
 from __future__ import annotations
 
@@ -101,14 +109,17 @@ def _chunk_rowsum(v_local: jax.Array, chunk: jax.Array,
     Both epilogues route through the same accumulating kernel
     (`kernels/ring.py:abs_rowsum`): the allgather epilogue is the
     degenerate single-chunk case (acc=None, chunk=the gathered V).
+    A leading request dim (B, rows, c) batches B independent requests —
+    the similarity tile is block-diagonal in requests, so the product
+    stays per-request (DESIGN.md §7.6).
     """
     if cfg.use_kernels:
         from repro.kernels import ops as kops
 
         return kops.abs_rowsum(v_local, chunk, acc)
-    prod = jnp.abs(jnp.einsum("ic,jc->ij", v_local, chunk,
+    prod = jnp.abs(jnp.einsum("...ic,...jc->...ij", v_local, chunk,
                               preferred_element_type=jnp.float32))
-    d = jnp.sum(prod, axis=1)
+    d = jnp.sum(prod, axis=-1)
     return d if acc is None else acc + d
 
 
@@ -144,6 +155,10 @@ def epilogue_rowsum(v_local: jax.Array, *, cfg: MSCConfig,
                     axis_name: AxisName, shards: int) -> jax.Array:
     """d_local = row-block sums of |V Vᵀ| from this device's rows of V.
 
+    v_local: (rows, c), or (B, rows, c) for B batched requests — the
+    collectives then move one B-times-larger message over the same
+    schedule, and every contraction stays per-request.
+
     The paper's MPI_Allgatherv(M) + full |V Vᵀ| row-sum, under the
     MSCConfig.epilogue policy: "allgather" replicates V (blocking
     all_gather, O(m·c) peak buffer), "ring" streams chunks neighbor-to-
@@ -161,7 +176,9 @@ def epilogue_rowsum(v_local: jax.Array, *, cfg: MSCConfig,
     if cfg.epilogue == "ring":
         return _ring_rowsum(vl, cfg, axis_name, shards)
     # MPI_Allgatherv(M) over the group → full V on every group member
-    v_full = jax.lax.all_gather(vl, axis_name, axis=0, tiled=True)
+    # (the gather axis is the slice-row dim: 0 unbatched, 1 under a
+    # leading request dim)
+    v_full = jax.lax.all_gather(vl, axis_name, axis=vl.ndim - 2, tiled=True)
     # row-block of C = |V Vᵀ| and its row sums; padded columns are zero
     # rows of V and contribute nothing.
     return _chunk_rowsum(vl, v_full, None, cfg)
@@ -245,6 +262,19 @@ class ModeSchedule:
     def stacked_vector_spec(self) -> P:
         return P(_spec_entry(self.group_axes), _spec_entry(self.slice_axes))
 
+    @property
+    def batched_block_spec(self) -> P:
+        """(B, b, r, c) request-batched blocks: the leading request dim
+        is replicated-free (every device holds its shard of every
+        request), the rest shard exactly like block_spec."""
+        return P(None, _spec_entry(self.slice_axes),
+                 _spec_entry(self.inner_axes), None)
+
+    @property
+    def batched_vector_spec(self) -> P:
+        """(B, b) per-request per-slice vectors."""
+        return P(None, _spec_entry(self.slice_axes))
+
     # ---- padding / masking -------------------------------------------
     def pad_amounts(self, m: int, r: int) -> Tuple[int, int]:
         """(m_pad, r_pad): slice dim to even slice shards, row dim to
@@ -262,28 +292,33 @@ class ModeSchedule:
 
     # ---- the shared per-device body (paper Alg. 2, minus extraction) --
     def mode_local(self, block: jax.Array, valid_local: jax.Array,
-                   c_valid: Optional[int] = None):
+                   c_valid=None):
         """Per-device mode computation.
 
         block: (b, r_local, c) — this device's sub-block of one mode's
           unfolding (slice-sharded rows of slices; inner-sharded rows
-          *within* each slice when inner_axes is set).
-        valid_local: bool (b,) — False on padding slices.
-        c_valid: static column-validity bound when the relayout padded c
-          (None ⇔ all columns valid).
+          *within* each slice when inner_axes is set) — or (B, b,
+          r_local, c) for B batched requests (DESIGN.md §7.6): all
+          reductions below stay per-request, so one body serves both.
+        valid_local: bool (b,) / (B, b) — False on padding slices.
+        c_valid: column-validity bound when the relayout padded c
+          (None ⇔ all columns valid; a static int, or a (B, 1) array of
+          per-request bounds on the serving path).
 
         The adaptive eigensolver's convergence gate pmax-reduces its
         residual maxima over the slice axes, so every group member runs
         the same number of sweeps (lockstep exit — padding slices are
         all-zero and contribute zero residual, hence never delay the
-        gate).  Inner-sharded contractions psum their partials over the
-        inner axes inside each sweep.
+        gate).  Batched requests each gate independently — a converged
+        request's iterate freezes and its counter stops while the loop
+        exits on the batch max.  Inner-sharded contractions psum their
+        partials over the inner axes inside each sweep.
 
-        Returns (d_local (b,), lam_local (b,), iters (1,)) — this
-        device's shard of d and λ plus the realized power-iteration
-        sweep count (identical on every group member by the lockstep
-        gate; shaped (1,) so it passes through sharded out_specs and is
-        max-reduced outside).
+        Returns (d_local (..., b), lam_local (..., b), iters (1,) /
+        (B, 1)) — this device's shard of d and λ plus the realized
+        power-iteration sweep count per request (identical on every
+        group member by the lockstep gate; the trailing singleton lets
+        it pass through sharded out_specs and be max-reduced outside).
         """
         lam, vec, iters = top_eigenpairs(
             block, self.cfg, vary_axes=self.vary_axes,
@@ -291,14 +326,15 @@ class ModeSchedule:
             c_valid=c_valid)
         lam = jnp.where(valid_local, lam, 0.0)
         # MPI_Allreduce(λ, MAX) over the group — fp32 regardless of precision
-        lam_max = jax.lax.pmax(jnp.max(lam), self.slice_axis)
-        v_local = (lam / jnp.maximum(lam_max, 1e-30))[:, None] * vec
-        v_local = jnp.where(valid_local[:, None], v_local, 0.0)
+        lam_max = jax.lax.pmax(jnp.max(lam, axis=-1), self.slice_axis)
+        scale = lam / jnp.maximum(lam_max, 1e-30)[..., None]
+        v_local = scale[..., None] * vec
+        v_local = jnp.where(valid_local[..., None], v_local, 0.0)
         d_local = epilogue_rowsum(v_local, cfg=self.cfg,
                                   axis_name=self.slice_axis,
                                   shards=self.slice_shards)
         d_local = jnp.where(valid_local, d_local, 0.0)
-        return d_local, lam, iters[None]
+        return d_local, lam, iters[..., None]
 
     # ---- shard_map entry points --------------------------------------
     def build_mode_fn(self, c_valid: Optional[int] = None):
@@ -337,6 +373,70 @@ class ModeSchedule:
                                      self.cfg.max_extraction_iters)
         return ModeResult(mask=mask[:m], d=d[:m], lambdas=lam[:m],
                           n_iters=n_it, power_iters_run=jnp.max(iters))
+
+    # ---- request-batched entry points (DESIGN.md §7.6) ----------------
+    def build_batched_mode_fn(self):
+        """shard_map'd (slices (B, m', r', c), valid (B, m'), c_req (B,))
+        → (d (B, m'), λ (B, m'), iters (B, slice_shards)).
+
+        One compiled body serves B independent requests: the request dim
+        rides replicated through every PartitionSpec, the per-request
+        column bounds (c_req) mask each request's eigensolver init, and
+        iters comes back per request per slice-shard (max-reduced into
+        ModeResult by finalize_mode_batched)."""
+        def body(block, valid_local, c_req):
+            return self.mode_local(block, valid_local,
+                                   c_valid=c_req[:, None])
+
+        return shard_map(
+            body,
+            mesh=self.mesh,
+            in_specs=(self.batched_block_spec, self.batched_vector_spec,
+                      P(None)),
+            out_specs=(self.batched_vector_spec, self.batched_vector_spec,
+                       self.batched_vector_spec),
+        )
+
+    def run_mode_batched(self, slices: jax.Array, m_req: jax.Array,
+                         c_req: jax.Array):
+        """Run one mode for a bucket of B requests.
+
+        slices: (B, M, R, C) — bucket-padded slice-major unfoldings,
+          request i's true data in the leading (m_req[i], r, c_req[i])
+          corner, zeros beyond (the serving engine's padding contract).
+        m_req / c_req: (B,) int32 true slice / column counts; rows need
+          no bound (zero rows drop out of every contraction), columns
+          mask the deterministic eigensolver init so the bucket-padded
+          iterates stay bit-identical to the unpadded ones.
+
+        Returns (d, lam, iters, valid) still at the padded size; the
+        engine trims per request on the host.
+        """
+        from jax.sharding import NamedSharding
+
+        _, m, r, _ = slices.shape
+        m_pad, r_pad = self.pad_amounts(m, r)
+        if (m_pad, r_pad) != (m, r):
+            slices = jnp.pad(slices, ((0, 0), (0, m_pad - m),
+                                      (0, r_pad - r), (0, 0)))
+        valid = jnp.arange(m_pad)[None, :] < m_req[:, None]
+        slices = jax.lax.with_sharding_constraint(
+            slices, NamedSharding(self.mesh, self.batched_block_spec))
+        d, lam, iters = self.build_batched_mode_fn()(slices, valid, c_req)
+        return d, lam, iters, valid
+
+    def finalize_mode_batched(self, d, lam, iters, valid) -> ModeResult:
+        """Per-request replicated extraction (vmapped over the request
+        dim) + the per-request sweep report: iters arrives (B,
+        slice_shards) and reduces over devices only — NOT over requests,
+        so ModeResult.power_iters_run keeps each request's own realized
+        sweep count.  Results stay bucket-padded; the engine trims."""
+        mask, n_it = jax.vmap(
+            lambda dd, vv: extract_cluster(dd, self.cfg.epsilon, vv,
+                                           self.cfg.max_extraction_iters)
+        )(d, valid)
+        return ModeResult(mask=mask, d=d, lambdas=lam, n_iters=n_it,
+                          power_iters_run=jnp.max(iters, axis=-1))
 
 
 def build_mode_runner(sched: ModeSchedule, c_valid: Optional[int] = None):

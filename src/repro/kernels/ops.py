@@ -29,8 +29,17 @@ def _interpret_default() -> bool:
 def batched_gram(slices: jax.Array, *, interpret: bool | None = None,
                  block_r: int = 256, block_c: int = 128,
                  out_dtype=None) -> jax.Array:
-    """Pallas batched slice covariance C_i = T_iᵀT_i (see gram.py)."""
+    """Pallas batched slice covariance C_i = T_iᵀT_i (see gram.py).
+
+    A leading request dim (B, b, r, c) flattens into the kernel's slice
+    grid axis and unflattens on exit (DESIGN.md §7.6)."""
     interpret = _interpret_default() if interpret is None else interpret
+    lead = slices.shape[:-3]
+    if lead:
+        flat = batched_gram(slices.reshape((-1,) + slices.shape[-2:]),
+                            interpret=interpret, block_r=block_r,
+                            block_c=block_c, out_dtype=out_dtype)
+        return flat.reshape(lead + (slices.shape[-3],) + flat.shape[1:])
     return _gram.batched_gram(slices, block_r=block_r, block_c=block_c,
                               out_dtype=out_dtype, interpret=interpret)
 
@@ -71,20 +80,27 @@ def power_iterate_matrix_free(slices: jax.Array, n_iters: int = 60,
     lockstep gate.  c_valid masks the deterministic init under column
     padding, exactly like the jnp path.
 
-    Returns (lam (b,), v (b, c), iters ()); λ is always a final fp32
-    Rayleigh quotient, regardless of the operand precision policy.
+    Request batching (DESIGN.md §7.6): slices (B, b, r, c) flattens into
+    one fused launch at grid (B·b, sweep, r_tile); the gated paths share
+    the per-request verdict/freeze driver (`_gated_loop`) with the jnp
+    solver, so iters comes back per request.
+
+    Returns (lam (..., b), v (..., b, c), iters with the request shape);
+    λ is always a final fp32 Rayleigh quotient, regardless of the
+    operand precision policy.
     """
-    from repro.core.power_iter import (_init_vectors, _maybe_pvary,
-                                       _psum_inner, _run_adaptive,
-                                       compute_dtype, convergence_gate)
+    from repro.core.power_iter import (_gated_loop, _init_vectors,
+                                       _maybe_pvary, _psum_inner,
+                                       _run_adaptive, compute_dtype)
 
     interpret = _interpret_default() if interpret is None else interpret
-    b, r, c = slices.shape
+    c = slices.shape[-1]
     s = slices.astype(compute_dtype(precision))
-    v0 = _maybe_pvary(_init_vectors(b, c, jnp.float32, c_valid), vary_axes)
+    v0 = _maybe_pvary(_init_vectors(slices.shape[:-2], c, jnp.float32,
+                                    c_valid), vary_axes)
 
     def _fp32_rayleigh(v):
-        tv = jnp.einsum("brc,bc->br", slices.astype(jnp.float32),
+        tv = jnp.einsum("...rc,...c->...r", slices.astype(jnp.float32),
                         _maybe_pvary(v, inner_axis))
         return _psum_inner(jnp.sum(tv * tv, axis=-1), inner_axis)
 
@@ -103,23 +119,16 @@ def power_iterate_matrix_free(slices: jax.Array, n_iters: int = 60,
                                    interpret=interpret)
         if precision != "fp32":
             lam = _fp32_rayleigh(v)
-        return lam, v, jnp.int32(n_iters)
+        return lam, v, jnp.full(slices.shape[:-3], n_iters, jnp.int32)
 
     k = max(1, min(check_every, n_iters))
 
-    def cond(state):
-        _, it, done = state
-        return (~done) & (it < n_iters)
+    def chunk_fn(v):
+        return _pi.power_iterate_chunk(s, v, k, block_r=block_r,
+                                       interpret=interpret)
 
-    def body(state):
-        v, it, _ = state
-        v, lam, resid = _pi.power_iterate_chunk(s, v, k, block_r=block_r,
-                                                interpret=interpret)
-        return v, it + k, convergence_gate(lam, resid, tol, axis_name)
-
-    init = (v0, _maybe_pvary(jnp.int32(0), vary_axes),
-            _maybe_pvary(jnp.bool_(False), vary_axes))
-    v, iters, _ = jax.lax.while_loop(cond, body, init)
+    v, iters = _gated_loop(chunk_fn, v0, n_iters, k, tol, axis_name,
+                           vary_axes)
     return _fp32_rayleigh(v), v, iters
 
 

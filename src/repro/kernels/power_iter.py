@@ -98,6 +98,19 @@ def _power_kernel(t_ref, v0_ref, lam_ref, v_ref, resid_ref, w_ref, *,
 
 def _call(slices, v0, n_upd, *, lambda_pass, emit_gate, block_r, interpret,
           normalize=True):
+    # Request-batched inputs (B, b, r, c) flatten into the grid's slice
+    # dim — one launch at (B·b, sweep, r_tile), the fused form the
+    # serving path relies on (DESIGN.md §7.6) — and unflatten on exit.
+    lead = slices.shape[:-3]
+    if lead:
+        bb = lead + (slices.shape[-3],)
+        lam, v, resid, w = _call(
+            slices.reshape((-1,) + slices.shape[-2:]),
+            v0.reshape((-1, v0.shape[-1])), n_upd,
+            lambda_pass=lambda_pass, emit_gate=emit_gate, block_r=block_r,
+            interpret=interpret, normalize=normalize)
+        return (lam.reshape(bb), v.reshape(bb + v.shape[1:]),
+                resid.reshape(bb), w.reshape(bb + w.shape[1:]))
     b, r, c = slices.shape
     block_r = min(block_r, r)
     rp = pl.cdiv(r, block_r) * block_r
@@ -136,7 +149,8 @@ def _call(slices, v0, n_upd, *, lambda_pass, emit_gate, block_r, interpret,
                    static_argnames=("n_iters", "block_r", "interpret"))
 def power_iterate(slices: jax.Array, v0: jax.Array, n_iters: int, *,
                   block_r: int = 256, interpret: bool = False):
-    """Fused power iteration.  slices: (b, r, c), v0: (b, c).
+    """Fused power iteration.  slices: (b, r, c), v0: (b, c); a leading
+    request dim (B, b, …) flattens into the grid and unflattens on exit.
 
     Returns (lam (b,) fp32, v (b, c) fp32) — bit-comparable to
     ref.power_iterate up to fp32 reduction order.  λ is computed with the

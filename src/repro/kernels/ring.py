@@ -26,18 +26,23 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _abs_rowsum_kernel(a_ref, b_ref, acc_ref, o_ref):
-    a = a_ref[...]  # (block_i, c), native operand dtype (fp32 or bf16)
-    b = b_ref[...]  # (block_j, c)
+def _abs_rowsum_kernel(a_ref, b_ref, acc_ref, o_ref, *, j_dim: int):
+    """Shared body; j_dim names the grid position of the innermost
+    (accumulation) axis — 1 unbatched, 2 when a leading request axis is
+    prepended to the grid (DESIGN.md §7.6).  Refs arrive with their
+    leading block dims collapsed to the (block_i|block_j, c) tiles."""
+    a = a_ref[...].reshape(a_ref.shape[-2:])  # (block_i, c), native dtype
+    b = b_ref[...].reshape(b_ref.shape[-2:])  # (block_j, c)
     s = jax.lax.dot_general(a, b, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)
     partial = jnp.sum(jnp.abs(s), axis=1)[:, None]
+    partial = partial.reshape(o_ref.shape)
 
-    @pl.when(pl.program_id(1) == 0)
+    @pl.when(pl.program_id(j_dim) == 0)
     def _init():
         o_ref[...] = acc_ref[...] + partial
 
-    @pl.when(pl.program_id(1) > 0)
+    @pl.when(pl.program_id(j_dim) > 0)
     def _accumulate():
         o_ref[...] += partial
 
@@ -52,33 +57,53 @@ def abs_rowsum(a: jax.Array, b: jax.Array,
     a: (bl, c) — this device's rows of V (fixed across ring steps).
     b: (bc, c) — the circulating chunk of V.
     acc: (bl,) fp32 running sums, or None for zeros (first step).
+    Request-batched form (DESIGN.md §7.6): a (B, bl, c), b (B, bc, c),
+    acc (B, bl) — requests never mix (block-diagonal in the similarity
+    tile), so the grid grows a leading B axis instead of flattening.
     Zero-padding rows of `b` contribute |0| = 0, which is exactly how the
     parallel caller pads the slice dimension to even shards.
     """
-    bl, c = a.shape
-    bc, _ = b.shape
-    acc = jnp.zeros((bl,), jnp.float32) if acc is None \
+    batched = a.ndim == 3
+    nb = a.shape[0] if batched else 1
+    bl, c = a.shape[-2:]
+    bc = b.shape[-2]
+    acc_shape = (nb, bl) if batched else (bl,)
+    acc = jnp.zeros(acc_shape, jnp.float32) if acc is None \
         else acc.astype(jnp.float32)
     block_i = min(block_i, bl)
     block_j = min(block_j, bc)
     ip = pl.cdiv(bl, block_i) * block_i
     jp = pl.cdiv(bc, block_j) * block_j
+    zero2 = ((0, 0),) if batched else ()
     if ip != bl:
-        a = jnp.pad(a, ((0, ip - bl), (0, 0)))
-        acc = jnp.pad(acc, (0, ip - bl))
+        a = jnp.pad(a, zero2 + ((0, ip - bl), (0, 0)))
+        acc = jnp.pad(acc, zero2 + ((0, ip - bl),))
     if jp != bc:
-        b = jnp.pad(b, ((0, jp - bc), (0, 0)))
+        b = jnp.pad(b, zero2 + ((0, jp - bc), (0, 0)))
 
-    out = pl.pallas_call(
-        _abs_rowsum_kernel,
-        grid=(ip // block_i, jp // block_j),
-        in_specs=[
+    if batched:
+        grid = (nb, ip // block_i, jp // block_j)
+        in_specs = [
+            pl.BlockSpec((1, block_i, c), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, block_j, c), lambda g, i, j: (g, j, 0)),
+            pl.BlockSpec((1, block_i, 1), lambda g, i, j: (g, i, 0)),
+        ]
+        out_specs = pl.BlockSpec((1, block_i, 1), lambda g, i, j: (g, i, 0))
+        out_shape = jax.ShapeDtypeStruct((nb, ip, 1), jnp.float32)
+        kernel = functools.partial(_abs_rowsum_kernel, j_dim=2)
+    else:
+        grid = (ip // block_i, jp // block_j)
+        in_specs = [
             pl.BlockSpec((block_i, c), lambda i, j: (i, 0)),
             pl.BlockSpec((block_j, c), lambda i, j: (j, 0)),
             pl.BlockSpec((block_i, 1), lambda i, j: (i, 0)),
-        ],
-        out_specs=pl.BlockSpec((block_i, 1), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((ip, 1), jnp.float32),
-        interpret=interpret,
-    )(a, b, acc[:, None])
-    return out[:bl, 0]
+        ]
+        out_specs = pl.BlockSpec((block_i, 1), lambda i, j: (i, 0))
+        out_shape = jax.ShapeDtypeStruct((ip, 1), jnp.float32)
+        kernel = functools.partial(_abs_rowsum_kernel, j_dim=1)
+
+    out = pl.pallas_call(
+        kernel, grid=grid, in_specs=in_specs, out_specs=out_specs,
+        out_shape=out_shape, interpret=interpret,
+    )(a, b, acc[..., None])
+    return out[..., :bl, 0]

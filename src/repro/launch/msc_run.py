@@ -24,6 +24,41 @@ from repro.core import (MSCConfig, PlantedSpec, make_planted_tensor,
 from repro.core.parallel import build_msc_parallel, make_msc_mesh
 
 
+def _run_batched(mesh, cfg, spec, args) -> int:
+    """--batch B: serve B independent planted requests in one dispatch
+    (MSCServeEngine, DESIGN.md §7.6) and report per-request quality plus
+    batched-vs-looped warm throughput."""
+    import numpy as np
+
+    from repro.serving import MSCServeEngine
+
+    tensors = [make_planted_tensor(jax.random.PRNGKey(args.seed + i), spec)
+               for i in range(args.batch)]
+    true_masks = planted_masks(spec)
+    engine = MSCServeEngine(mesh, cfg, max_batch=args.batch)
+    t0 = time.time()
+    results = engine.run(tensors)
+    cold = time.time() - t0
+    t0 = time.time()
+    engine.run(tensors)
+    warm = time.time() - t0
+    recs = [float(recovery_rate(true_masks, [r[j].mask for j in range(3)]))
+            for r in results]
+    sweeps = [[int(r[j].power_iters_run) for j in range(3)] for r in results]
+    for i, (rec, sw) in enumerate(zip(recs, sweeps)):
+        print(f"  req {i}: rec={rec:.3f} sweeps={sw}")
+    loop = MSCServeEngine(mesh, cfg, max_batch=1)
+    loop.run(tensors)
+    t0 = time.time()
+    loop.run(tensors)
+    loop_warm = time.time() - t0
+    print(f"mean rec={np.mean(recs):.3f} B={args.batch} "
+          f"cold={cold:.2f}s warm={warm:.2f}s "
+          f"looped-warm={loop_warm:.2f}s speedup={loop_warm / warm:.2f}x "
+          f"({engine.stats.compiles} executables compiled)")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--m", type=int, default=60, help="cube tensor size")
@@ -59,6 +94,11 @@ def main(argv=None) -> int:
                          "matrix-free, beyond-paper)")
     ap.add_argument("--kernels", action="store_true",
                     help="route hot spots through the Pallas kernels")
+    ap.add_argument("--batch", type=int, default=0,
+                    help="serve this many independent planted requests "
+                         "through MSCServeEngine in one batched dispatch "
+                         "instead of one tensor (DESIGN.md §7.6); "
+                         "parallel schedules only")
     ap.add_argument("--repeats", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -80,12 +120,17 @@ def main(argv=None) -> int:
           f"epilogue={args.epilogue} devices={len(jax.devices())}")
 
     if args.schedule == "sequential":
+        if args.batch:
+            raise SystemExit("--batch needs a parallel schedule (the "
+                             "serving engine compiles the flat schedule)")
         run = lambda t: msc_sequential(t, cfg)  # noqa: E731
     else:
         shape = (tuple(int(s) for s in args.mesh_shape.split(","))
                  if args.mesh_shape else None)
         mesh = make_msc_mesh(args.schedule, shape=shape)
         print(f"mesh: {dict(mesh.shape)}")
+        if args.batch:
+            return _run_batched(mesh, cfg, spec, args)
         kw = ({"relayout": args.relayout} if args.schedule == "flat" else {})
         run = build_msc_parallel(mesh, cfg, schedule=args.schedule, **kw)
 

@@ -1,0 +1,196 @@
+"""Batched multi-tensor MSC serving (DESIGN.md §7.6).
+
+The paper parallelizes ONE decomposition, but the workloads built on
+MSC — DBSCAN-MSC hyperparameter sweeps, MCAM affinity construction —
+issue many independent requests.  Dispatching them one jit-trace at a
+time pays Python dispatch, collective rendezvous, and (on a cold shape)
+trace + compile per request.  `MSCServeEngine` amortizes all of it:
+
+  * **shape buckets** — request dims round up to `bucket_quantum`
+    multiples, so a stream of nearby shapes shares a handful of padded
+    shapes.  Padding rides ModeSchedule's existing validity-mask
+    contract: per-request slice masks (`dims` is a *traced* argument of
+    the batched executable) plus per-request column bounds masking the
+    eigensolver init, so bucket-padded results stay bit-identical to
+    unpadded ones.
+  * **compiled-executable cache** — one AOT `.lower().compile()` per
+    (bucket shape, microbatch size, dtype, mesh, cfg); a warm bucket
+    performs ZERO retraces/recompiles by construction (the executable is
+    invoked directly, never re-traced; tests/test_msc_serving.py pins
+    this with jax.monitoring compile-event counters).
+  * **microbatch assembly** — requests in a bucket are packed into
+    fixed-size microbatches of `max_batch` (short batches filled with
+    (1,1,1) zero requests, which converge at the first gate probe and
+    never delay the batch-max lockstep exit), so the steady state is one
+    dispatch per `max_batch` requests with no shape diversity at all.
+
+Results come back as host-side (numpy) per-request MSCResults — trimmed
+to true sizes, per-request `power_iters_run` intact — keeping the hot
+path free of per-request jax dispatches (slicing device arrays would
+re-trace tiny gather programs per shape).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import defaultdict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core.parallel import build_msc_batched
+from repro.core.schedule import pad_to
+from repro.core.types import ModeResult, MSCConfig, MSCResult
+
+# filler requests must have ≥1 valid slice/column per mode: an all-zero
+# (1,1,1) request has zero residual (gate fires at the first probe) and
+# a nonempty masked init (no 0/0), so it never delays the lockstep exit.
+_FILLER_DIMS = (1, 1, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeStats:
+    """Counters for the serving hot path (cumulative per engine)."""
+
+    requests: int = 0
+    dispatches: int = 0
+    compiles: int = 0
+    cache_hits: int = 0
+    filler_slots: int = 0
+
+    def delta(self, other: "ServeStats") -> "ServeStats":
+        return ServeStats(*(a - b for a, b in
+                            zip(dataclasses.astuple(self),
+                                dataclasses.astuple(other))))
+
+
+class MSCServeEngine:
+    """Batched MSC serving over one mesh + config.
+
+    Parameters:
+      mesh: the MSC device mesh (flat schedule; 1-D ("slice",) or 2-D
+        ("slice", "inner") — see launch/mesh.py:make_msc_mesh).
+      cfg: MSCConfig shared by every request (part of the cache key —
+        run one engine per config).
+      max_batch: microbatch size B; every dispatch carries exactly B
+        request slots (filled with inert (1,1,1) requests when the
+        stream leaves a remainder), so each bucket compiles exactly one
+        executable.
+      bucket_quantum: dims round up to multiples of this (and of the
+        mesh shard counts, so in-bucket padding already satisfies the
+        schedule's even-shard contract).
+      dtype: request tensor dtype at the engine boundary (the precision
+        *policy* stays cfg.precision).
+
+    `run(tensors)` is the whole API: a list of third-order tensors in,
+    a list of per-request MSCResults (host-side numpy, true sizes) out,
+    in order.
+    """
+
+    def __init__(self, mesh: Mesh, cfg: MSCConfig, *, max_batch: int = 8,
+                 bucket_quantum: int = 8, dtype=jnp.float32,
+                 axis_name=None, inner_axis: Optional[str] = None):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.mesh = mesh
+        self.cfg = cfg
+        self.max_batch = int(max_batch)
+        self.dtype = jnp.dtype(dtype)
+        self._runner = build_msc_batched(mesh, cfg, axis_name=axis_name,
+                                         inner_axis=inner_axis)
+        # dims round up to shard multiples too, so bucket padding and
+        # schedule padding coincide (no second pad inside the jit).  Each
+        # dim is a slice dim (multiple of p) in one mode and a row dim
+        # (multiple of q) in another, so lcm(p, q) suffices — NOT p·q.
+        q = mesh.shape.get(inner_axis or "inner", 1)
+        p = int(np.prod([s for a, s in mesh.shape.items()
+                         if a != (inner_axis or "inner")]))
+        self._quantum = pad_to(int(bucket_quantum), math.lcm(p, q))
+        self._cache: Dict[Tuple, jax.stages.Compiled] = {}
+        self._stats = ServeStats()
+
+    # ---- bucketing ---------------------------------------------------
+    def bucket_of(self, shape: Sequence[int]) -> Tuple[int, int, int]:
+        """Bucket = each dim rounded up to the engine quantum."""
+        if len(shape) != 3 or any(s < 1 for s in shape):
+            raise ValueError(f"MSC serves third-order tensors, got {shape}")
+        return tuple(pad_to(int(s), self._quantum) for s in shape)
+
+    # ---- executable cache --------------------------------------------
+    def _executable(self, bucket: Tuple[int, int, int]):
+        """AOT-compiled batched pipeline for one bucket (cache hit on a
+        warm bucket — no trace, no compile)."""
+        key = (bucket, self.max_batch, str(self.dtype),
+               tuple(self.mesh.shape.items()), self.cfg)
+        compiled = self._cache.get(key)
+        if compiled is None:
+            lowered = self._runner.lower(
+                jax.ShapeDtypeStruct((self.max_batch,) + bucket, self.dtype),
+                jax.ShapeDtypeStruct((self.max_batch, 3), jnp.int32))
+            compiled = lowered.compile()
+            self._cache[key] = compiled
+            self._stats = dataclasses.replace(
+                self._stats, compiles=self._stats.compiles + 1)
+        else:
+            self._stats = dataclasses.replace(
+                self._stats, cache_hits=self._stats.cache_hits + 1)
+        return compiled
+
+    @property
+    def stats(self) -> ServeStats:
+        return self._stats
+
+    # ---- the hot path ------------------------------------------------
+    def run(self, tensors: Sequence) -> List[MSCResult]:
+        """Serve a batch of independent MSC requests.
+
+        Groups requests by bucket, packs each group into max_batch-sized
+        microbatches (padding the remainder with inert filler), and
+        dispatches one cached executable per microbatch.  Returns one
+        trimmed host-side MSCResult per input tensor, in input order.
+        """
+        results: List[Optional[MSCResult]] = [None] * len(tensors)
+        groups: Dict[Tuple[int, int, int], List[int]] = defaultdict(list)
+        for i, t in enumerate(tensors):
+            groups[self.bucket_of(np.shape(t))].append(i)
+
+        for bucket, idxs in groups.items():
+            for start in range(0, len(idxs), self.max_batch):
+                chunk = idxs[start:start + self.max_batch]
+                self._dispatch(bucket, chunk, tensors, results)
+        return results  # type: ignore[return-value]
+
+    def _dispatch(self, bucket, chunk, tensors, results):
+        b = self.max_batch
+        batch = np.zeros((b,) + bucket, self.dtype)
+        dims = np.tile(np.int32(_FILLER_DIMS), (b, 1))
+        for s, i in enumerate(chunk):
+            t = np.asarray(tensors[i], self.dtype)
+            batch[s, :t.shape[0], :t.shape[1], :t.shape[2]] = t
+            dims[s] = t.shape
+        compiled = self._executable(bucket)
+        out = compiled(batch, dims)
+        self._stats = dataclasses.replace(
+            self._stats,
+            requests=self._stats.requests + len(chunk),
+            dispatches=self._stats.dispatches + 1,
+            filler_slots=self._stats.filler_slots + b - len(chunk))
+        host = jax.tree.map(np.asarray, out)
+        for s, i in enumerate(chunk):
+            results[i] = _trim_request(host, s, tuple(int(x)
+                                                      for x in dims[s]))
+
+
+def _trim_request(host: MSCResult, s: int, shape) -> MSCResult:
+    """Slice request s's true-size results out of the bucket-padded
+    batched pytree (all host-side numpy — no jax dispatch)."""
+    modes = []
+    for j, res in enumerate(host.modes):
+        m = shape[j]
+        modes.append(ModeResult(
+            mask=res.mask[s, :m], d=res.d[s, :m], lambdas=res.lambdas[s, :m],
+            n_iters=res.n_iters[s], power_iters_run=res.power_iters_run[s]))
+    return MSCResult(modes=tuple(modes))

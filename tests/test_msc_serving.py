@@ -1,0 +1,289 @@
+"""Batched multi-tensor MSC serving (DESIGN.md §7.6).
+
+Coverage layers:
+  * batched-vs-sequential-oracle parity through `MSCServeEngine` for
+    B ∈ {1, 2, 8} with mixed bucket shapes (cube + non-cube requests,
+    filler slots), both epilogues, both precisions, and both CI mesh
+    factorizations (8,1)/(4,2) — subprocess shard_map tests, like
+    tests/test_msc_parallel.py.  Each request's cluster mask must match
+    the unpadded sequential oracle exactly and its
+    `ModeResult.power_iters_run` must equal the oracle's (per-request
+    gating: NOT the batch max);
+  * the executable-cache contract: a second dispatch at a warm bucket
+    performs zero traces/compiles, pinned both by the engine's own
+    counters and by jax.monitoring compile-event listeners;
+  * the request-batched kernels (fused (B·b, sweep, r) power iteration,
+    (B, i, j) abs_rowsum grid) against their unbatched selves;
+  * engine unit behavior (bucketing, validation, stats) and the
+    roofline serving_model.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline import serving_model
+
+# Mixed bucket shapes: two cubes sharing a bucket with a non-cube, one
+# lone big cube, and a gamma spread so requests in the SAME microbatch
+# realize different sweep counts (per-request gate + counter).
+SERVE_PARITY = r"""
+import numpy as np, jax
+from repro.core import (MSCConfig, PlantedSpec, make_planted_tensor,
+                        msc_sequential, make_msc_mesh)
+from repro.serving import MSCServeEngine
+p, q, B = {p}, {q}, {B}
+mesh = make_msc_mesh("flat", devices=jax.devices()[:p * q], shape=(p, q))
+specs = [PlantedSpec.paper(21, 70.0),
+         PlantedSpec(shape=(18, 23, 15), cluster_sizes=(2, 3, 2),
+                     gamma=60.0),
+         PlantedSpec.paper(23, 40.0),
+         PlantedSpec.paper(33, 70.0)]
+tensors = [make_planted_tensor(jax.random.PRNGKey(i), s)
+           for i, s in enumerate(specs)]
+for precision, epilogue, kernels, rtol in {combos}:
+    cfg = MSCConfig(epsilon=3e-4, precision=precision, epilogue=epilogue,
+                    use_kernels=kernels)
+    eng = MSCServeEngine(mesh, cfg, max_batch=B)
+    outs = eng.run(tensors)
+    assert eng.stats.requests == len(tensors), eng.stats
+    for t, res in zip(tensors, outs):
+        ref = msc_sequential(t, cfg.with_(use_kernels=False))
+        for j in range(3):
+            assert res[j].mask.shape == (t.shape[j],), res[j].mask.shape
+            assert (res[j].mask == np.asarray(ref[j].mask)).all(), \
+                (precision, epilogue, t.shape, j)
+            np.testing.assert_allclose(res[j].d, np.asarray(ref[j].d),
+                                       rtol=rtol, atol=rtol)
+            assert int(res[j].power_iters_run) == \
+                int(ref[j].power_iters_run), (t.shape, j)
+print("OK")
+"""
+
+ALL_COMBOS = (
+    '(("fp32", "allgather", False, 3e-5), ("fp32", "ring", False, 3e-5), '
+    '("bf16_fp32", "allgather", False, 3e-2), '
+    '("bf16_fp32", "ring", False, 3e-2))')
+KERNEL_COMBOS = '(("fp32", "ring", True, 3e-5),)'
+
+
+@pytest.mark.parametrize("p,q,B", [(8, 1, 2), (4, 2, 8), (8, 1, 1)])
+def test_serving_matches_sequential(subproc, p, q, B):
+    out = subproc(SERVE_PARITY.format(p=p, q=q, B=B, combos=ALL_COMBOS),
+                  p * q, timeout=900)
+    assert "OK" in out
+
+
+def test_serving_with_kernels(subproc):
+    out = subproc(SERVE_PARITY.format(p=2, q=2, B=2, combos=KERNEL_COMBOS),
+                  4, timeout=900)
+    assert "OK" in out
+
+
+# ------------------------------------------ executable-cache contract --
+
+def test_warm_bucket_performs_zero_recompiles():
+    """Second dispatch at a warm bucket: no traces, no compiles —
+    verified by jax.monitoring compile/trace event counters AND the
+    engine's executable-cache stats."""
+    import jax.monitoring as mon
+
+    from repro.core import (MSCConfig, PlantedSpec, make_planted_tensor,
+                            make_msc_mesh)
+    from repro.serving import MSCServeEngine
+
+    mesh = make_msc_mesh("flat", devices=jax.devices()[:1])
+    eng = MSCServeEngine(mesh, MSCConfig(epsilon=3e-4), max_batch=2)
+    t_cold = make_planted_tensor(jax.random.PRNGKey(0),
+                                 PlantedSpec.paper(14, 70.0))
+    t_warm = [make_planted_tensor(jax.random.PRNGKey(s),
+                                  PlantedSpec.paper(12 + s, 70.0))
+              for s in range(1, 4)]  # same (16,16,16) bucket, new dims
+
+    eng.run([t_cold])
+    assert eng.stats.compiles == 1
+
+    events = []
+    mon.register_event_duration_secs_listener(
+        lambda ev, dur, **kw: events.append(ev)
+        if "compile" in ev or "trace" in ev else None)
+    try:
+        before = eng.stats
+        outs = eng.run(t_warm)
+        delta = eng.stats.delta(before)
+    finally:
+        mon.clear_event_listeners()
+
+    assert events == [], f"warm dispatch traced/compiled: {events}"
+    assert delta.compiles == 0 and delta.cache_hits == 2, delta
+    assert delta.dispatches == 2 and delta.filler_slots == 1, delta
+    assert all(o is not None for o in outs)
+
+
+def test_distinct_buckets_compile_once_each():
+    from repro.core import (MSCConfig, PlantedSpec, make_planted_tensor,
+                            make_msc_mesh)
+    from repro.serving import MSCServeEngine
+
+    mesh = make_msc_mesh("flat", devices=jax.devices()[:1])
+    eng = MSCServeEngine(mesh, MSCConfig(epsilon=3e-4), max_batch=2,
+                         bucket_quantum=8)
+    ts = [make_planted_tensor(jax.random.PRNGKey(i),
+                              PlantedSpec.paper(m, 70.0))
+          for i, m in enumerate((10, 14, 18, 22))]
+    eng.run(ts)
+    assert eng.stats.compiles == 2          # buckets 16^3 and 24^3
+    eng.run(ts)
+    assert eng.stats.compiles == 2          # both warm now
+
+
+# ------------------------------------------------- engine unit layer --
+
+class TestEngineBasics:
+    def _engine(self, **kw):
+        from repro.core import MSCConfig, make_msc_mesh
+        from repro.serving import MSCServeEngine
+
+        mesh = make_msc_mesh("flat", devices=jax.devices()[:1])
+        return MSCServeEngine(mesh, MSCConfig(epsilon=3e-4), **kw)
+
+    def test_bucket_rounds_up_per_dim(self):
+        eng = self._engine(bucket_quantum=8)
+        assert eng.bucket_of((14, 23, 8)) == (16, 24, 8)
+
+    def test_bucket_quantum_rounds_to_shards(self):
+        # quantum rounds up to the mesh shard count so bucket padding
+        # already satisfies the even-shard contract
+        eng = self._engine(bucket_quantum=3)
+        assert eng._quantum == 3
+        assert eng.bucket_of((4, 4, 4)) == (6, 6, 6)
+
+    def test_rejects_non_third_order(self):
+        eng = self._engine()
+        with pytest.raises(ValueError, match="third-order"):
+            eng.bucket_of((4, 4))
+
+    def test_rejects_bad_max_batch(self):
+        with pytest.raises(ValueError, match="max_batch"):
+            self._engine(max_batch=0)
+
+    def test_results_in_input_order_across_buckets(self):
+        from repro.core import PlantedSpec, make_planted_tensor
+
+        eng = self._engine(max_batch=2)
+        sizes = (14, 33, 15, 21)
+        ts = [make_planted_tensor(jax.random.PRNGKey(i),
+                                  PlantedSpec.paper(m, 70.0))
+              for i, m in enumerate(sizes)]
+        outs = eng.run(ts)
+        for m, res in zip(sizes, outs):
+            assert res[0].mask.shape == (m,)
+
+
+# ------------------------------------- request-batched kernel parity --
+
+class TestBatchedKernels:
+    def test_abs_rowsum_batched_matches_per_request(self):
+        from repro.kernels import ops as kops
+
+        k = jax.random.PRNGKey(0)
+        a = jax.random.normal(k, (3, 13, 7), jnp.float32)
+        b = jax.random.normal(jax.random.fold_in(k, 1), (3, 9, 7))
+        acc = jax.random.uniform(jax.random.fold_in(k, 2), (3, 13))
+        got = kops.abs_rowsum(a, b, acc)
+        assert got.shape == (3, 13)
+        for i in range(3):
+            want = kops.abs_rowsum(a[i], b[i], acc[i])
+            np.testing.assert_array_equal(np.asarray(got[i]),
+                                          np.asarray(want))
+
+    def test_power_iterate_batched_matches_per_request(self):
+        from repro.kernels import ops as kops
+
+        k = jax.random.PRNGKey(3)
+        slices = jax.random.normal(k, (2, 4, 11, 6), jnp.float32)
+        lam, v, iters = kops.power_iterate_matrix_free(
+            slices, n_iters=12, tol=1e-2, check_every=3)
+        assert lam.shape == (2, 4) and v.shape == (2, 4, 6)
+        assert iters.shape == (2,)
+        for i in range(2):
+            lam1, v1, it1 = kops.power_iterate_matrix_free(
+                slices[i], n_iters=12, tol=1e-2, check_every=3)
+            np.testing.assert_array_equal(np.asarray(lam[i]),
+                                          np.asarray(lam1))
+            np.testing.assert_array_equal(np.asarray(v[i]), np.asarray(v1))
+            assert int(iters[i]) == int(it1)
+
+    def test_batched_gram_matches_per_request(self):
+        from repro.kernels import ops as kops
+
+        slices = jax.random.normal(jax.random.PRNGKey(5), (2, 3, 8, 5))
+        got = kops.batched_gram(slices)
+        assert got.shape == (2, 3, 5, 5)
+        np.testing.assert_array_equal(np.asarray(got[1]),
+                                      np.asarray(kops.batched_gram(slices[1])))
+
+
+# ------------------------------------------------ roofline model -----
+
+class TestServingModel:
+    def test_speedup_approaches_b_when_dispatch_bound(self):
+        r = serving_model((24, 24, 24), B=8, p=8, dispatch_s=1.0)
+        assert r["speedup"] == pytest.approx(8.0, rel=1e-3)
+
+    def test_speedup_is_one_without_overhead(self):
+        r = serving_model((24, 24, 24), B=8, p=8, dispatch_s=0.0)
+        assert r["speedup"] == pytest.approx(1.0)
+
+    def test_latency_identity(self):
+        r = serving_model((45, 45, 45), B=4, p=4, q=2, dispatch_s=1e-3)
+        want_loop = 4 * (1e-3 + r["work_per_request_s"])
+        assert r["looped_s"] == pytest.approx(want_loop)
+        assert r["batched_s"] == pytest.approx(
+            1e-3 + 4 * r["work_per_request_s"])
+
+    def test_compile_amortizes_over_batch(self):
+        r = serving_model((24, 24, 24), B=8, p=8, compile_s=2.0)
+        assert r["amortized_compile_s"] == pytest.approx(0.25)
+        assert r["cold_batched_s"] == pytest.approx(2.0 + r["batched_s"])
+
+    def test_link_bytes_scale_with_q(self):
+        r1 = serving_model((48, 48, 48), B=2, p=4, q=1)
+        r2 = serving_model((48, 48, 48), B=2, p=4, q=2)
+        assert r2["link_bytes_per_request"] > r1["link_bytes_per_request"]
+        assert r2["hbm_bytes_per_request"] < r1["hbm_bytes_per_request"]
+
+
+# ------------------------------------------- in-process CI matrix ----
+
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs >= 8 devices (CI multi-device job)")
+def test_serving_in_process():
+    """Real multi-device serving path, no subprocess; the CI job matrix
+    sets MSC_MESH_SHAPE to each factorization of its 8 forced host
+    devices (8x1, 4x2)."""
+    from repro.core import (MSCConfig, PlantedSpec, make_planted_tensor,
+                            msc_sequential, make_msc_mesh)
+    from repro.serving import MSCServeEngine
+
+    p, q = (int(x) for x in
+            os.environ.get("MSC_MESH_SHAPE", "4x2").split("x"))
+    mesh = make_msc_mesh("flat", devices=jax.devices()[:p * q], shape=(p, q))
+    cfg = MSCConfig(epsilon=3e-4, epilogue="ring")
+    eng = MSCServeEngine(mesh, cfg, max_batch=4)
+    tensors = [make_planted_tensor(jax.random.PRNGKey(i),
+                                   PlantedSpec.paper(m, 70.0))
+               for i, m in enumerate((21, 23, 17, 24))]
+    outs = eng.run(tensors)
+    before = eng.stats
+    eng.run(tensors)
+    assert eng.stats.delta(before).compiles == 0
+    for t, res in zip(tensors, outs):
+        ref = msc_sequential(t, cfg)
+        for j in range(3):
+            assert (res[j].mask == np.asarray(ref[j].mask)).all()
+            np.testing.assert_allclose(res[j].d, np.asarray(ref[j].d),
+                                       rtol=3e-5, atol=3e-5)
+            assert int(res[j].power_iters_run) == int(ref[j].power_iters_run)
