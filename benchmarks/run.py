@@ -9,6 +9,7 @@
   ring_epilogue       (new) ring vs allgather epilogue traffic (DESIGN.md §7.4)
   inner_shard         (new) 2-D (slice,inner) memory/latency (DESIGN.md §7.5)
   msc_serving         (new) batched vs looped request serving (DESIGN.md §7.6)
+  msc_continuous      (new) continuous vs static batching (DESIGN.md §7.7)
 
 Usage:
   PYTHONPATH=src python -m benchmarks.run            # CPU-feasible sizes
@@ -29,9 +30,9 @@ from .common import print_rows, save_rows
 
 ALL = ("fig4_quality", "fig5_strong_scaling", "fig6_data_scaling",
        "fig8_comm", "kernel_bench", "power_iter_bench", "ring_epilogue",
-       "inner_shard", "msc_serving")
+       "inner_shard", "msc_serving", "msc_continuous")
 QUICK = ("power_iter_bench", "kernel_bench", "ring_epilogue", "inner_shard",
-         "msc_serving")
+         "msc_serving", "msc_continuous")
 
 
 def main(argv=None) -> int:

@@ -7,6 +7,13 @@ every microbatch through ONE cached executable — so after the first
 request of each bucket, serving performs zero retraces and zero
 recompiles (DESIGN.md §7.6).
 
+The second half streams the same buckets through the continuous-
+batching `MSCContinuousEngine` (DESIGN.md §7.7) under Poisson arrivals
+with mixed convergence difficulty — a few near-noise slow convergers
+salted into fast high-γ requests — and prints the decode loop's
+occupancy, eviction, and queue-wait counters from the new ServeStats
+fields.
+
   PYTHONPATH=src python examples/msc_serve.py
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       PYTHONPATH=src python examples/msc_serve.py --mesh-shape 4,2
@@ -18,13 +25,17 @@ import jax
 
 from repro.core import (MSCConfig, PlantedSpec, make_planted_tensor,
                         make_msc_mesh, planted_masks, recovery_rate)
-from repro.serving import MSCServeEngine
+from repro.launch.msc_serve import simulate_continuous
+from repro.serving import MSCContinuousEngine, MSCServeEngine
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--mesh-shape", default=None)
+    ap.add_argument("--arrival-rate", type=float, default=1.5,
+                    help="mean Poisson arrivals per scheduler tick in "
+                         "the continuous-stream half")
     args = ap.parse_args()
 
     # a stream spanning three buckets (quantum 8 → 16³ / 24³ / 40³),
@@ -74,6 +85,39 @@ def main():
                                   [res[j].mask for j in range(3)]))
         print(f"  {str(spec.shape):14s} rec={rec:.3f} "
               f"sweeps={[int(res[j].power_iters_run) for j in range(3)]}")
+
+    # ---- continuous decode loop under Poisson arrivals ----------------
+    # mixed difficulty: every 4th request is near-noise (γ=2, ~10-20x
+    # the sweeps), the rest are well-separated — the skewed mix where
+    # static microbatching parks 7 slots on the slowest request
+    stream_specs = [PlantedSpec.paper((14, 21, 16, 24)[i % 4],
+                                      2.0 if i % 4 == 0 else 120.0)
+                    for i in range(12)]
+    stream = [make_planted_tensor(jax.random.PRNGKey(100 + i), s)
+              for i, s in enumerate(stream_specs)]
+    ceng = MSCContinuousEngine(mesh, cfg.with_(power_tol=1e-2),
+                               slots=args.max_batch)
+    probes = {}
+    for t in stream:
+        probes.setdefault(ceng.bucket_of(t.shape), t)
+    ceng.run(list(probes.values()))  # warm each bucket's two executables
+    base = ceng.stats
+    print(f"\ncontinuous stream: {len(stream)} requests, Poisson "
+          f"{args.arrival_rate}/tick, slots={args.max_batch}")
+    results, ticks, stream_s = simulate_continuous(
+        ceng, stream, arrival_rate=args.arrival_rate, seed=7)
+    s = ceng.stats.delta(base)  # the stream only, not the warmup
+    print(f"drained in {ticks} ticks / {stream_s:.2f}s "
+          f"({len(results) / stream_s:.1f} req/s)")
+    print(f"occupancy {s.occupancy:.2f} "
+          f"({s.busy_slot_chunks}/{s.slot_chunks} slot-chunks), "
+          f"{s.evictions} evictions over {s.refills} refills, "
+          f"mean queue wait "
+          f"{s.queue_wait_chunks / max(s.requests, 1):.2f} chunks")
+    for i, spec in enumerate(stream_specs):
+        sw = [int(results[i][j].power_iters_run) for j in range(3)]
+        kind = "slow" if i % 4 == 0 else "fast"
+        print(f"  req {i:2d} {str(spec.shape):14s} {kind} sweeps={sw}")
 
 
 if __name__ == "__main__":

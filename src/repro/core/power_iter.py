@@ -56,9 +56,20 @@ only): a converged request's iterate freezes and its counter stops,
 while the while_loop exits on the batch-max (all requests done) so the
 lockstep contract over the mesh is preserved.  `iters` comes back with
 the request shape — per-request realized sweeps, not the batch max.
+
+Resumable solves (DESIGN.md §7.7): the gated loop's carry is the
+explicit `SolveState` pytree (iterate, λ, residual, per-request counter
+and verdict) and one gate chunk is the explicit `step_chunk` transition
+on it.  The in-jit adaptive solvers run `step_chunk` under a
+lax.while_loop (`_gated_loop`); the continuous serving engine instead
+persists SolveState on device between dispatches and drives the SAME
+transition from the host — one chunk-step executable per call — so a
+request can be evicted/refilled at any chunk boundary with iterates
+bit-identical to the uninterrupted solve.
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 from typing import Optional
 
@@ -149,58 +160,109 @@ def convergence_gate(lam: jax.Array, resid: jax.Array, tol: float,
     return weighted <= tol * jnp.maximum(lam_max, 1e-30)
 
 
-def _gated_loop(chunk_fn, v, n_iters: int, k: int, tol: float,
-                axis_name, vary_axes):
-    """Lockstep-gated chunked while_loop shared by the jnp and kernel paths.
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SolveState:
+    """Resumable eigensolver carry (DESIGN.md §7.7).
+
+    One gate chunk (`step_chunk`) maps SolveState → SolveState; the
+    leading dims of every field are independent requests.  Fields:
+
+      v:     (..., b, c) current unit iterates (frozen once done)
+      lam:   (..., b)    Rayleigh quotients at the last gate probe
+      resid: (..., b)    ‖C v − λ v‖ at the last gate probe
+      iters: (...)       realized sweeps per request (int32)
+      done:  (...)       per-request gate verdict (bool)
+
+    A request stops advancing once `done` fires OR `iters` reaches the
+    cap (`exhausted`); its fields then pass through every further
+    step_chunk untouched, which is what makes host-driven chunking
+    bit-identical to the uninterrupted in-jit while_loop.
+    """
+
+    v: jax.Array
+    lam: jax.Array
+    resid: jax.Array
+    iters: jax.Array
+    done: jax.Array
+
+    def tree_flatten(self):
+        return (self.v, self.lam, self.resid, self.iters, self.done), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def exhausted(self, n_iters: int) -> jax.Array:
+        """Per-request 'will never advance again' — converged or capped."""
+        return self.done | (self.iters >= n_iters)
+
+
+def init_solve_state(v0: jax.Array, vary_axes=None) -> SolveState:
+    """Fresh SolveState from (pre-pvary'd) start vectors v0 (..., b, c)."""
+    gshape, b = v0.shape[:-2], v0.shape[-2]
+
+    def mk(shape, dtype):
+        return _maybe_pvary(jnp.zeros(shape, dtype), vary_axes)
+
+    return SolveState(v=v0, lam=mk(gshape + (b,), jnp.float32),
+                      resid=mk(gshape + (b,), jnp.float32),
+                      iters=mk(gshape, jnp.int32), done=mk(gshape, bool))
+
+
+def step_chunk(chunk_fn, state: SolveState, *, k: int, n_iters: int,
+               tol: float, axis_name=None) -> SolveState:
+    """One gate chunk: advance every unfinished request by k sweeps.
 
     chunk_fn(v) -> (v_new, lam, resid): k sweeps from v with the gate
     probe measured at the final sweep; v is (..., b, c), lam/resid
-    (..., b).  Leading dims of v are independent requests: each gets its
-    own gate verdict, and once a request converges its iterate freezes
-    (the carried v keeps the converged state — bit-identical to running
-    that request alone) and its counter stops, while the loop itself
-    exits on the batch-max (all requests done) so every device still
+    (..., b).  Each request gets its own gate verdict; a finished
+    request's fields pass through untouched (the carried v keeps the
+    converged state — bit-identical to running that request alone) and
+    its counter stops.  The chunk body itself always computes on the
+    full batch (fixed shapes, lockstep collectives); `active` only
+    masks the state update.
+    """
+    active = ~state.done & (state.iters < n_iters)
+    v_new, lam, resid = chunk_fn(state.v)
+    fired = convergence_gate(lam, resid, tol, axis_name)
+    return SolveState(
+        v=jnp.where(active[..., None, None], v_new, state.v),
+        lam=jnp.where(active[..., None], lam, state.lam),
+        resid=jnp.where(active[..., None], resid, state.resid),
+        iters=jnp.where(active, state.iters + k, state.iters),
+        done=state.done | (active & fired))
+
+
+def _gated_loop(chunk_fn, v, n_iters: int, k: int, tol: float,
+                axis_name, vary_axes):
+    """Lockstep-gated chunked while_loop shared by the jnp and kernel
+    paths: `step_chunk` driven to quiescence in one jit.  The loop exits
+    on the batch-max (all requests done or capped) so every device still
     takes the same trip count.  Returns (v, iters) with iters shaped
     like the request dims (scalar for the unbatched solvers).
     """
-    gshape = v.shape[:-2]
-
     def cond(state):
-        _, _, it, done = state
-        return jnp.any(~done) & (it < n_iters)
+        return jnp.any(~state.exhausted(n_iters))
 
     def body(state):
-        v, iters, it, done = state
-        v_new, lam, resid = chunk_fn(v)
-        fired = convergence_gate(lam, resid, tol, axis_name)
-        v = jnp.where(done[..., None, None], v, v_new)
-        iters = jnp.where(done, iters, it + k)
-        return v, iters, it + k, done | fired
+        return step_chunk(chunk_fn, state, k=k, n_iters=n_iters, tol=tol,
+                          axis_name=axis_name)
 
-    init = (v,
-            _maybe_pvary(jnp.zeros(gshape, jnp.int32), vary_axes),
-            _maybe_pvary(jnp.int32(0), vary_axes),
-            _maybe_pvary(jnp.zeros(gshape, bool), vary_axes))
-    v, iters, _, _ = jax.lax.while_loop(cond, body, init)
-    return v, iters
+    state = jax.lax.while_loop(cond, body, init_solve_state(v, vary_axes))
+    return state.v, state.iters
 
 
-def _run_adaptive(matvec, v, n_iters: int, tol: float, check_every: int,
-                  axis_name, vary_axes):
-    """Shared driver: fixed fori_loop when tol<=0, gated while_loop else.
+def make_chunk_probe(matvec, k: int):
+    """chunk_fn(v) -> (v_new, lam, resid): k matvec sweeps with the gate
+    probe reusing the final sweep — the einsum-path gate-chunk body,
+    shared by the in-jit gated loop and the chunk-resumable serving path
+    (one definition ⇒ identical numerics between the two).
 
     matvec(v) must return the *unnormalized* image C v in fp32.
-    Returns (v, iters_run).  With tol>0 the cap rounds up to a multiple
-    of check_every (identical semantics to the chunked kernel path).
     """
     def step(_, v):
         return _normalize(matvec(v))
-
-    if tol <= 0.0:
-        v = jax.lax.fori_loop(0, n_iters, step, v)
-        return v, jnp.full(v.shape[:-2], n_iters, jnp.int32)
-
-    k = max(1, min(check_every, n_iters))
 
     def chunk_fn(v):
         v = jax.lax.fori_loop(0, k - 1, step, v)
@@ -211,7 +273,75 @@ def _run_adaptive(matvec, v, n_iters: int, tol: float, check_every: int,
         resid = jnp.linalg.norm(w - lam[..., None] * v, axis=-1)
         return _normalize(w), lam, resid
 
-    return _gated_loop(chunk_fn, v, n_iters, k, tol, axis_name, vary_axes)
+    return chunk_fn
+
+
+def _run_adaptive(matvec, v, n_iters: int, tol: float, check_every: int,
+                  axis_name, vary_axes):
+    """Shared driver: fixed fori_loop when tol<=0, gated while_loop else.
+
+    matvec(v) must return the *unnormalized* image C v in fp32.
+    Returns (v, iters_run).  With tol>0 the cap rounds up to a multiple
+    of check_every (identical semantics to the chunked kernel path).
+    """
+    if tol <= 0.0:
+        def step(_, v):
+            return _normalize(matvec(v))
+
+        v = jax.lax.fori_loop(0, n_iters, step, v)
+        return v, jnp.full(v.shape[:-2], n_iters, jnp.int32)
+
+    k = max(1, min(check_every, n_iters))
+    return _gated_loop(make_chunk_probe(matvec, k), v, n_iters, k, tol,
+                       axis_name, vary_axes)
+
+
+def matvec_matrix_free(slices: jax.Array, precision: str = "fp32",
+                       inner_axis=None):
+    """matvec(v) = Tᵀ(T v) closure over `slices` — precision-policy
+    operands, fp32 accumulation, partials psum'd over `inner_axis`."""
+    dt = compute_dtype(precision)
+    s = slices.astype(dt)
+
+    def matvec(v):
+        vb = _maybe_pvary(v, inner_axis)
+        tv = jnp.einsum("...rc,...c->...r", s, vb.astype(dt),
+                        preferred_element_type=jnp.float32)
+        w = jnp.einsum("...rc,...r->...c", s, tv.astype(dt),
+                       preferred_element_type=jnp.float32)
+        return _psum_inner(w, inner_axis)
+
+    return matvec
+
+
+def rayleigh_fp32(slices: jax.Array, v: jax.Array, inner_axis=None):
+    """λ = ‖T v‖² per slice, always fp32 — the final Rayleigh quotient
+    every solver reports regardless of the operand precision policy."""
+    tv = jnp.einsum("...rc,...c->...r", slices.astype(jnp.float32),
+                    _maybe_pvary(v, inner_axis))
+    return _psum_inner(jnp.sum(tv * tv, axis=-1), inner_axis)
+
+
+def build_chunk_fn(slices: jax.Array, cfg, inner_axis=None):
+    """(chunk_fn, k) for the chunk-resumable serving path (DESIGN.md
+    §7.7): the k-sweep gate-chunk body `step_chunk` advances SolveState
+    with, dispatched on MSCConfig exactly like `top_eigenpairs` —
+    cfg.use_kernels selects the fused Pallas chunk, else the einsum
+    probe.  Requires cfg.matrix_free (a chunk-persistent gram operand is
+    a follow-up; the serving engines only build matrix-free pipelines).
+    """
+    if not cfg.matrix_free:
+        raise ValueError("chunk-resumable solves require matrix_free=True "
+                         "(the explicit gram has no persistent-operand "
+                         "form yet)")
+    k = max(1, min(cfg.power_check_every, cfg.power_iters))
+    if cfg.use_kernels:
+        from repro.kernels import ops as kops
+
+        return kops.build_chunk_fn(slices, k, precision=cfg.precision,
+                                   inner_axis=inner_axis), k
+    return make_chunk_probe(
+        matvec_matrix_free(slices, cfg.precision, inner_axis), k), k
 
 
 @partial(jax.jit, static_argnames=("n_iters", "tol", "check_every",
@@ -233,25 +363,12 @@ def power_iteration_matrix_free(slices: jax.Array, n_iters: int = 60,
     regardless of the precision policy.
     """
     c = slices.shape[-1]
-    dt = compute_dtype(precision)
-    s = slices.astype(dt)
-
-    def matvec(v):
-        vb = _maybe_pvary(v, inner_axis)
-        tv = jnp.einsum("...rc,...c->...r", s, vb.astype(dt),
-                        preferred_element_type=jnp.float32)
-        w = jnp.einsum("...rc,...r->...c", s, tv.astype(dt),
-                       preferred_element_type=jnp.float32)
-        return _psum_inner(w, inner_axis)
-
+    matvec = matvec_matrix_free(slices, precision, inner_axis)
     v = _maybe_pvary(_init_vectors(slices.shape[:-2], c, jnp.float32,
                                    c_valid), vary_axes)
     v, iters = _run_adaptive(matvec, v, n_iters, tol, check_every,
                              axis_name, vary_axes)
-    tv = jnp.einsum("...rc,...c->...r", slices.astype(jnp.float32),
-                    _maybe_pvary(v, inner_axis))
-    lam = _psum_inner(jnp.sum(tv * tv, axis=-1), inner_axis)
-    return lam, v, iters
+    return rayleigh_fp32(slices, v, inner_axis), v, iters
 
 
 @partial(jax.jit, static_argnames=("n_iters", "tol", "check_every",

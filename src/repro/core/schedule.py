@@ -324,17 +324,24 @@ class ModeSchedule:
             block, self.cfg, vary_axes=self.vary_axes,
             axis_name=self.slice_axis, inner_axis=self.inner_axis,
             c_valid=c_valid)
+        d_local, lam = self._similarity_tail(lam, vec, valid_local)
+        return d_local, lam, iters[..., None]
+
+    def _similarity_tail(self, lam, vec, valid_local):
+        """λ-max normalize + similarity epilogue — the Alg. 2 tail after
+        the eigensolve, shared by mode_local and the chunk-resumable
+        body (same code ⇒ same numerics on both serving paths).
+        Returns (d_local, lam) with padding slices zeroed in both."""
         lam = jnp.where(valid_local, lam, 0.0)
         # MPI_Allreduce(λ, MAX) over the group — fp32 regardless of precision
         lam_max = jax.lax.pmax(jnp.max(lam, axis=-1), self.slice_axis)
         scale = lam / jnp.maximum(lam_max, 1e-30)[..., None]
-        v_local = scale[..., None] * vec
-        v_local = jnp.where(valid_local[..., None], v_local, 0.0)
+        v_local = jnp.where(valid_local[..., None], scale[..., None] * vec,
+                            0.0)
         d_local = epilogue_rowsum(v_local, cfg=self.cfg,
                                   axis_name=self.slice_axis,
                                   shards=self.slice_shards)
-        d_local = jnp.where(valid_local, d_local, 0.0)
-        return d_local, lam, iters[..., None]
+        return jnp.where(valid_local, d_local, 0.0), lam
 
     # ---- shard_map entry points --------------------------------------
     def build_mode_fn(self, c_valid: Optional[int] = None):
@@ -437,6 +444,126 @@ class ModeSchedule:
         )(d, valid)
         return ModeResult(mask=mask, d=d, lambdas=lam, n_iters=n_it,
                           power_iters_run=jnp.max(iters, axis=-1))
+
+    # ---- chunk-resumable entry points (DESIGN.md §7.7) ----------------
+    #
+    # The continuous serving engine persists one SolveState per mode per
+    # slot table on device between dispatches.  Global layout (B = slot
+    # count, m' = padded slice dim, S = slice_shards):
+    #
+    #   v (B, m', c)  lam/resid (B, m')  iters/done (B, S)
+    #
+    # iters/done are per-request verdicts, identical across the S shard
+    # columns (the gate pmax-reduces over the slice axes); carrying them
+    # at (B, S) through sharded specs keeps the whole carry pytree
+    # uniform — every leaf enters and leaves shard_map varying over the
+    # slice axes only, replicated over "inner".
+
+    @property
+    def batched_carry_specs(self) -> "SolveState":
+        """SolveState-of-PartitionSpecs for the persistent per-mode carry."""
+        from .power_iter import SolveState
+
+        vs = self.batched_vector_spec
+        return SolveState(v=P(None, _spec_entry(self.slice_axes), None),
+                          lam=vs, resid=vs, iters=vs, done=vs)
+
+    def init_mode_carry(self, B: int, m_pad: int, c: int, c_req, done):
+        """Fresh global carry for one mode of a B-slot table.
+
+        c_req: (B,) per-request column bounds masking the deterministic
+        eigensolver init (the serving bucket-padding contract); done:
+        (B,) bool — True seeds the slot inert (its iterate never
+        advances), the state of a slot that has no live request yet.
+        Plain jnp, runs inside the refill executable (outside shard_map:
+        the init is replicated by construction).
+        """
+        from .power_iter import SolveState, _init_vectors
+
+        S = self.slice_shards
+        return SolveState(
+            v=_init_vectors((B, m_pad), c, jnp.float32,
+                            c_valid=jnp.asarray(c_req)[:, None]),
+            lam=jnp.zeros((B, m_pad), jnp.float32),
+            resid=jnp.zeros((B, m_pad), jnp.float32),
+            iters=jnp.zeros((B, S), jnp.int32),
+            done=jnp.broadcast_to(jnp.asarray(done)[:, None], (B, S)))
+
+    def chunk_local(self, block, carry, steps: int = 1):
+        """Per-device chunk-step body for one mode: `steps` gate chunks
+        over the local carry view — the resumable analogue of
+        `mode_local`'s eigensolve.
+
+        Every slot advances `steps × power_check_every` sweeps; a
+        finished slot's state passes through frozen (`step_chunk`'s
+        per-request masking), which is what lets the similarity tail be
+        deferred to eviction time (`finalize_local`): the iterate a
+        finished slot is finalized from is bit-identical no matter how
+        many further chunks its slot table ran.  Padding slices are
+        all-zero, so no validity mask is needed here — they contribute
+        zero residual and never hold the gate open.
+        """
+        from .power_iter import SolveState, build_chunk_fn, step_chunk
+
+        cfg = self.cfg
+        st = SolveState(carry.v, carry.lam, carry.resid,
+                        carry.iters[..., 0], carry.done[..., 0])
+        chunk_fn, k = build_chunk_fn(block, cfg, inner_axis=self.inner_axis)
+
+        def one(_, s):
+            return step_chunk(chunk_fn, s, k=k, n_iters=cfg.power_iters,
+                              tol=cfg.power_tol, axis_name=self.slice_axis)
+
+        st = jax.lax.fori_loop(0, steps, one, st) if steps > 1 \
+            else one(0, st)
+        return SolveState(st.v, st.lam, st.resid,
+                          st.iters[..., None], st.done[..., None])
+
+    def finalize_local(self, block, valid_local, v):
+        """Per-device similarity tail from a carry's (frozen) iterates:
+        final fp32 Rayleigh quotient, λ-max normalization, epilogue —
+        the same `_similarity_tail` the one-shot paths use.  The
+        continuous engine runs this inside the refill executable
+        (finalize-on-evict), NOT per chunk: at paper scale the epilogue
+        is link-bound, so recomputing it every gate chunk would hand
+        back much of the occupancy win (see
+        roofline.continuous_serving_model)."""
+        from .power_iter import rayleigh_fp32
+
+        lam = rayleigh_fp32(block, v, self.inner_axis)
+        return self._similarity_tail(lam, v, valid_local)
+
+    @staticmethod
+    def repack_local(perm, take_new, block, carry, new_block, new_carry):
+        """Per-device slot-table compaction/refill for one mode:
+        block'[s] = new_block[s] if take_new[s] else block[perm[s]], and
+        likewise for every carry leaf — an arbitrary slot permutation
+        (the scheduler's compaction policy) fused with refill selection.
+        The slot dim is replicated in every spec, so the gather is
+        device-local: repacking never moves tensor bytes over links."""
+        def sel(old, new):
+            t = take_new.reshape((-1,) + (1,) * (old.ndim - 1))
+            return jnp.where(t, new, old[perm])
+
+        return sel(block, new_block), jax.tree.map(sel, carry, new_carry)
+
+    def build_batched_chunk_fn(self, steps: int = 1):
+        """shard_map'd single-mode chunk step (stage-level tests; the
+        engine fuses all three modes into one region — MSCChunkPlan)."""
+        specs = self.batched_carry_specs
+        return shard_map(
+            partial(self.chunk_local, steps=steps), mesh=self.mesh,
+            in_specs=(self.batched_block_spec, specs), out_specs=specs,
+        )
+
+    def build_batched_finalize_fn(self):
+        """shard_map'd single-mode finalize (stage-level tests)."""
+        return shard_map(
+            self.finalize_local, mesh=self.mesh,
+            in_specs=(self.batched_block_spec, self.batched_vector_spec,
+                      self.batched_carry_specs.v),
+            out_specs=(self.batched_vector_spec, self.batched_vector_spec),
+        )
 
 
 def build_mode_runner(sched: ModeSchedule, c_valid: Optional[int] = None):

@@ -56,6 +56,35 @@ def abs_rowsum(a: jax.Array, b: jax.Array, acc=None, *,
     return _ring.abs_rowsum(a, b, acc, interpret=interpret)
 
 
+def build_chunk_fn(slices: jax.Array, k: int, *, precision: str = "fp32",
+                   inner_axis=None, block_r: int = 256,
+                   interpret: bool | None = None):
+    """Kernel-path gate-chunk body (DESIGN.md §7.7): chunk_fn(v) ->
+    (v_new, lam, resid), k fused sweeps + the gate probe — the Pallas
+    analogue of `core.power_iter.make_chunk_probe`, shared by the
+    in-jit gated loop below and the chunk-resumable serving path.  With
+    inner_axis set the fusion drops to one `power_matvec` per sweep so
+    the caller's psum can complete w before normalization."""
+    from repro.core.power_iter import (_maybe_pvary, _psum_inner,
+                                      compute_dtype, make_chunk_probe)
+
+    interpret = _interpret_default() if interpret is None else interpret
+    s = slices.astype(compute_dtype(precision))
+    if inner_axis is not None:
+        def matvec(v):
+            w = _pi.power_matvec(s, _maybe_pvary(v, inner_axis),
+                                 block_r=block_r, interpret=interpret)
+            return _psum_inner(w, inner_axis)
+
+        return make_chunk_probe(matvec, k)
+
+    def chunk_fn(v):
+        return _pi.power_iterate_chunk(s, v, k, block_r=block_r,
+                                       interpret=interpret)
+
+    return chunk_fn
+
+
 def power_iterate_matrix_free(slices: jax.Array, n_iters: int = 60,
                               tol: float = 0.0, check_every: int = 6,
                               precision: str = "fp32", vary_axes=None,
@@ -91,18 +120,14 @@ def power_iterate_matrix_free(slices: jax.Array, n_iters: int = 60,
     """
     from repro.core.power_iter import (_gated_loop, _init_vectors,
                                        _maybe_pvary, _psum_inner,
-                                       _run_adaptive, compute_dtype)
+                                       _run_adaptive, compute_dtype,
+                                       rayleigh_fp32)
 
     interpret = _interpret_default() if interpret is None else interpret
     c = slices.shape[-1]
     s = slices.astype(compute_dtype(precision))
     v0 = _maybe_pvary(_init_vectors(slices.shape[:-2], c, jnp.float32,
                                     c_valid), vary_axes)
-
-    def _fp32_rayleigh(v):
-        tv = jnp.einsum("...rc,...c->...r", slices.astype(jnp.float32),
-                        _maybe_pvary(v, inner_axis))
-        return _psum_inner(jnp.sum(tv * tv, axis=-1), inner_axis)
 
     if inner_axis is not None:
         def matvec(v):
@@ -112,24 +137,21 @@ def power_iterate_matrix_free(slices: jax.Array, n_iters: int = 60,
 
         v, iters = _run_adaptive(matvec, v0, n_iters, tol, check_every,
                                  axis_name, vary_axes)
-        return _fp32_rayleigh(v), v, iters
+        return rayleigh_fp32(slices, v, inner_axis), v, iters
 
     if tol <= 0.0:
         lam, v = _pi.power_iterate(s, v0, n_iters, block_r=block_r,
                                    interpret=interpret)
         if precision != "fp32":
-            lam = _fp32_rayleigh(v)
+            lam = rayleigh_fp32(slices, v)
         return lam, v, jnp.full(slices.shape[:-3], n_iters, jnp.int32)
 
     k = max(1, min(check_every, n_iters))
-
-    def chunk_fn(v):
-        return _pi.power_iterate_chunk(s, v, k, block_r=block_r,
-                                       interpret=interpret)
-
+    chunk_fn = build_chunk_fn(slices, k, precision=precision,
+                              block_r=block_r, interpret=interpret)
     v, iters = _gated_loop(chunk_fn, v0, n_iters, k, tol, axis_name,
                            vary_axes)
-    return _fp32_rayleigh(v), v, iters
+    return rayleigh_fp32(slices, v), v, iters
 
 
 def flash_attention(q, k, v, *, causal=True, scale=None, q_offset=0,

@@ -1,4 +1,4 @@
-"""Batched MSC serving driver (CLI) — the DESIGN.md §7.6 workload.
+"""Batched MSC serving driver (CLI) — the DESIGN.md §7.6/§7.7 workloads.
 
 Generates a stream of independent planted-tensor MSC requests with
 mixed shapes, serves it through `MSCServeEngine` (shape buckets,
@@ -6,12 +6,22 @@ compiled-executable cache, fixed-size microbatches), and reports the
 bucket/cache behavior plus batched-vs-looped throughput — i.e. the
 DBSCAN-MSC / MCAM many-request regime end to end.
 
+With `--continuous` the same stream is ALSO driven through the
+continuous-batching `MSCContinuousEngine` as a streaming arrival
+simulation: requests arrive at Poisson times (in gate-chunk ticks,
+`--arrival-rate` per tick), every `--slow-every`-th request is a
+near-noise slow converger (the skewed mix static lockstep handles
+worst), and the decode loop's occupancy / queue-wait / eviction
+counters are reported next to the static engine's time on the same
+request set.
+
 Examples:
   PYTHONPATH=src python -m repro.launch.msc_serve
   PYTHONPATH=src python -m repro.launch.msc_serve \\
       --sizes 16,21,24,33 --requests 12 --max-batch 4 --epilogue ring
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \\
-      python -m repro.launch.msc_serve --mesh-shape 4,2
+      python -m repro.launch.msc_serve --mesh-shape 4,2 \\
+      --continuous --arrival-rate 2 --slow-every 6
 """
 from __future__ import annotations
 
@@ -22,19 +32,51 @@ import jax
 
 from repro.core import (MSCConfig, PlantedSpec, make_planted_tensor,
                         make_msc_mesh, planted_masks, recovery_rate)
-from repro.serving import MSCServeEngine
+from repro.serving import MSCContinuousEngine, MSCServeEngine
 
 
-def build_request_stream(sizes, n_requests: int, seed: int):
-    """n_requests planted cubes cycling through `sizes` (mixed buckets)."""
+def build_request_stream(sizes, n_requests: int, seed: int,
+                         slow_every: int = 0, gamma_slow: float = 2.0):
+    """n_requests planted cubes cycling through `sizes` (mixed buckets);
+    with slow_every > 0, every slow_every-th request is a near-noise
+    slow converger (the §7.7 skewed-convergence mix)."""
     specs, tensors = [], []
     for i in range(n_requests):
         m = sizes[i % len(sizes)]
-        spec = PlantedSpec.paper(m, gamma=float(max(m, 40)))
-        specs.append(spec)
+        gamma = gamma_slow if slow_every and i % slow_every == 0 \
+            else float(max(m, 40))
+        specs.append(PlantedSpec.paper(m, gamma=gamma))
         tensors.append(make_planted_tensor(jax.random.PRNGKey(seed + i),
-                                           spec))
+                                           specs[-1]))
     return specs, tensors
+
+
+def simulate_continuous(engine: MSCContinuousEngine, tensors, *,
+                        arrival_rate: float, seed: int):
+    """Drive the decode loop under Poisson arrivals.
+
+    Inter-arrival gaps are Exponential(1/arrival_rate) in units of
+    scheduler ticks; each tick submits everything that has arrived,
+    then advances every bucket one gate chunk.  Returns (results dict,
+    ticks, wall seconds).
+    """
+    import numpy as np
+
+    rng = np.random.RandomState(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / max(arrival_rate, 1e-9),
+                                         len(tensors)))
+    results, rid_of = {}, {}
+    tick, nxt = 0, 0
+    t0 = time.time()
+    while nxt < len(tensors) or engine.has_work():
+        while nxt < len(tensors) and arrivals[nxt] <= tick:
+            rid_of[engine.submit(tensors[nxt])] = nxt
+            nxt += 1
+        if engine.has_work():
+            for rid, res in engine.step().items():
+                results[rid_of[rid]] = res
+        tick += 1
+    return results, tick, time.time() - t0
 
 
 def main(argv=None) -> int:
@@ -57,6 +99,18 @@ def main(argv=None) -> int:
     ap.add_argument("--power-tol", type=float, default=1e-2)
     ap.add_argument("--no-loop-compare", action="store_true",
                     help="skip the B=1 looped-baseline timing")
+    ap.add_argument("--continuous", action="store_true",
+                    help="also stream the requests through the "
+                         "continuous-batching engine (DESIGN.md §7.7)")
+    ap.add_argument("--slots", type=int, default=None,
+                    help="continuous slot-table size (default: max-batch)")
+    ap.add_argument("--chunks-per-step", type=int, default=1)
+    ap.add_argument("--arrival-rate", type=float, default=2.0,
+                    help="mean Poisson arrivals per scheduler tick "
+                         "(continuous mode)")
+    ap.add_argument("--slow-every", type=int, default=0,
+                    help="every Nth request is a near-noise slow "
+                         "converger (0 = homogeneous stream)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -70,7 +124,8 @@ def main(argv=None) -> int:
           f"mesh {dict(mesh.shape)}, B={args.max_batch}, "
           f"epilogue={args.epilogue} precision={args.precision}")
 
-    specs, tensors = build_request_stream(sizes, args.requests, args.seed)
+    specs, tensors = build_request_stream(sizes, args.requests, args.seed,
+                                          slow_every=args.slow_every)
     engine = MSCServeEngine(mesh, cfg, max_batch=args.max_batch,
                             bucket_quantum=args.bucket_quantum)
     buckets = sorted({engine.bucket_of(t.shape) for t in tensors})
@@ -106,6 +161,32 @@ def main(argv=None) -> int:
         loop_s = time.time() - t0
         print(f"looped (B=1) warm {loop_s:.2f}s → batched speedup "
               f"{loop_s / warm_s:.2f}x")
+
+    if args.continuous:
+        print(f"\ncontinuous decode loop: Poisson arrivals "
+              f"{args.arrival_rate}/tick, slow-every={args.slow_every}")
+        ceng = MSCContinuousEngine(
+            mesh, cfg, slots=args.slots or args.max_batch,
+            bucket_quantum=args.bucket_quantum,
+            chunks_per_step=args.chunks_per_step)
+        probes = {}  # warm every bucket's executables off the clock
+        for t in tensors:
+            probes.setdefault(ceng.bucket_of(t.shape), t)
+        ceng.run(list(probes.values()))
+        base = ceng.stats
+        results, ticks, stream_s = simulate_continuous(
+            ceng, tensors, arrival_rate=args.arrival_rate, seed=args.seed)
+        cs = ceng.stats.delta(base)  # the stream only, not the warmup
+        print(f"streamed {len(results)} results over {ticks} ticks in "
+              f"{stream_s:.2f}s ({len(results) / stream_s:.1f} req/s)")
+        print(f"  occupancy {cs.occupancy:.2f} "
+              f"({cs.busy_slot_chunks}/{cs.slot_chunks} slot-chunks), "
+              f"{cs.evictions} evictions, {cs.refills} refills, "
+              f"mean queue wait "
+              f"{cs.queue_wait_chunks / max(cs.requests, 1):.2f} chunks")
+        for i in (0, len(tensors) - 1):
+            sw = [int(results[i][j].power_iters_run) for j in range(3)]
+            print(f"  req {i}: sweeps={sw}")
     return 0
 
 

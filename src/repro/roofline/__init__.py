@@ -1,5 +1,6 @@
 from .hw import V5E, CHIPS_PER_POD, HwSpec
 from .hlo import HloAnalysis, analyze, shape_bytes
-from .analyze import (RooflineReport, active_param_count, eigensolve_model,
+from .analyze import (RooflineReport, active_param_count,
+                      continuous_serving_model, eigensolve_model,
                       epilogue_model, model_flops, report_from_compiled,
                       save_report, serving_model)

@@ -212,10 +212,127 @@ def eigensolve_model(m: int, r: int, c: int, p: int, q: int = 1, *,
     }
 
 
+def continuous_serving_model(iter_hist, B: int, *, check_every: int = 6,
+                             shape=None, p: int = 1, q: int = 1,
+                             epilogue: str = "allgather",
+                             dispatch_s: float = 0.0,
+                             refill_min_free: int = 1,
+                             dtype_bytes: float = 4.0,
+                             hw: HwSpec = V5E) -> Dict:
+    """Predict continuous-vs-static occupancy from a per-request
+    iteration histogram (DESIGN.md §7.7).
+
+    iter_hist: realized power-iteration sweeps per request, in arrival
+    order — the quantity the static engine's batch-max lockstep rounds
+    every slot up to, and exactly what `ModeResult.power_iters_run`
+    reports, so a measured serve can be replayed through this model.
+
+    Both disciplines are simulated over the same sequence:
+
+      static — microbatches of B in arrival order; every mode of every
+        slot runs the batch max (rounded up to the gate-chunk size k),
+        one dispatch per batch.
+      continuous — a B-slot table advancing one k-sweep chunk per tick,
+        all three modes concurrently; a finished slot is evicted at the
+        next tick's refill dispatch (which also finalizes its results
+        and admits from the queue under refill_min_free batching).
+
+    Occupancy counts a slot·chunk as useful when the slot holds an
+    unfinished request; the continuous scheduler exists to push this
+    toward 1 where static lockstep decays as the skew grows.  With
+    `shape` given, wall times come from `eigensolve_model` +
+    `epilogue_model`: a chunk tick costs k eigensolve sweeps per mode,
+    and the link-bound similarity epilogue is charged once per REFILL
+    tick (finalize-on-evict — the reason the epilogue lives in the
+    refill executable, not the chunk step: charged per chunk it would
+    hand back most of the occupancy win at paper scale, where the
+    epilogue is ICI-bound while a single sweep is not).  Without
+    `shape`, a sweep costs 1 unit and `dispatch_s` is in the same
+    units.  Returns occupancies, wall estimates, and speedup =
+    static_s / continuous_s.
+    """
+    sweeps = [int(s) for s in iter_hist]
+    if not sweeps or B < 1:
+        raise ValueError("iter_hist must be non-empty and B >= 1")
+    k = max(1, int(check_every))
+    chunks_of = [max(1, -(-s // k)) for s in sweeps]  # ceil, >=1
+
+    # per-mode per-sweep and per-epilogue wall costs
+    if shape is not None:
+        m1, m2, m3 = shape
+        eig1, epi = [], []
+        for m, r, c in ((m1, m2, m3), (m2, m1, m3), (m3, m1, m2)):
+            eig1.append(eigensolve_model(m, r, c, p, q, sweeps=1,
+                                         dtype_bytes=dtype_bytes,
+                                         hw=hw)["latency_s"])
+            epi.append(epilogue_model(m, c, p, epilogue=epilogue,
+                                      dtype_bytes=dtype_bytes,
+                                      hw=hw)["latency_s"])
+    else:
+        eig1, epi = [1.0] * 3, [0.0] * 3
+
+    # static: batch-max lockstep per microbatch, modes sequential
+    static_s, static_batches = 0.0, 0
+    useful = sum(c * k for c in chunks_of)  # per mode, slot·sweeps
+    static_slot_sweeps = 0
+    for i in range(0, len(sweeps), B):
+        batch = chunks_of[i:i + B]
+        lock = max(batch) * k
+        static_slot_sweeps += lock * B
+        static_s += dispatch_s + sum(lock * e1 + ep
+                                     for e1, ep in zip(eig1, epi))
+        static_batches += 1
+    occupancy_static = useful / static_slot_sweeps
+
+    # continuous: slot-table simulation, modes concurrent per chunk,
+    # eviction (and its finalize) at the tick after a slot finishes
+    slots = [0] * B        # remaining chunks per slot (0 = free)
+    queue = list(chunks_of)
+    chunks = refills = busy_slot_chunks = 0
+    freed_now = 0
+    # a threshold no drain can reach would deadlock admission (the
+    # engine clamps identically)
+    min_free = min(max(1, int(refill_min_free)), B)
+    while queue or any(slots) or freed_now:
+        free = [s for s, r in enumerate(slots) if r == 0]
+        admitted = False
+        if queue and free and len(free) >= min(min_free, len(queue)):
+            for s in free:
+                if not queue:
+                    break
+                slots[s] = queue.pop(0)
+                admitted = True
+        refills += int(freed_now > 0 or admitted)
+        live = sum(r > 0 for r in slots)
+        if live == 0:
+            break  # the drain tick: evict/finalize only, no chunk
+        busy_slot_chunks += live
+        chunks += 1
+        freed_now = sum(r == 1 for r in slots)  # evicted next tick
+        slots = [max(0, r - 1) for r in slots]
+    occupancy_continuous = useful / (chunks * B * k)
+    chunk_s = dispatch_s + sum(k * e1 for e1 in eig1)
+    refill_s = dispatch_s + sum(epi)
+    continuous_s = chunks * chunk_s + refills * refill_s
+    return {
+        "requests": len(sweeps), "B": B, "check_every": k,
+        "shape": tuple(shape) if shape is not None else None,
+        "p": p, "q": q, "epilogue": epilogue, "dispatch_s": dispatch_s,
+        "chunks": chunks, "refills": refills,
+        "static_batches": static_batches,
+        "occupancy_continuous": occupancy_continuous,
+        "occupancy_static": occupancy_static,
+        "busy_slot_chunks": busy_slot_chunks,
+        "static_s": static_s, "continuous_s": continuous_s,
+        "speedup": static_s / continuous_s if continuous_s > 0 else 0.0,
+    }
+
+
 def serving_model(shape, B: int, p: int, q: int = 1, *,
                   sweeps: int = 12, epilogue: str = "allgather",
                   dtype_bytes: float = 4.0, dispatch_s: float = 1e-3,
-                  compile_s: float = 0.0, hw: HwSpec = V5E) -> Dict:
+                  compile_s: float = 0.0, iter_hist=None,
+                  hw: HwSpec = V5E) -> Dict:
     """Analytic model of batched multi-tensor MSC serving (DESIGN.md §7.6).
 
     Per-request *work* is shape-determined: three modes of the 2-D
@@ -238,6 +355,9 @@ def serving_model(shape, B: int, p: int, q: int = 1, *,
     Returns a dict with the per-request work/byte terms (link bytes from
     the epilogue + inner-axis psum models, HBM bytes ≈ sweeps × the
     per-device eigensolve block re-read) and the latency/speedup terms.
+    With `iter_hist` (per-request realized sweeps, arrival order) the
+    "continuous" entry carries the `continuous_serving_model` occupancy
+    prediction for the same shape/mesh (DESIGN.md §7.7).
     """
     m1, m2, m3 = shape
     work_s = 0.0
@@ -254,7 +374,12 @@ def serving_model(shape, B: int, p: int, q: int = 1, *,
         hbm_bytes += sweeps * eig["block_bytes_per_device"]
     looped_s = B * (dispatch_s + work_s)
     batched_s = dispatch_s + B * work_s
+    continuous = (continuous_serving_model(
+        iter_hist, B, shape=shape, p=p, q=q, epilogue=epilogue,
+        dispatch_s=dispatch_s, dtype_bytes=dtype_bytes, hw=hw)
+        if iter_hist is not None else None)
     return {
+        "continuous": continuous,
         "shape": tuple(shape), "B": B, "p": p, "q": q, "sweeps": sweeps,
         "epilogue": epilogue, "dtype_bytes": dtype_bytes,
         "dispatch_s": dispatch_s, "compile_s": compile_s,

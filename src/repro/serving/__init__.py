@@ -1,2 +1,2 @@
 from .engine import ServeEngine, build_serve_steps
-from .msc_engine import MSCServeEngine, ServeStats
+from .msc_engine import MSCContinuousEngine, MSCServeEngine, ServeStats

@@ -28,20 +28,27 @@ Results come back as host-side (numpy) per-request MSCResults — trimmed
 to true sizes, per-request `power_iters_run` intact — keeping the hot
 path free of per-request jax dispatches (slicing device arrays would
 re-trace tiny gather programs per shape).
+
+`MSCContinuousEngine` (DESIGN.md §7.7) replaces the static microbatch
+with a continuous-batching decode loop: per-bucket slot tables of
+persistent device-resident eigensolver state advance in gate chunks,
+converged requests are evicted (and finalized) mid-flight, and freed
+slots refill from an admission queue — so a slow-converging request no
+longer parks B-1 slots at the batch-max lockstep exit.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from collections import defaultdict
-from typing import Dict, List, Optional, Sequence, Tuple
+from collections import defaultdict, deque
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.core.parallel import build_msc_batched
+from repro.core.parallel import MSCChunkPlan, build_msc_batched
 from repro.core.schedule import pad_to
 from repro.core.types import ModeResult, MSCConfig, MSCResult
 
@@ -53,18 +60,63 @@ _FILLER_DIMS = (1, 1, 1)
 
 @dataclasses.dataclass(frozen=True)
 class ServeStats:
-    """Counters for the serving hot path (cumulative per engine)."""
+    """Counters for the serving hot path (cumulative per engine).
+
+    The first five are shared by both engines; the rest are the
+    continuous engine's decode-loop counters (all cumulative, so
+    `delta` stays a plain field-wise subtraction):
+
+      chunk_steps / refills — dispatches of the two per-bucket
+        executables (`dispatches` counts both).
+      evictions — slots freed by a finished request (== requests served
+        through the continuous path).
+      slot_chunks / busy_slot_chunks — slot·chunk capacity dispatched
+        vs the share holding a live request; their ratio is the slot
+        occupancy the continuous scheduler exists to maximize.
+      queue_wait_chunks — total chunks requests spent queued before
+        admission (divide by `requests` for the mean wait).
+    """
 
     requests: int = 0
     dispatches: int = 0
     compiles: int = 0
     cache_hits: int = 0
     filler_slots: int = 0
+    chunk_steps: int = 0
+    refills: int = 0
+    evictions: int = 0
+    slot_chunks: int = 0
+    busy_slot_chunks: int = 0
+    queue_wait_chunks: int = 0
+
+    @property
+    def occupancy(self) -> float:
+        """Live-slot share of dispatched slot·chunk capacity."""
+        return (self.busy_slot_chunks / self.slot_chunks
+                if self.slot_chunks else 0.0)
 
     def delta(self, other: "ServeStats") -> "ServeStats":
         return ServeStats(*(a - b for a, b in
                             zip(dataclasses.astuple(self),
                                 dataclasses.astuple(other))))
+
+
+def _bucket_quantum(mesh: Mesh, inner_axis: Optional[str],
+                    bucket_quantum: int) -> int:
+    """Dims round up to shard multiples too, so bucket padding and
+    schedule padding coincide (no second pad inside the jit).  Each dim
+    is a slice dim (multiple of p) in one mode and a row dim (multiple
+    of q) in another, so lcm(p, q) suffices — NOT p·q."""
+    q = mesh.shape.get(inner_axis or "inner", 1)
+    p = int(np.prod([s for a, s in mesh.shape.items()
+                     if a != (inner_axis or "inner")]))
+    return pad_to(int(bucket_quantum), math.lcm(p, q))
+
+
+def _bucket_of(shape: Sequence[int], quantum: int) -> Tuple[int, int, int]:
+    if len(shape) != 3 or any(s < 1 for s in shape):
+        raise ValueError(f"MSC serves third-order tensors, got {shape}")
+    return tuple(pad_to(int(s), quantum) for s in shape)
 
 
 class MSCServeEngine:
@@ -84,6 +136,8 @@ class MSCServeEngine:
         schedule's even-shard contract).
       dtype: request tensor dtype at the engine boundary (the precision
         *policy* stays cfg.precision).
+      relayout: passed to build_msc_batched — "gspmd" (default) or
+        "collective" (explicit batched all_to_all relayout).
 
     `run(tensors)` is the whole API: a list of third-order tensors in,
     a list of per-request MSCResults (host-side numpy, true sizes) out,
@@ -92,7 +146,8 @@ class MSCServeEngine:
 
     def __init__(self, mesh: Mesh, cfg: MSCConfig, *, max_batch: int = 8,
                  bucket_quantum: int = 8, dtype=jnp.float32,
-                 axis_name=None, inner_axis: Optional[str] = None):
+                 axis_name=None, inner_axis: Optional[str] = None,
+                 relayout: str = "gspmd"):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.mesh = mesh
@@ -100,24 +155,16 @@ class MSCServeEngine:
         self.max_batch = int(max_batch)
         self.dtype = jnp.dtype(dtype)
         self._runner = build_msc_batched(mesh, cfg, axis_name=axis_name,
-                                         inner_axis=inner_axis)
-        # dims round up to shard multiples too, so bucket padding and
-        # schedule padding coincide (no second pad inside the jit).  Each
-        # dim is a slice dim (multiple of p) in one mode and a row dim
-        # (multiple of q) in another, so lcm(p, q) suffices — NOT p·q.
-        q = mesh.shape.get(inner_axis or "inner", 1)
-        p = int(np.prod([s for a, s in mesh.shape.items()
-                         if a != (inner_axis or "inner")]))
-        self._quantum = pad_to(int(bucket_quantum), math.lcm(p, q))
+                                         inner_axis=inner_axis,
+                                         relayout=relayout)
+        self._quantum = _bucket_quantum(mesh, inner_axis, bucket_quantum)
         self._cache: Dict[Tuple, jax.stages.Compiled] = {}
         self._stats = ServeStats()
 
     # ---- bucketing ---------------------------------------------------
     def bucket_of(self, shape: Sequence[int]) -> Tuple[int, int, int]:
         """Bucket = each dim rounded up to the engine quantum."""
-        if len(shape) != 3 or any(s < 1 for s in shape):
-            raise ValueError(f"MSC serves third-order tensors, got {shape}")
-        return tuple(pad_to(int(s), self._quantum) for s in shape)
+        return _bucket_of(shape, self._quantum)
 
     # ---- executable cache --------------------------------------------
     def _executable(self, bucket: Tuple[int, int, int]):
@@ -194,3 +241,306 @@ def _trim_request(host: MSCResult, s: int, shape) -> MSCResult:
             mask=res.mask[s, :m], d=res.d[s, :m], lambdas=res.lambdas[s, :m],
             n_iters=res.n_iters[s], power_iters_run=res.power_iters_run[s]))
     return MSCResult(modes=tuple(modes))
+
+
+# ------------------------------------------------------------------ §7.7
+
+class _SlotTable:
+    """Per-bucket slot-table runtime of the continuous engine: the
+    device-resident state (blocks + carries), the host-side slot→request
+    map and per-slot dims, the admission queue, and the bucket's chunk
+    clock.  Pure bookkeeping — all policy lives in the engine."""
+
+    def __init__(self, bucket, blocks, carries, slots: int, dtype,
+                 mode_shapes):
+        self.bucket = bucket
+        self.blocks = blocks
+        self.carries = carries
+        self.slot_req: List[Optional[int]] = [None] * slots
+        self.dims = np.tile(np.int32(_FILLER_DIMS), (slots, 1))
+        self.queue: Deque[Tuple[int, int]] = deque()  # (rid, submit_chunk)
+        self.chunk = 0
+        self.fin = np.zeros(slots, bool)  # last chunk's finished flags
+        # reusable pre-unfolded staging buffers (one per mode); dirty[s]
+        # marks slots whose regions hold a previous admission's bytes
+        # and must be re-zeroed before the next write
+        self.stage = tuple(np.zeros(sh, dtype) for sh in mode_shapes)
+        self.dirty = np.zeros(slots, bool)
+
+    def admit_write(self, s: int, arr: np.ndarray):
+        """Write one admitted tensor's three unfoldings into slot s of
+        the staging buffers (host-side transposes — the refill
+        executable then only scatters rows, never relays out a batch)."""
+        from repro.core.msc import MODE_PERMS
+
+        if self.dirty[s]:
+            for st in self.stage:
+                st[s] = 0
+        for j, perm in enumerate(MODE_PERMS):
+            t = np.transpose(arr, perm)
+            self.stage[j][s, :t.shape[0], :t.shape[1], :t.shape[2]] = t
+        self.dirty[s] = True
+
+    @property
+    def live(self) -> int:
+        return sum(r is not None for r in self.slot_req)
+
+    @property
+    def free(self) -> List[int]:
+        return [s for s, r in enumerate(self.slot_req) if r is None]
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or self.live > 0
+
+
+class MSCContinuousEngine:
+    """Continuous-batching MSC serving (DESIGN.md §7.7) — the MSC
+    analogue of an LLM engine's decode loop.
+
+    Where `MSCServeEngine` runs a static microbatch to completion in one
+    dispatch (batch-max lockstep: one slow-converging request holds all
+    B slots, and new arrivals wait for the next assembly), this engine
+    executes in *gate chunks*: each `step()` advances every slot's three
+    mode eigensolves by `power_check_every` sweeps through one resumable
+    chunk-step executable over persistent device state; slots whose
+    request finished are evicted at the next tick's refill executable,
+    which finalizes their results (similarity epilogue + extraction from
+    the frozen iterates — deferring the link-bound epilogue off the
+    per-chunk path), compacts live state, and admits queued requests
+    into the freed slots.  Two AOT executables per bucket, both cached —
+    a warm bucket performs zero retraces/recompiles across an arbitrary
+    arrival/eviction interleaving.
+
+    Scheduler policy knobs:
+      refill_min_free — batch refills: only repack once this many slots
+        are free (a repack dispatch touches the whole slot table, so
+        admitting one request at a time wastes dispatches under load).
+      max_queue_chunks — starvation bound: once the oldest queued
+        request has waited this many chunks, refill at the next free
+        slot regardless of refill_min_free.
+      placement — where admitted requests land: "compact" moves live
+        slots to the front (slot order = admission order, the LLM
+        engine's compaction), "stable" leaves live slots in place and
+        fills holes.  Per-request results are invariant to the choice —
+        every computation keeps the leading slot dim — which
+        tests/test_msc_continuous.py pins by permuting it.
+      chunks_per_step — gate chunks fused per dispatch (coarser
+        eviction granularity, fewer dispatches; sweep counts and
+        results are unchanged because probes stay at check_every
+        boundaries).
+
+    `run(tensors)` serves a closed batch; `submit()` + `step()` expose
+    the decode loop for streaming arrivals (launch/msc_serve.py).
+    """
+
+    def __init__(self, mesh: Mesh, cfg: MSCConfig, *, slots: int = 8,
+                 bucket_quantum: int = 8, dtype=jnp.float32,
+                 axis_name=None, inner_axis: Optional[str] = None,
+                 chunks_per_step: int = 1, refill_min_free: int = 1,
+                 max_queue_chunks: int = 8, placement: str = "compact"):
+        if slots < 1:
+            raise ValueError(f"slots must be >= 1, got {slots}")
+        if placement not in ("compact", "stable"):
+            raise ValueError(f"unknown placement {placement!r}; "
+                             f"expected 'compact' or 'stable'")
+        if cfg.power_tol <= 0.0:
+            raise ValueError("continuous batching needs the adaptive gate "
+                             "(cfg.power_tol > 0); without it every slot "
+                             "runs to the cap and eviction never helps")
+        self.mesh = mesh
+        self.cfg = cfg
+        self.slots = int(slots)
+        self.dtype = jnp.dtype(dtype)
+        # clamp to the table size: a threshold no drain can reach would
+        # deadlock admission (the starvation clock only advances while
+        # chunks run)
+        self.refill_min_free = min(max(1, int(refill_min_free)),
+                                   self.slots)
+        self.max_queue_chunks = int(max_queue_chunks)
+        self.placement = placement
+        self._plan = MSCChunkPlan(mesh, cfg, axis_name=axis_name,
+                                  inner_axis=inner_axis,
+                                  chunks_per_step=chunks_per_step)
+        self._quantum = _bucket_quantum(mesh, inner_axis, bucket_quantum)
+        self._cache: Dict[Tuple, Tuple] = {}
+        self._tables: Dict[Tuple[int, int, int], _SlotTable] = {}
+        self._pending: Dict[int, Tuple[np.ndarray, Tuple[int, int, int]]] = {}
+        self._next_rid = 0
+        self._stats = ServeStats()
+
+    # ---- bucketing / cache -------------------------------------------
+    def bucket_of(self, shape: Sequence[int]) -> Tuple[int, int, int]:
+        """Bucket = each dim rounded up to the engine quantum."""
+        return _bucket_of(shape, self._quantum)
+
+    @property
+    def stats(self) -> ServeStats:
+        return self._stats
+
+    def _bump(self, **deltas):
+        self._stats = dataclasses.replace(
+            self._stats, **{k: getattr(self._stats, k) + v
+                            for k, v in deltas.items()})
+
+    def _executables(self, bucket):
+        """(chunk-step, refill) AOT executables for one bucket — the
+        only two programs a bucket ever runs (zero-retrace contract)."""
+        key = (bucket, self.slots, str(self.dtype),
+               tuple(self.mesh.shape.items()), self.cfg,
+               self._plan.chunks_per_step)
+        entry = self._cache.get(key)
+        if entry is not None:
+            self._bump(cache_hits=1)
+            return entry
+        B = self.slots
+        blocks_s, carries_s = self._plan.state_structs(bucket, B, self.dtype)
+        i32 = jnp.int32
+        dims_s = jax.ShapeDtypeStruct((B, 3), i32)
+        step = jax.jit(self._plan.build_step()).lower(
+            blocks_s, carries_s).compile()
+        bsh = self._plan._block_sharding()
+        stage_s = tuple(jax.ShapeDtypeStruct(sh, self.dtype, sharding=bsh)
+                        for sh in self._plan.mode_shapes(bucket, B))
+        refill = jax.jit(self._plan.build_refill()).lower(
+            blocks_s, carries_s, dims_s, stage_s, dims_s,
+            jax.ShapeDtypeStruct((B,), jnp.bool_),
+            jax.ShapeDtypeStruct((B,), jnp.bool_),
+            jax.ShapeDtypeStruct((B,), i32)).compile()
+        entry = (step, refill)
+        self._cache[key] = entry
+        self._bump(compiles=2)
+        return entry
+
+    def _table(self, bucket) -> _SlotTable:
+        tb = self._tables.get(bucket)
+        if tb is None:
+            blocks, carries = self._plan.init_state(bucket, self.slots,
+                                                    self.dtype)
+            tb = _SlotTable(bucket, blocks, carries, self.slots, self.dtype,
+                            self._plan.mode_shapes(bucket, self.slots))
+            tb.zero_stage = self._plan.zero_stage(bucket, self.slots,
+                                                  self.dtype)
+            self._tables[bucket] = tb
+        return tb
+
+    # ---- the decode loop ---------------------------------------------
+    def submit(self, tensor) -> int:
+        """Queue one request; returns its id (the key `step()` results
+        come back under)."""
+        arr = np.asarray(tensor, self.dtype)
+        bucket = self.bucket_of(arr.shape)
+        rid = self._next_rid
+        self._next_rid += 1
+        self._pending[rid] = (arr, bucket)
+        tb = self._table(bucket)
+        tb.queue.append((rid, tb.chunk))
+        self._bump(requests=1)
+        return rid
+
+    def has_work(self) -> bool:
+        return any(tb.has_work() for tb in self._tables.values())
+
+    def step(self) -> Dict[int, MSCResult]:
+        """One scheduler tick on every bucket with work: admit (policy
+        permitting), advance one gate chunk, evict finished slots.
+        Returns the requests that finished this tick — the ONLY copy
+        (the engine retains nothing, so a long-running decode loop
+        doesn't accumulate served results)."""
+        finished: Dict[int, MSCResult] = {}
+        for tb in self._tables.values():
+            if tb.has_work():
+                finished.update(self._step_table(tb))
+        return finished
+
+    def run(self, tensors: Sequence) -> List[MSCResult]:
+        """Serve a closed set of requests to completion, in order.
+
+        Drives step() until its own submissions finish; don't interleave
+        with an external submit()/step() loop — results step() hands out
+        while run() drains would be collected (and dropped) here."""
+        rids = [self.submit(t) for t in tensors]
+        got: Dict[int, MSCResult] = {}
+        while self.has_work() and not all(r in got for r in rids):
+            got.update(self.step())
+        return [got[r] for r in rids]
+
+    # ---- per-bucket tick ---------------------------------------------
+    def _should_admit(self, tb: _SlotTable, n_free: int) -> bool:
+        if not tb.queue or n_free == 0:
+            return False
+        if n_free >= self.refill_min_free:
+            return True
+        oldest_wait = tb.chunk - tb.queue[0][1]
+        return oldest_wait >= self.max_queue_chunks
+
+    def _permutation(self, tb: _SlotTable) -> np.ndarray:
+        """Slot permutation for the repack (new[s] = old[perm[s]])."""
+        if self.placement == "compact":
+            order = ([s for s, r in enumerate(tb.slot_req) if r is not None]
+                     + tb.free)
+            return np.asarray(order, np.int32)
+        return np.arange(self.slots, dtype=np.int32)
+
+    def _refill(self, tb: _SlotTable, refill_exec,
+                evict: List[int]) -> Dict[int, MSCResult]:
+        """Evict/finalize/repack dispatch: finalize results for `evict`
+        slots (pre-repack indices), free them, then permute + admit."""
+        old_dims = tb.dims.copy()
+        evict_rids = [(s, tb.slot_req[s]) for s in evict]
+        for s in evict:
+            tb.slot_req[s] = None
+        perm = self._permutation(tb)
+        tb.slot_req = [tb.slot_req[p] for p in perm]
+        tb.dims = tb.dims[perm]
+        tb.fin = tb.fin[perm]
+        new_dims = np.tile(np.int32(_FILLER_DIMS), (self.slots, 1))
+        take_new = np.zeros(self.slots, bool)
+        new_done = np.ones(self.slots, bool)
+        waited = 0
+        for s in tb.free:
+            if not tb.queue:
+                break
+            rid, submitted = tb.queue.popleft()
+            arr, _ = self._pending.pop(rid)
+            tb.admit_write(s, arr)
+            new_dims[s] = arr.shape
+            take_new[s] = True
+            new_done[s] = False
+            tb.slot_req[s] = rid
+            tb.dims[s] = arr.shape
+            tb.fin[s] = False
+            waited += tb.chunk - submitted
+        # eviction-only repack: reuse the device-resident zero staging
+        # so no staging bytes cross the host boundary
+        stage = tb.stage if take_new.any() else tb.zero_stage
+        tb.blocks, tb.carries, results = refill_exec(
+            tb.blocks, tb.carries, old_dims, stage, new_dims,
+            take_new, new_done, perm)
+        self._bump(refills=1, dispatches=1, queue_wait_chunks=waited,
+                   evictions=len(evict_rids))
+        out: Dict[int, MSCResult] = {}
+        if evict_rids:
+            host = jax.tree.map(np.asarray, results)
+            for s, rid in evict_rids:
+                out[rid] = _trim_request(
+                    host, s, tuple(int(x) for x in old_dims[s]))
+        return out
+
+    def _step_table(self, tb: _SlotTable) -> Dict[int, MSCResult]:
+        step_exec, refill_exec = self._executables(tb.bucket)
+        # evict slots the last chunk finished + admit queued arrivals —
+        # one repack dispatch covers both (and finalizes the evicted
+        # slots' results from their frozen iterates)
+        evict = [s for s in range(self.slots)
+                 if tb.fin[s] and tb.slot_req[s] is not None]
+        out: Dict[int, MSCResult] = {}
+        if evict or self._should_admit(tb, len(tb.free) + len(evict)):
+            out = self._refill(tb, refill_exec, evict)
+        if tb.live > 0:
+            live = tb.live
+            tb.carries, finished = step_exec(tb.blocks, tb.carries)
+            tb.fin = np.asarray(finished)
+            tb.chunk += 1
+            self._bump(chunk_steps=1, dispatches=1,
+                       slot_chunks=self.slots, busy_slot_chunks=live)
+        return out
