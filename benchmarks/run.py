@@ -10,6 +10,8 @@
   inner_shard         (new) 2-D (slice,inner) memory/latency (DESIGN.md §7.5)
   msc_serving         (new) batched vs looped request serving (DESIGN.md §7.6)
   msc_continuous      (new) continuous vs static batching (DESIGN.md §7.7)
+  msc_faults          (new) checkpoint overhead + crash/elastic recovery
+                      (DESIGN.md §7.8)
 
 Usage:
   PYTHONPATH=src python -m benchmarks.run            # CPU-feasible sizes
@@ -30,9 +32,9 @@ from .common import print_rows, save_rows
 
 ALL = ("fig4_quality", "fig5_strong_scaling", "fig6_data_scaling",
        "fig8_comm", "kernel_bench", "power_iter_bench", "ring_epilogue",
-       "inner_shard", "msc_serving", "msc_continuous")
+       "inner_shard", "msc_serving", "msc_continuous", "msc_faults")
 QUICK = ("power_iter_bench", "kernel_bench", "ring_epilogue", "inner_shard",
-         "msc_serving", "msc_continuous")
+         "msc_serving", "msc_continuous", "msc_faults")
 
 
 def main(argv=None) -> int:

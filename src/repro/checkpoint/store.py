@@ -2,11 +2,22 @@
 
 Design (for 1000+ nodes, exercised here single-host):
   * layout: <dir>/step_<k>/ {manifest.json, leaf_<i>.npy…}
-  * atomic commit: write into step_<k>.tmp, fsync, then os.rename —
-    a crashed writer never leaves a half checkpoint that restore would
-    pick up.
+  * atomic commit: every leaf writes to a `.tmp` sibling and
+    `os.replace`s into place; the whole step dir is itself written as
+    step_<k>.tmp and renamed last — a crashed writer never leaves a
+    half checkpoint that restore would pick up, at either granularity.
+    Only the manifest fsyncs (the commit record); leaf durability rides
+    the SHA check + degrade-to-previous on restore, keeping the write
+    off the serving critical path.
   * integrity: per-leaf SHA-256 in the manifest, verified on restore;
-    corrupt/partial checkpoints are skipped by `latest_step`.
+    corrupt/partial checkpoints are skipped by `latest_step`, and the
+    restore entry points (`restorable_steps` / `restore_latest`)
+    skip-and-warn past a SHA-failed step to the previous one instead
+    of raising on first read.
+  * self-describing restore: `load_leaves` rebuilds the flat leaf list
+    from the manifest alone (shape/dtype live in the .npy headers), so
+    a reader needs no `like` pytree — the serving engine's
+    checkpoint schema (DESIGN.md §7.8) rides on this.
   * async save: `CheckpointManager(async_save=True)` snapshots to host
     memory (device_get) synchronously — a few ms — and writes in a
     background thread so the train loop keeps stepping.
@@ -25,7 +36,8 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Dict, Optional
+import warnings
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -38,6 +50,25 @@ def _leaf_paths(tree) -> Any:
 
 def _sha(arr: np.ndarray) -> str:
     return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()
+
+
+def _write_atomic(path: str, writer, fsync: bool = True):
+    """Write a file via a `.tmp` sibling + os.replace, so a crash
+    mid-write never leaves a torn file under the final name.
+
+    fsync=False skips the per-file fsync: a process crash (SIGKILL,
+    preemption) cannot tear the data — the page cache survives — and a
+    machine crash that does is caught by the manifest SHA check on
+    restore, which degrades to the previous step.  Leaf files take this
+    path (it is ~10x cheaper on many-MB checkpoints); the manifest — the
+    step's commit record — always fsyncs."""
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        writer(f)
+        f.flush()
+        if fsync:
+            os.fsync(f.fileno())
+    os.replace(tmp, path)
 
 
 def save_checkpoint(directory: str, step: int, tree, extra: Optional[Dict] = None):
@@ -58,46 +89,127 @@ def save_checkpoint(directory: str, step: int, tree, extra: Optional[Dict] = Non
     for i, leaf in enumerate(leaves):
         arr = np.asarray(jax.device_get(leaf))
         path = os.path.join(tmp, f"leaf_{i:05d}.npy")
-        np.save(path, arr)
+        _write_atomic(path, lambda f, a=arr: np.save(f, a), fsync=False)
         manifest["leaves"].append({
             "i": i, "shape": list(arr.shape), "dtype": str(arr.dtype),
             "sha256": _sha(arr),
         })
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
-        f.flush()
-        os.fsync(f.fileno())
+    _write_atomic(os.path.join(tmp, "manifest.json"),
+                  lambda f: f.write(json.dumps(manifest).encode()))
     if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)  # atomic commit
+        # never rmtree the live step before its replacement is in place:
+        # park it under a .tmp-suffixed name (invisible to latest_step)
+        # so a crash between the renames still leaves older steps intact
+        old = final + ".old.tmp"
+        if os.path.exists(old):
+            shutil.rmtree(old)
+        os.rename(final, old)
+        os.rename(tmp, final)  # atomic commit
+        shutil.rmtree(old, ignore_errors=True)
+    else:
+        os.rename(tmp, final)  # atomic commit
     return final
 
 
-def _valid(path: str) -> bool:
+def _valid(path: str, verify_sha: bool = False) -> bool:
     man = os.path.join(path, "manifest.json")
     if not os.path.isfile(man):
         return False
     try:
         with open(man) as f:
             m = json.load(f)
-        return all(
-            os.path.isfile(os.path.join(path, f"leaf_{e['i']:05d}.npy"))
-            for e in m["leaves"])
-    except (json.JSONDecodeError, KeyError):
+        for e in m["leaves"]:
+            leaf = os.path.join(path, f"leaf_{e['i']:05d}.npy")
+            if not os.path.isfile(leaf):
+                return False
+            if verify_sha and _sha(np.load(leaf)) != e["sha256"]:
+                return False
+        return True
+    except (json.JSONDecodeError, KeyError, ValueError, OSError):
         return False
+
+
+def _all_steps(directory: str) -> List[int]:
+    if not os.path.isdir(directory):
+        return []
+    return sorted(int(name[5:]) for name in os.listdir(directory)
+                  if name.startswith("step_") and not name.endswith(".tmp"))
 
 
 def latest_step(directory: str) -> Optional[int]:
     """Newest *valid* checkpoint step (skips .tmp and corrupt dirs)."""
-    if not os.path.isdir(directory):
-        return None
-    steps = []
-    for name in os.listdir(directory):
-        if name.startswith("step_") and not name.endswith(".tmp"):
-            path = os.path.join(directory, name)
-            if _valid(path):
-                steps.append(int(name[5:]))
+    steps = [s for s in _all_steps(directory)
+             if _valid(os.path.join(directory, f"step_{s:08d}"))]
     return max(steps) if steps else None
+
+
+def restorable_steps(directory: str, verify_sha: bool = True) -> List[int]:
+    """Checkpoint steps newest-first that pass validation, warning and
+    skipping corrupt ones instead of raising on first read.
+
+    verify_sha=True reads every leaf and checks its manifest SHA-256 —
+    the thorough (and expensive) walk; False is the cheap existence
+    check `latest_step` does.  Restore paths iterate this list so one
+    bit-rotted step degrades to the previous checkpoint, not an
+    unrecoverable engine."""
+    out = []
+    for step in reversed(_all_steps(directory)):
+        path = os.path.join(directory, f"step_{step:08d}")
+        if _valid(path, verify_sha=verify_sha):
+            out.append(step)
+        else:
+            warnings.warn(f"skipping corrupt checkpoint {path} "
+                          f"(failed {'SHA' if verify_sha else 'manifest'} "
+                          f"verification)")
+    return out
+
+
+def latest_restorable(directory: str, verify_sha: bool = True) -> Optional[int]:
+    """Newest step that passes (by default SHA-deep) verification."""
+    steps = restorable_steps(directory, verify_sha=verify_sha)
+    return steps[0] if steps else None
+
+
+def checkpoint_extra(directory: str, step: int) -> Dict:
+    """The `extra` metadata dict of one step — a cheap manifest read
+    (no leaf IO), used by elastic restore to learn the checkpointed
+    mesh shape before deciding the new one."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f).get("extra", {})
+
+
+def load_leaves(directory: str, step: int,
+                verify: bool = True) -> Tuple[List[np.ndarray], Dict]:
+    """(flat leaf list, extra) of one step, with no `like` structure:
+    shapes/dtypes come from the .npy files themselves (fully-addressable
+    host arrays).  Raises IOError on a SHA mismatch when verify=True —
+    callers wanting degrade-to-previous semantics catch it and walk
+    `restorable_steps`."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves = []
+    for e in manifest["leaves"]:
+        arr = np.load(os.path.join(path, f"leaf_{e['i']:05d}.npy"))
+        if verify and _sha(arr) != e["sha256"]:
+            raise IOError(
+                f"checkpoint leaf {e['i']} of step {step} failed "
+                f"integrity check")
+        leaves.append(arr)
+    return leaves, manifest.get("extra", {})
+
+
+def gc_checkpoints(directory: str, keep: int):
+    """Delete all but the newest `keep` steps (and any stale .tmp dirs)."""
+    if not os.path.isdir(directory):
+        return
+    for s in _all_steps(directory)[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"),
+                      ignore_errors=True)
+    for name in os.listdir(directory):
+        if name.startswith("step_") and name.endswith(".tmp"):
+            shutil.rmtree(os.path.join(directory, name), ignore_errors=True)
 
 
 def restore_checkpoint(directory: str, step: int, like,
@@ -105,27 +217,21 @@ def restore_checkpoint(directory: str, step: int, like,
     """Restore into the structure of `like` (a pytree of arrays or
     ShapeDtypeStructs).  shardings: optional matching pytree of
     NamedShardings — re-shards onto the current mesh (elastic restart)."""
-    path = os.path.join(directory, f"step_{step:08d}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    raw, extra = load_leaves(directory, step, verify=verify)
     leaves, treedef = jax.tree.flatten(like)
-    assert len(leaves) == len(manifest["leaves"]), \
-        f"checkpoint has {len(manifest['leaves'])} leaves, model {len(leaves)}"
+    assert len(leaves) == len(raw), \
+        f"checkpoint has {len(raw)} leaves, model {len(leaves)}"
     shard_leaves = (jax.tree.flatten(shardings)[0] if shardings is not None
                     else [None] * len(leaves))
     out = []
-    for i, (leaf, shd) in enumerate(zip(leaves, shard_leaves)):
-        arr = np.load(os.path.join(path, f"leaf_{i:05d}.npy"))
-        meta = manifest["leaves"][i]
-        if verify and _sha(arr) != meta["sha256"]:
-            raise IOError(f"checkpoint leaf {i} failed integrity check")
+    for i, (leaf, shd, arr) in enumerate(zip(leaves, shard_leaves, raw)):
         expect = tuple(getattr(leaf, "shape", arr.shape))
         if tuple(arr.shape) != expect:
             raise ValueError(
                 f"leaf {i}: checkpoint shape {arr.shape} != model {expect}")
         out.append(jax.device_put(arr, shd) if shd is not None
                    else jax.numpy.asarray(arr))
-    return jax.tree.unflatten(treedef, out), manifest.get("extra", {})
+    return jax.tree.unflatten(treedef, out), extra
 
 
 @dataclasses.dataclass
@@ -158,19 +264,19 @@ class CheckpointManager:
             self._thread = None
 
     def _gc(self):
-        if not os.path.isdir(self.directory):
-            return
-        steps = sorted(
-            int(n[5:]) for n in os.listdir(self.directory)
-            if n.startswith("step_") and not n.endswith(".tmp"))
-        for s in steps[:-self.keep]:
-            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
-                          ignore_errors=True)
+        gc_checkpoints(self.directory, self.keep)
 
     def restore_latest(self, like, shardings=None):
+        """Restore the newest step that passes verification, skipping
+        (with a warning) steps whose leaves fail their SHA check —
+        degrade-to-previous instead of raising on first read."""
         self.wait()
-        step = latest_step(self.directory)
-        if step is None:
-            return None, None, None
-        tree, extra = restore_checkpoint(self.directory, step, like, shardings)
-        return step, tree, extra
+        for step in restorable_steps(self.directory, verify_sha=False):
+            try:
+                tree, extra = restore_checkpoint(self.directory, step,
+                                                 like, shardings)
+                return step, tree, extra
+            except (IOError, ValueError) as e:
+                warnings.warn(f"checkpoint step {step} failed restore "
+                              f"({e}); trying the previous step")
+        return None, None, None

@@ -522,6 +522,54 @@ class MSCChunkPlan:
             carries.append(jax.tree_util.tree_unflatten(treedef, filled))
         return blocks, tuple(carries)
 
+    # ---- checkpoint export / rebuild-from-carry (DESIGN.md §7.8) ------
+    def export_carries(self, bucket, carries):
+        """Canonical host form of a bucket's three mode carries — the
+        mesh-independent payload the engine checkpoints.  Each mode
+        trims its padded slice dim back to the true bucket size (see
+        ModeSchedule.export_carry), so the export restores onto any
+        `msc_mesh_shape` factorization."""
+        out = []
+        for j, carry in enumerate(carries):
+            m = bucket[MODE_PERMS[j][0]]
+            out.append(self.sched.export_carry(carry, m))
+        return out
+
+    def import_carries(self, bucket, host_carries):
+        """Device-resident carries for the CURRENT mesh from a canonical
+        host export (reshard-on-restore): re-pad each mode's slice dim
+        to this mesh's padded size and device_put under this mesh's
+        carry shardings."""
+        out = []
+        for j, host in enumerate(host_carries):
+            m, r, _ = (bucket[i] for i in MODE_PERMS[j])
+            m_pad, _ = self.sched.pad_amounts(m, r)
+            out.append(self.sched.import_carry(host, m_pad))
+        return tuple(out)
+
+    def rebuild_blocks(self, bucket, B: int, dtype, arrs):
+        """Device blocks for the current mesh from per-slot host tensors
+        — the restore path's analogue of admission staging.  `arrs` is a
+        length-B list, None for slots without a live request (their rows
+        stay zero, exactly the state the running engine's scatter left
+        them in).  Writing the same three MODE_PERMS transposes into the
+        same zero-padded buffers the engine staged at admission makes
+        the rebuilt blocks byte-identical to the checkpointed engine's
+        device state — the root of the bit-identical-resume contract."""
+        import numpy as np
+
+        bsh = self._block_sharding()
+        blocks = []
+        for j, shape in enumerate(self.mode_shapes(bucket, B)):
+            host = np.zeros(shape, dtype)
+            for s, arr in enumerate(arrs):
+                if arr is None:
+                    continue
+                t = np.transpose(arr, MODE_PERMS[j])
+                host[s, :t.shape[0], :t.shape[1], :t.shape[2]] = t
+            blocks.append(jax.device_put(host, bsh))
+        return tuple(blocks)
+
     # ---- the two executables -----------------------------------------
     def build_step(self):
         """(blocks, carries) → (carries', finished).

@@ -489,6 +489,62 @@ class ModeSchedule:
             iters=jnp.zeros((B, S), jnp.int32),
             done=jnp.broadcast_to(jnp.asarray(done)[:, None], (B, S)))
 
+    def export_carry(self, carry, m: int):
+        """Canonical mesh-independent host form of one mode's persistent
+        carry (checkpointing, DESIGN.md §7.8): fully-addressable numpy
+        arrays with the slice dim trimmed to the true bucket size m and
+        the per-request verdict columns collapsed to one value.
+
+        Trimming is lossless: slice rows beyond m are zero padding whose
+        v/λ/resid stay exactly zero through every chunk (zero slices
+        give zero residual and never gate), so `import_carry` re-pads
+        with zeros for ANY target mesh without perturbing live slots.
+        iters/done ride at (B, S) with identical values in all S shard
+        columns (the gate pmax-reduces over the slice axes); column 0 is
+        the canonical copy."""
+        import numpy as np
+
+        g = lambda x: np.asarray(jax.device_get(x))  # noqa: E731
+        from .power_iter import SolveState
+
+        return SolveState(v=g(carry.v)[:, :m], lam=g(carry.lam)[:, :m],
+                          resid=g(carry.resid)[:, :m],
+                          iters=g(carry.iters)[:, 0],
+                          done=g(carry.done)[:, 0])
+
+    def import_carry(self, host, m_pad: int):
+        """Device-resident carry for THIS schedule's mesh from a
+        canonical host export: re-pad the slice dim to this mesh's
+        padded size, re-broadcast the per-request verdicts to this
+        mesh's shard count, and device_put under `batched_carry_specs`
+        — the reshard-on-restore step that makes a solve checkpointed
+        on one `msc_mesh_shape` factorization resumable on another."""
+        import numpy as np
+        from jax.sharding import NamedSharding
+
+        from .power_iter import SolveState
+
+        B, m = host.lam.shape
+        S = self.slice_shards
+
+        def padm(a):
+            if m_pad == m:
+                return a
+            out = np.zeros((B, m_pad) + a.shape[2:], a.dtype)
+            out[:, :m] = a
+            return out
+
+        specs = self.batched_carry_specs
+        sh = lambda s: NamedSharding(self.mesh, s)  # noqa: E731
+        bcast = lambda a: np.ascontiguousarray(  # noqa: E731
+            np.broadcast_to(np.asarray(a)[:, None], (B, S)))
+        return SolveState(
+            v=jax.device_put(padm(host.v), sh(specs.v)),
+            lam=jax.device_put(padm(host.lam), sh(specs.lam)),
+            resid=jax.device_put(padm(host.resid), sh(specs.resid)),
+            iters=jax.device_put(bcast(host.iters), sh(specs.iters)),
+            done=jax.device_put(bcast(host.done), sh(specs.done)))
+
     def chunk_local(self, block, carry, steps: int = 1):
         """Per-device chunk-step body for one mode: `steps` gate chunks
         over the local carry view — the resumable analogue of

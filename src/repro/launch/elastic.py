@@ -41,6 +41,56 @@ def make_elastic_mesh(prefer_model: int = 1,
     return Mesh(np.asarray(devices).reshape(data, model), ("data", "model"))
 
 
+# ---- MSC serving analogue (DESIGN.md §7.8) ---------------------------
+
+def best_msc_shape(n_devices: int, prefer_inner: int = 1) -> Tuple[int, int]:
+    """Largest (slice, inner) factorization of the live device count.
+
+    Same policy as best_mesh_shape: keep the inner (row-shard) axis at
+    `prefer_inner` when divisible, else the largest divisor ≤ it — the
+    slice axis absorbs the rest.  A solve checkpointed on (8,1) restores
+    onto (4,2) or (4,1) this way when half the devices disappear."""
+    inner = min(max(1, prefer_inner), n_devices)
+    while n_devices % inner:
+        inner -= 1
+    return n_devices // inner, inner
+
+
+def make_elastic_msc_mesh(prefer_inner: int = 1,
+                          devices: Optional[list] = None) -> Mesh:
+    """MSC flat mesh over whatever devices are live right now."""
+    from repro.launch.mesh import make_msc_mesh
+
+    devices = jax.devices() if devices is None else devices
+    shape = best_msc_shape(len(devices), prefer_inner)
+    return make_msc_mesh("flat", devices=devices, shape=shape)
+
+
+def restore_msc_engine(directory: str, *, devices: Optional[list] = None,
+                       **restore_kwargs):
+    """Restore an MSCContinuousEngine onto the live device set.
+
+    The elastic-restart entry point: peeks the newest restorable
+    checkpoint's manifest for the mesh shape the engine was checkpointed
+    under, keeps that inner-axis degree as the preference, and re-derives
+    the mesh from the devices actually visible now — so the same call
+    works whether the restart kept 8 devices or came back with 4."""
+    from repro.checkpoint.store import checkpoint_extra, latest_restorable
+    from repro.serving.msc_engine import MSCContinuousEngine
+
+    step = latest_restorable(directory, verify_sha=False)
+    if step is None:
+        raise FileNotFoundError(
+            f"no restorable engine checkpoint under {directory!r}")
+    prefer_inner = 1
+    for axis, size in checkpoint_extra(directory, step).get("mesh", []):
+        if axis == "inner":
+            prefer_inner = int(size)
+    mesh = make_elastic_msc_mesh(prefer_inner, devices)
+    return MSCContinuousEngine.restore(directory, mesh=mesh,
+                                       **restore_kwargs)
+
+
 @dataclasses.dataclass
 class ElasticTrainer:
     """Wraps TrainLoop construction so a restart re-derives everything

@@ -111,8 +111,21 @@ def main(argv=None) -> int:
     ap.add_argument("--slow-every", type=int, default=0,
                     help="every Nth request is a near-noise slow "
                          "converger (0 = homogeneous stream)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="continuous mode: checkpoint engine state here "
+                         "every --ckpt-every gate chunks (DESIGN.md §7.8)")
+    ap.add_argument("--ckpt-every", type=int, default=8,
+                    help="gate chunks between checkpoints")
+    ap.add_argument("--restore", default=None, metavar="DIR",
+                    help="continuous mode: restore the engine from the "
+                         "newest checkpoint under DIR onto the live "
+                         "device set (elastic), drain its in-flight "
+                         "requests, then serve the stream (implies "
+                         "--continuous)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.restore:
+        args.continuous = True
 
     sizes = [int(s) for s in args.sizes.split(",")]
     shape = (tuple(int(s) for s in args.mesh_shape.split(","))
@@ -165,10 +178,26 @@ def main(argv=None) -> int:
     if args.continuous:
         print(f"\ncontinuous decode loop: Poisson arrivals "
               f"{args.arrival_rate}/tick, slow-every={args.slow_every}")
-        ceng = MSCContinuousEngine(
-            mesh, cfg, slots=args.slots or args.max_batch,
-            bucket_quantum=args.bucket_quantum,
-            chunks_per_step=args.chunks_per_step)
+        if args.restore:
+            from repro.launch.elastic import restore_msc_engine
+
+            ceng = restore_msc_engine(
+                args.restore,
+                checkpoint_dir=args.checkpoint_dir or args.restore,
+                ckpt_every_chunks=args.ckpt_every)
+            drained = {}
+            while ceng.has_work():
+                drained.update(ceng.step())
+            print(f"restored from {args.restore} onto mesh "
+                  f"{dict(ceng.mesh.shape)}; drained {len(drained)} "
+                  f"in-flight request(s)")
+        else:
+            ceng = MSCContinuousEngine(
+                mesh, cfg, slots=args.slots or args.max_batch,
+                bucket_quantum=args.bucket_quantum,
+                chunks_per_step=args.chunks_per_step,
+                checkpoint_dir=args.checkpoint_dir,
+                ckpt_every_chunks=args.ckpt_every)
         probes = {}  # warm every bucket's executables off the clock
         for t in tensors:
             probes.setdefault(ceng.bucket_of(t.shape), t)
@@ -184,6 +213,11 @@ def main(argv=None) -> int:
               f"{cs.evictions} evictions, {cs.refills} refills, "
               f"mean queue wait "
               f"{cs.queue_wait_chunks / max(cs.requests, 1):.2f} chunks")
+        fs = ceng.stats  # cumulative — restores predate the base snapshot
+        print(f"  fault tolerance: {fs.checkpoints_written} checkpoints, "
+              f"{fs.restores} restores, {fs.retries} retries, "
+              f"{fs.shed_requests} shed, "
+              f"{fs.fallback_requests} fallback-served")
         for i in (0, len(tensors) - 1):
             sw = [int(results[i][j].power_iters_run) for j in range(3)]
             print(f"  req {i}: sweeps={sw}")

@@ -1,2 +1,4 @@
 from .engine import ServeEngine, build_serve_steps
+from .faults import (FaultInjector, FaultPlan, InjectedFault, LoadShedError,
+                     corrupt_checkpoint_leaf, fail_all_from)
 from .msc_engine import MSCContinuousEngine, MSCServeEngine, ServeStats

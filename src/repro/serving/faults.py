@@ -1,0 +1,132 @@
+"""Deterministic failure injection for fault-tolerant MSC serving
+(DESIGN.md §7.8).
+
+The continuous engine has exactly two device dispatch sites per bucket
+(chunk-step and refill) plus the checkpoint write; `FaultInjector`
+counts them and fires the faults a `FaultPlan` schedules, so every
+failure mode the recovery machinery handles can be reproduced
+deterministically in tests and benches:
+
+  * transient dispatch failure — `fail_chunks` / `fail_refills` raise
+    `InjectedFault` at the named 0-based dispatch indices.  Retried
+    dispatches advance the counter too, so a run of consecutive indices
+    models a persistent failure that exhausts `max_retries` and drives
+    the engine into its sequential-oracle fallback.
+  * hard crash — `kill_chunk` / `kill_after_chunk` / `kill_refill`
+    SIGKILL the process at a dispatch boundary (between gate chunks /
+    mid-refill).  No cleanup runs, exactly like a preempted node; the
+    kill-and-resume tests assert the on-disk checkpoint restores to
+    bit-identical results.
+  * corrupted checkpoint leaf — `corrupt_checkpoint_leaf` flips bytes
+    in a committed leaf file WITHOUT updating the manifest SHA, so the
+    restore path must skip-and-warn to the previous step.
+  * device-count shrink — not injected here: restoring with
+    `launch/elastic.py:restore_msc_engine` onto a truncated device list
+    IS the injection (the checkpoint is mesh-independent by
+    construction).
+
+Engine recovery errors (`LoadShedError`) live here too so policy code
+and tests import them from one place.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import signal
+from typing import Optional, Sequence, Tuple
+
+
+class InjectedFault(RuntimeError):
+    """A planted transient dispatch failure (retryable by policy)."""
+
+
+class LoadShedError(RuntimeError):
+    """submit() rejected because the engine is recovering from a
+    dispatch failure — resubmit after recovery (the engine sheds load
+    instead of growing an unbounded queue behind a sick bucket)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Which dispatches fail, and how.  Indices are 0-based per-kind
+    dispatch counters over the engine's lifetime (chunk-step and refill
+    count separately; checkpoint writes have their own counter)."""
+
+    fail_chunks: Tuple[int, ...] = ()
+    fail_refills: Tuple[int, ...] = ()
+    kill_chunk: Optional[int] = None        # SIGKILL before chunk dispatch #k
+    kill_after_chunk: Optional[int] = None  # SIGKILL after chunk #k returns
+    kill_refill: Optional[int] = None       # SIGKILL mid-refill (before
+    #                                         the repack dispatch commits)
+    kill_checkpoint: Optional[int] = None   # SIGKILL before ckpt write #k
+
+    def __post_init__(self):
+        object.__setattr__(self, "fail_chunks", tuple(self.fail_chunks))
+        object.__setattr__(self, "fail_refills", tuple(self.fail_refills))
+
+
+def _sigkill():
+    os.kill(os.getpid(), signal.SIGKILL)
+
+
+class FaultInjector:
+    """Counts the engine's dispatch sites and fires the planned faults.
+
+    Wire it in via `MSCContinuousEngine(..., fault_injector=...)`; the
+    engine consults `before(kind)` / `after(kind)` around every
+    dispatch.  Deterministic: same plan + same request stream ⇒ the
+    same fault at the same point, every run.
+    """
+
+    KINDS = ("chunk", "refill", "checkpoint")
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self.counts = {k: 0 for k in self.KINDS}
+
+    def before(self, kind: str):
+        """Called before dispatch #counts[kind]; may kill or raise."""
+        i = self.counts[kind]
+        kill = {"chunk": self.plan.kill_chunk,
+                "refill": self.plan.kill_refill,
+                "checkpoint": self.plan.kill_checkpoint}[kind]
+        if kill is not None and i == kill:
+            _sigkill()
+        fail = {"chunk": self.plan.fail_chunks,
+                "refill": self.plan.fail_refills,
+                "checkpoint": ()}[kind]
+        if i in fail:
+            self.counts[kind] = i + 1
+            raise InjectedFault(f"injected {kind} dispatch failure #{i}")
+        self.counts[kind] = i + 1
+
+    def after(self, kind: str):
+        """Called after dispatch #counts[kind]-1 returned."""
+        if kind == "chunk" and self.plan.kill_after_chunk is not None \
+                and self.counts[kind] - 1 == self.plan.kill_after_chunk:
+            _sigkill()
+
+
+def corrupt_checkpoint_leaf(directory: str, step: int, leaf_i: int = 0,
+                            offset: int = 128, nbytes: int = 8):
+    """Flip `nbytes` bytes of one committed leaf file in place without
+    touching the manifest — the resulting SHA mismatch is the
+    bit-rot/torn-write case the skip-and-warn restore path handles.
+    `offset` lands past the .npy header so the file still parses."""
+    path = os.path.join(directory, f"step_{step:08d}",
+                        f"leaf_{leaf_i:05d}.npy")
+    size = os.path.getsize(path)
+    offset = min(offset, max(0, size - nbytes))
+    with open(path, "r+b") as f:
+        f.seek(offset)
+        data = f.read(nbytes)
+        f.seek(offset)
+        f.write(bytes(b ^ 0xFF for b in data))
+    return path
+
+
+def fail_all_from(start: int, horizon: int = 10_000) -> Tuple[int, ...]:
+    """Index tuple modelling a PERSISTENT failure: every dispatch from
+    `start` on fails (retries re-fail), which drives the engine through
+    max_retries into its degrade-to-sequential fallback."""
+    return tuple(range(start, start + horizon))

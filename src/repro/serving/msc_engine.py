@@ -35,11 +35,26 @@ persistent device-resident eigensolver state advance in gate chunks,
 converged requests are evicted (and finalized) mid-flight, and freed
 slots refill from an admission queue — so a slow-converging request no
 longer parks B-1 slots at the batch-max lockstep exit.
+
+Fault tolerance (DESIGN.md §7.8): the continuous engine is crash-safe
+and mesh-elastic.  Every `ckpt_every_chunks` gate chunks it snapshots
+each bucket's slot table — the canonical (mesh-independent) host form
+of the three `SolveState` carries, the slot→request map, admitted
+tensors, the admission queue, and `ServeStats` — through
+`checkpoint/store.py` (atomic tmp+replace writes, per-leaf SHA).
+`MSCContinuousEngine.restore(directory)` rebuilds the engine on the
+CURRENT mesh (possibly a different `msc_mesh_shape` factorization) and
+resumes mid-solve; masks and realized sweep counts are bit-identical
+to the uninterrupted run.  Dispatch failures retry with exponential
+backoff, degrade to the sequential oracle after `max_retries`, and
+shed new submissions (`LoadShedError`) while a bucket is recovering.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+import time
+import warnings
 from collections import defaultdict, deque
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
@@ -48,9 +63,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+from repro.checkpoint.store import (gc_checkpoints, load_leaves,
+                                    restorable_steps, save_checkpoint)
 from repro.core.parallel import MSCChunkPlan, build_msc_batched
+from repro.core.power_iter import SolveState
 from repro.core.schedule import pad_to
 from repro.core.types import ModeResult, MSCConfig, MSCResult
+from repro.serving.faults import LoadShedError
 
 # filler requests must have ≥1 valid slice/column per mode: an all-zero
 # (1,1,1) request has zero residual (gate fires at the first probe) and
@@ -75,6 +94,18 @@ class ServeStats:
         occupancy the continuous scheduler exists to maximize.
       queue_wait_chunks — total chunks requests spent queued before
         admission (divide by `requests` for the mean wait).
+
+    Fault-tolerance counters (DESIGN.md §7.8):
+
+      checkpoints_written / restores — engine-state snapshots taken and
+        engines rebuilt from one.
+      retries — dispatch retries scheduled after a failure (each comes
+        with exponential backoff; `max_retries` of them in a row
+        triggers the sequential-oracle fallback).
+      shed_requests — submits rejected (LoadShedError) while a bucket
+        was recovering.
+      fallback_requests — requests served by the degrade-to-sequential
+        oracle after retries were exhausted.
     """
 
     requests: int = 0
@@ -88,6 +119,11 @@ class ServeStats:
     slot_chunks: int = 0
     busy_slot_chunks: int = 0
     queue_wait_chunks: int = 0
+    checkpoints_written: int = 0
+    restores: int = 0
+    retries: int = 0
+    shed_requests: int = 0
+    fallback_requests: int = 0
 
     @property
     def occupancy(self) -> float:
@@ -261,6 +297,13 @@ class _SlotTable:
         self.queue: Deque[Tuple[int, int]] = deque()  # (rid, submit_chunk)
         self.chunk = 0
         self.fin = np.zeros(slots, bool)  # last chunk's finished flags
+        # host copies of the live slots' tensors: the checkpoint payload
+        # blocks are rebuilt from (device blocks are a pure function of
+        # admitted tensors) and the fallback oracle's input
+        self.arrs: List[Optional[np.ndarray]] = [None] * slots
+        # recovery state (engine policy writes these)
+        self.retries = 0
+        self.retry_at = 0.0
         # reusable pre-unfolded staging buffers (one per mode); dirty[s]
         # marks slots whose regions hold a previous admission's bytes
         # and must be re-zeroed before the next write
@@ -329,6 +372,21 @@ class MSCContinuousEngine:
         results are unchanged because probes stay at check_every
         boundaries).
 
+    Fault-tolerance knobs (DESIGN.md §7.8):
+      checkpoint_dir — enable periodic checkpointing of the whole
+        engine state (None disables it); `restore(checkpoint_dir)`
+        rebuilds and resumes, on the same mesh or a different
+        `msc_mesh_shape` factorization (elastic restore).
+      ckpt_every_chunks — gate chunks between snapshots (across all
+        buckets); `checkpoint()` can also be called explicitly.
+      keep_checkpoints — keep-last-k GC of the checkpoint directory.
+      max_retries — consecutive dispatch retries before a bucket
+        degrades to the sequential oracle (`fallback_requests`).
+      retry_backoff_s / retry_backoff_max_s — exponential backoff
+        between retries (base doubling per attempt, capped).
+      fault_injector — a serving/faults.py FaultInjector consulted at
+        every dispatch site (tests/benches only).
+
     `run(tensors)` serves a closed batch; `submit()` + `step()` expose
     the decode loop for streaming arrivals (launch/msc_serve.py).
     """
@@ -337,7 +395,11 @@ class MSCContinuousEngine:
                  bucket_quantum: int = 8, dtype=jnp.float32,
                  axis_name=None, inner_axis: Optional[str] = None,
                  chunks_per_step: int = 1, refill_min_free: int = 1,
-                 max_queue_chunks: int = 8, placement: str = "compact"):
+                 max_queue_chunks: int = 8, placement: str = "compact",
+                 checkpoint_dir: Optional[str] = None,
+                 ckpt_every_chunks: int = 8, keep_checkpoints: int = 3,
+                 max_retries: int = 3, retry_backoff_s: float = 0.05,
+                 retry_backoff_max_s: float = 2.0, fault_injector=None):
         if slots < 1:
             raise ValueError(f"slots must be >= 1, got {slots}")
         if placement not in ("compact", "stable"):
@@ -362,11 +424,23 @@ class MSCContinuousEngine:
                                   inner_axis=inner_axis,
                                   chunks_per_step=chunks_per_step)
         self._quantum = _bucket_quantum(mesh, inner_axis, bucket_quantum)
+        self._quantum_base = int(bucket_quantum)  # mesh-independent (ckpt)
         self._cache: Dict[Tuple, Tuple] = {}
         self._tables: Dict[Tuple[int, int, int], _SlotTable] = {}
         self._pending: Dict[int, Tuple[np.ndarray, Tuple[int, int, int]]] = {}
         self._next_rid = 0
         self._stats = ServeStats()
+        # ---- fault tolerance (DESIGN.md §7.8) ----
+        self.checkpoint_dir = checkpoint_dir
+        self.ckpt_every_chunks = int(ckpt_every_chunks)
+        self.keep_checkpoints = int(keep_checkpoints)
+        self.max_retries = int(max_retries)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.retry_backoff_max_s = float(retry_backoff_max_s)
+        self._faults = fault_injector
+        self._recovering: set = set()   # buckets mid-retry (sheds load)
+        self._total_chunks = 0          # monotonic ckpt step id
+        self._chunks_since_ckpt = 0
 
     # ---- bucketing / cache -------------------------------------------
     def bucket_of(self, shape: Sequence[int]) -> Tuple[int, int, int]:
@@ -426,7 +500,16 @@ class MSCContinuousEngine:
     # ---- the decode loop ---------------------------------------------
     def submit(self, tensor) -> int:
         """Queue one request; returns its id (the key `step()` results
-        come back under)."""
+        come back under).  Raises LoadShedError while any bucket is
+        recovering from a dispatch failure: shedding load keeps the
+        queue from growing unboundedly behind a sick bucket (clients
+        resubmit after recovery)."""
+        if self._recovering:
+            self._bump(shed_requests=1)
+            raise LoadShedError(
+                f"engine is recovering from a dispatch failure on "
+                f"bucket(s) {sorted(self._recovering)}; resubmit after "
+                f"recovery")
         arr = np.asarray(tensor, self.dtype)
         bucket = self.bucket_of(arr.shape)
         rid = self._next_rid
@@ -450,6 +533,9 @@ class MSCContinuousEngine:
         for tb in self._tables.values():
             if tb.has_work():
                 finished.update(self._step_table(tb))
+        if (self.checkpoint_dir is not None and self.ckpt_every_chunks > 0
+                and self._chunks_since_ckpt >= self.ckpt_every_chunks):
+            self.checkpoint()
         return finished
 
     def run(self, tensors: Sequence) -> List[MSCResult]:
@@ -489,8 +575,10 @@ class MSCContinuousEngine:
         evict_rids = [(s, tb.slot_req[s]) for s in evict]
         for s in evict:
             tb.slot_req[s] = None
+            tb.arrs[s] = None
         perm = self._permutation(tb)
         tb.slot_req = [tb.slot_req[p] for p in perm]
+        tb.arrs = [tb.arrs[p] for p in perm]
         tb.dims = tb.dims[perm]
         tb.fin = tb.fin[perm]
         new_dims = np.tile(np.int32(_FILLER_DIMS), (self.slots, 1))
@@ -507,15 +595,16 @@ class MSCContinuousEngine:
             take_new[s] = True
             new_done[s] = False
             tb.slot_req[s] = rid
+            tb.arrs[s] = arr
             tb.dims[s] = arr.shape
             tb.fin[s] = False
             waited += tb.chunk - submitted
         # eviction-only repack: reuse the device-resident zero staging
         # so no staging bytes cross the host boundary
         stage = tb.stage if take_new.any() else tb.zero_stage
-        tb.blocks, tb.carries, results = refill_exec(
-            tb.blocks, tb.carries, old_dims, stage, new_dims,
-            take_new, new_done, perm)
+        tb.blocks, tb.carries, results = self._invoke(
+            "refill", refill_exec, tb.blocks, tb.carries, old_dims, stage,
+            new_dims, take_new, new_done, perm)
         self._bump(refills=1, dispatches=1, queue_wait_chunks=waited,
                    evictions=len(evict_rids))
         out: Dict[int, MSCResult] = {}
@@ -527,6 +616,8 @@ class MSCContinuousEngine:
         return out
 
     def _step_table(self, tb: _SlotTable) -> Dict[int, MSCResult]:
+        if tb.retry_at and time.monotonic() < tb.retry_at:
+            return {}  # backing off before this bucket's next retry
         step_exec, refill_exec = self._executables(tb.bucket)
         # evict slots the last chunk finished + admit queued arrivals —
         # one repack dispatch covers both (and finalizes the evicted
@@ -535,12 +626,259 @@ class MSCContinuousEngine:
                  if tb.fin[s] and tb.slot_req[s] is not None]
         out: Dict[int, MSCResult] = {}
         if evict or self._should_admit(tb, len(tb.free) + len(evict)):
-            out = self._refill(tb, refill_exec, evict)
+            # _refill mutates host bookkeeping before its dispatch;
+            # snapshot it so a failed dispatch rolls back to a state the
+            # retry re-plans identically from (device state is only
+            # REPLACED by dispatch outputs, never mutated in place)
+            snap = (list(tb.slot_req), list(tb.arrs), tb.dims.copy(),
+                    tb.fin.copy(), deque(tb.queue), dict(self._pending))
+            try:
+                out = self._refill(tb, refill_exec, evict)
+            except Exception as e:  # noqa: BLE001 — recovery boundary
+                (tb.slot_req, tb.arrs, tb.dims, tb.fin, tb.queue,
+                 self._pending) = snap
+                return self._dispatch_failed(tb, e, out)
         if tb.live > 0:
             live = tb.live
-            tb.carries, finished = step_exec(tb.blocks, tb.carries)
+            try:
+                carries, finished = self._invoke("chunk", step_exec,
+                                                 tb.blocks, tb.carries)
+            except Exception as e:  # noqa: BLE001 — recovery boundary
+                # nothing to roll back: the chunk dispatch is functional
+                # (results from a successful refill still get delivered)
+                return self._dispatch_failed(tb, e, out)
+            tb.carries = carries
             tb.fin = np.asarray(finished)
             tb.chunk += 1
+            self._total_chunks += 1
+            self._chunks_since_ckpt += 1
             self._bump(chunk_steps=1, dispatches=1,
                        slot_chunks=self.slots, busy_slot_chunks=live)
+        tb.retries = 0
+        tb.retry_at = 0.0
+        self._recovering.discard(tb.bucket)
         return out
+
+    # ---- recovery policy (DESIGN.md §7.8) -----------------------------
+    def _invoke(self, kind: str, fn, *args):
+        """Run one dispatch through the fault-injection hooks."""
+        if self._faults is not None:
+            self._faults.before(kind)
+        result = fn(*args)
+        if self._faults is not None:
+            self._faults.after(kind)
+        return result
+
+    def _dispatch_failed(self, tb: _SlotTable, exc: Exception,
+                         out: Dict[int, MSCResult]) -> Dict[int, MSCResult]:
+        """Bounded retry with exponential backoff; sequential-oracle
+        fallback once retries are exhausted.  `out` carries results a
+        dispatch earlier in the same tick already produced."""
+        tb.retries += 1
+        if tb.retries > self.max_retries:
+            warnings.warn(
+                f"bucket {tb.bucket}: dispatch failed {tb.retries} "
+                f"consecutive times ({exc!r}); serving its requests "
+                f"through the sequential oracle")
+            out.update(self._fallback_table(tb))
+            return out
+        self._recovering.add(tb.bucket)
+        self._bump(retries=1)
+        backoff = min(self.retry_backoff_s * (2 ** (tb.retries - 1)),
+                      self.retry_backoff_max_s)
+        tb.retry_at = time.monotonic() + backoff
+        return out
+
+    def _fallback_table(self, tb: _SlotTable) -> Dict[int, MSCResult]:
+        """Degrade-to-sequential: solve every live and queued request of
+        a sick bucket host-side via the one-tensor oracle (msc_sequential
+        — the reference the continuous path is bit-identical to), then
+        reset the table to a fresh inert state.  Slow, but no request is
+        lost and the bucket comes back healthy."""
+        from repro.core.msc import msc_sequential
+
+        jobs: List[Tuple[int, np.ndarray]] = []
+        for s, rid in enumerate(tb.slot_req):
+            if rid is not None:
+                jobs.append((rid, tb.arrs[s]))
+        while tb.queue:
+            rid, _ = tb.queue.popleft()
+            arr, _ = self._pending.pop(rid)
+            jobs.append((rid, arr))
+        out: Dict[int, MSCResult] = {}
+        for rid, arr in jobs:
+            res = msc_sequential(jnp.asarray(arr), self.cfg)
+            out[rid] = jax.tree.map(np.asarray, res)
+        tb.blocks, tb.carries = self._plan.init_state(tb.bucket, self.slots,
+                                                      self.dtype)
+        tb.slot_req = [None] * self.slots
+        tb.arrs = [None] * self.slots
+        tb.dims = np.tile(np.int32(_FILLER_DIMS), (self.slots, 1))
+        tb.fin = np.zeros(self.slots, bool)
+        tb.dirty = np.ones(self.slots, bool)
+        tb.retries = 0
+        tb.retry_at = 0.0
+        self._recovering.discard(tb.bucket)
+        self._bump(fallback_requests=len(out))
+        return out
+
+    # ---- checkpoint / restore (DESIGN.md §7.8) ------------------------
+    def checkpoint(self) -> Optional[str]:
+        """Snapshot the whole engine (every bucket's slot table, queue,
+        stats) to `checkpoint_dir` keyed by the global chunk clock.
+        Atomic: a crash mid-write never clobbers the previous step."""
+        if self.checkpoint_dir is None:
+            return None
+        if self._faults is not None:
+            self._faults.before("checkpoint")
+        leaves, meta = self._export()
+        path = save_checkpoint(self.checkpoint_dir, self._total_chunks,
+                               leaves, extra=meta)
+        gc_checkpoints(self.checkpoint_dir, self.keep_checkpoints)
+        self._chunks_since_ckpt = 0
+        self._bump(checkpoints_written=1)
+        return path
+
+    def _export(self) -> Tuple[List[np.ndarray], Dict]:
+        """Flat leaf list + JSON metadata of the full engine state.
+
+        Leaves are CANONICAL host arrays — carries trimmed to true bucket
+        dims and collapsed to one replica column (schedule.export_carry),
+        device blocks omitted entirely (they are a pure function of the
+        stashed admitted tensors, so restore rebuilds them byte-identical
+        on whatever mesh it runs under).  That is what makes the
+        checkpoint mesh-independent."""
+        leaves: List[np.ndarray] = []
+        buckets_meta = []
+        for bucket in sorted(self._tables):
+            tb = self._tables[bucket]
+            for host in self._plan.export_carries(bucket, tb.carries):
+                leaves.extend([host.v, host.lam, host.resid,
+                               host.iters, host.done])
+            live = [s for s, r in enumerate(tb.slot_req) if r is not None]
+            leaves.append(tb.dims.astype(np.int32))
+            leaves.append(np.asarray(tb.fin, np.bool_))
+            leaves.append(np.asarray(
+                [-1 if r is None else r for r in tb.slot_req], np.int64))
+            leaves.append(np.asarray(list(tb.queue),
+                                     np.int64).reshape(-1, 2))
+            for s in live:
+                leaves.append(tb.arrs[s])
+            for rid, _ in tb.queue:
+                leaves.append(self._pending[rid][0])
+            buckets_meta.append({"bucket": list(bucket),
+                                 "chunk": tb.chunk,
+                                 "live_slots": live})
+        meta = {
+            "format": 1,
+            "mesh": [[a, int(s)] for a, s in self.mesh.shape.items()],
+            "slots": self.slots,
+            "dtype": str(self.dtype),
+            "cfg": dataclasses.asdict(self.cfg),
+            "policy": {
+                "bucket_quantum": self._quantum_base,
+                "chunks_per_step": self._plan.chunks_per_step,
+                "refill_min_free": self.refill_min_free,
+                "max_queue_chunks": self.max_queue_chunks,
+                "placement": self.placement,
+                "ckpt_every_chunks": self.ckpt_every_chunks,
+                "keep_checkpoints": self.keep_checkpoints,
+                "max_retries": self.max_retries,
+                "retry_backoff_s": self.retry_backoff_s,
+                "retry_backoff_max_s": self.retry_backoff_max_s,
+            },
+            "next_rid": self._next_rid,
+            "total_chunks": self._total_chunks,
+            "stats": dataclasses.asdict(self._stats),
+            "buckets": buckets_meta,
+        }
+        return leaves, meta
+
+    @classmethod
+    def restore(cls, directory: str, *, mesh: Optional[Mesh] = None,
+                mesh_shape: Optional[Tuple[int, int]] = None,
+                step: Optional[int] = None, verify: bool = True,
+                fault_injector=None, checkpoint_dir: Optional[str] = None,
+                **policy_overrides) -> "MSCContinuousEngine":
+        """Rebuild an engine from the newest restorable checkpoint and
+        resume mid-solve.
+
+        Elastic: pass `mesh` (or `mesh_shape` for make_msc_mesh over the
+        visible devices) to restore onto a DIFFERENT device count /
+        factorization than the checkpoint was taken on — carries reshard
+        via device_put under the new schedule's shardings, blocks are
+        rebuilt from the stashed tensors, and only the restored buckets'
+        executables recompile.  Steps whose leaves fail SHA verification
+        are skipped with a warning (degrade-to-previous).  Keyword
+        overrides replace checkpointed policy knobs (slots and cfg are
+        structural and always come from the checkpoint)."""
+        steps = ([int(step)] if step is not None
+                 else restorable_steps(directory, verify_sha=False))
+        leaves = meta = used = None
+        for s in steps:
+            try:
+                leaves, meta = load_leaves(directory, s, verify=verify)
+                used = s
+                break
+            except (IOError, OSError, ValueError) as e:
+                warnings.warn(f"checkpoint step {s} failed restore ({e}); "
+                              f"trying the previous step")
+        if used is None:
+            raise FileNotFoundError(
+                f"no restorable engine checkpoint under {directory!r}")
+        cfg = MSCConfig(**meta["cfg"])
+        if mesh is None:
+            from repro.launch.mesh import make_msc_mesh
+            mesh = make_msc_mesh("flat", shape=mesh_shape)
+        policy = dict(meta["policy"])
+        policy.update(policy_overrides)
+        eng = cls(mesh, cfg, slots=int(meta["slots"]),
+                  dtype=jnp.dtype(meta["dtype"]),
+                  checkpoint_dir=checkpoint_dir or directory,
+                  fault_injector=fault_injector, **policy)
+        eng._import(leaves, meta)
+        return eng
+
+    def _import(self, leaves: List[np.ndarray], meta: Dict):
+        """Rebuild every slot table from an _export leaf list, under the
+        CURRENT mesh (import_carry re-pads + device_puts each carry leaf
+        with this engine's shardings; rebuild_blocks re-scatters the
+        stashed tensors exactly like the admission path did)."""
+        it = iter(leaves)
+        for bmeta in meta["buckets"]:
+            bucket = tuple(int(x) for x in bmeta["bucket"])
+            host_carries = []
+            for _ in range(3):
+                v, lam, resid, iters, done = (next(it) for _ in range(5))
+                host_carries.append(SolveState(v=v, lam=lam, resid=resid,
+                                               iters=iters, done=done))
+            dims = np.asarray(next(it), np.int32)
+            fin = np.asarray(next(it), bool)
+            slot_rids = np.asarray(next(it), np.int64)
+            queue = np.asarray(next(it), np.int64).reshape(-1, 2)
+            arrs: List[Optional[np.ndarray]] = [None] * self.slots
+            for s in bmeta["live_slots"]:
+                arrs[s] = np.asarray(next(it), self.dtype)
+            carries = self._plan.import_carries(bucket, host_carries)
+            blocks = self._plan.rebuild_blocks(bucket, self.slots,
+                                               self.dtype, arrs)
+            tb = _SlotTable(bucket, blocks, carries, self.slots,
+                            self.dtype,
+                            self._plan.mode_shapes(bucket, self.slots))
+            tb.zero_stage = self._plan.zero_stage(bucket, self.slots,
+                                                  self.dtype)
+            tb.slot_req = [None if r < 0 else int(r) for r in slot_rids]
+            tb.arrs = arrs
+            tb.dims = dims
+            tb.fin = fin
+            tb.chunk = int(bmeta["chunk"])
+            for rid, submitted in queue:
+                tb.queue.append((int(rid), int(submitted)))
+                self._pending[int(rid)] = (np.asarray(next(it), self.dtype),
+                                           bucket)
+            self._tables[bucket] = tb
+        self._next_rid = int(meta["next_rid"])
+        self._stats = ServeStats(**meta["stats"])
+        self._total_chunks = int(meta["total_chunks"])
+        self._chunks_since_ckpt = 0
+        self._bump(restores=1)

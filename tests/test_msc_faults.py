@@ -1,0 +1,525 @@
+"""Fault-tolerant MSC serving (DESIGN.md §7.8).
+
+Coverage layers:
+  * checkpoint store robustness: atomic per-leaf + per-step commits,
+    SHA-verified self-describing `load_leaves`, skip-and-warn
+    degrade-to-previous past a corrupted step, keep-last-k GC.
+  * engine checkpoint/restore: a solve checkpointed mid-flight restores
+    (same mesh) and finishes with bit-identical masks, d, and realized
+    sweep counts — including the slot table, admission queue, and stats.
+  * kill-and-resume (subprocess): a child engine is SIGKILLed between
+    gate chunks / mid-refill at several points; the union of results it
+    delivered before dying and the results the restored engine delivers
+    equals the uninterrupted run bit-for-bit, on (8,1) and (4,2) meshes
+    × both epilogues.
+  * elastic restore: a checkpoint taken on (8,1) finishes on (4,2) and
+    (4,1) with identical masks/sweeps (d to collective-reduction
+    tolerance 3e-5, the same bar the cross-mesh parity tests use).
+  * failure injection + recovery policy: transient dispatch failures
+    retry with backoff (results unchanged), persistent failures degrade
+    to the sequential oracle after max_retries, and submits are shed
+    (LoadShedError) while a bucket recovers.
+"""
+import json
+import os
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import (checkpoint_extra, gc_checkpoints,
+                                    latest_restorable, load_leaves,
+                                    restorable_steps, save_checkpoint)
+from repro.launch.elastic import best_msc_shape
+from repro.serving.faults import (FaultInjector, FaultPlan, InjectedFault,
+                                  LoadShedError, corrupt_checkpoint_leaf,
+                                  fail_all_from)
+
+# ------------------------------------------------ checkpoint store ----
+
+
+class TestStoreRobustness:
+    def _tree(self, seed=0):
+        rng = np.random.default_rng(seed)
+        return [rng.normal(size=(4, 3)).astype(np.float32),
+                np.arange(6, dtype=np.int64)]
+
+    def test_load_leaves_roundtrip_without_like(self, tmp_path):
+        tree = self._tree()
+        save_checkpoint(str(tmp_path), 5, tree, extra={"k": 1})
+        leaves, extra = load_leaves(str(tmp_path), 5)
+        assert extra == {"k": 1}
+        for a, b in zip(tree, leaves):
+            np.testing.assert_array_equal(a, b)
+            assert a.dtype == b.dtype
+
+    def test_no_tmp_residue_and_overwrite_is_atomic(self, tmp_path):
+        save_checkpoint(str(tmp_path), 1, self._tree(0))
+        save_checkpoint(str(tmp_path), 1, self._tree(1))  # overwrite
+        names = os.listdir(tmp_path)
+        assert names == ["step_00000001"]
+        leaves, _ = load_leaves(str(tmp_path), 1)
+        np.testing.assert_array_equal(leaves[0], self._tree(1)[0])
+
+    def test_corrupt_leaf_skipped_with_warning(self, tmp_path):
+        save_checkpoint(str(tmp_path), 1, self._tree(0))
+        save_checkpoint(str(tmp_path), 2, self._tree(1))
+        corrupt_checkpoint_leaf(str(tmp_path), 2)
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            steps = restorable_steps(str(tmp_path))
+        assert steps == [1]
+        assert any("corrupt" in str(x.message) for x in w)
+        assert latest_restorable(str(tmp_path)) == 1
+        with pytest.raises(IOError, match="integrity"):
+            load_leaves(str(tmp_path), 2)
+
+    def test_checkpoint_extra_is_manifest_only(self, tmp_path):
+        save_checkpoint(str(tmp_path), 3, self._tree(),
+                        extra={"mesh": [["slice", 8]]})
+        # even with a corrupt leaf the metadata peek still works
+        corrupt_checkpoint_leaf(str(tmp_path), 3)
+        assert checkpoint_extra(str(tmp_path), 3) == {"mesh": [["slice", 8]]}
+
+    def test_gc_keeps_newest_and_sweeps_tmp(self, tmp_path):
+        for s in (1, 2, 3, 4):
+            save_checkpoint(str(tmp_path), s, self._tree(s))
+        os.makedirs(tmp_path / "step_00000009.tmp")
+        gc_checkpoints(str(tmp_path), keep=2)
+        assert sorted(os.listdir(tmp_path)) == ["step_00000003",
+                                                "step_00000004"]
+
+
+# ------------------------------------------------ fault harness -------
+
+
+class TestFaultInjector:
+    def test_fail_indices_raise_and_count(self):
+        fi = FaultInjector(FaultPlan(fail_chunks=(1,)))
+        fi.before("chunk")
+        with pytest.raises(InjectedFault):
+            fi.before("chunk")
+        fi.before("chunk")  # the retry succeeds
+        assert fi.counts["chunk"] == 3
+
+    def test_kinds_count_separately(self):
+        fi = FaultInjector(FaultPlan(fail_refills=(0,)))
+        fi.before("chunk")
+        with pytest.raises(InjectedFault):
+            fi.before("refill")
+        assert fi.counts == {"chunk": 1, "refill": 1, "checkpoint": 0}
+
+    def test_fail_all_from(self):
+        idx = fail_all_from(3, horizon=5)
+        assert idx == (3, 4, 5, 6, 7)
+
+
+def test_best_msc_shape():
+    assert best_msc_shape(8, 1) == (8, 1)
+    assert best_msc_shape(8, 2) == (4, 2)
+    assert best_msc_shape(6, 4) == (2, 3)   # largest divisor <= 4 is 3
+    assert best_msc_shape(4, 8) == (1, 4)
+    assert best_msc_shape(5, 0) == (5, 1)
+
+
+# ----------------------------------- in-process engine FT behavior ----
+
+
+def _engine(**kw):
+    from repro.core import MSCConfig, make_msc_mesh
+    from repro.serving import MSCContinuousEngine
+
+    mesh = make_msc_mesh("flat", devices=jax.devices()[:1])
+    return MSCContinuousEngine(mesh, MSCConfig(epsilon=3e-4, power_tol=1e-2),
+                               slots=2, bucket_quantum=8, **kw)
+
+
+def _stream(n=4):
+    from repro.core import PlantedSpec, make_planted_tensor
+
+    gammas = (90.0, 70.0, 30.0, 40.0)
+    return [make_planted_tensor(jax.random.PRNGKey(i),
+                                PlantedSpec.paper(14 + i, gammas[i % 4]))
+            for i in range(n)]
+
+
+def _assert_identical(a, b, d_exact=True):
+    for j in range(3):
+        np.testing.assert_array_equal(np.asarray(a[j].mask),
+                                      np.asarray(b[j].mask))
+        assert int(a[j].power_iters_run) == int(b[j].power_iters_run)
+        if d_exact:
+            np.testing.assert_array_equal(np.asarray(a[j].d),
+                                          np.asarray(b[j].d))
+        else:
+            np.testing.assert_allclose(np.asarray(a[j].d),
+                                       np.asarray(b[j].d),
+                                       rtol=3e-5, atol=3e-5)
+
+
+class TestCheckpointRestoreInProcess:
+    def test_mid_solve_roundtrip_bit_identical(self, tmp_path):
+        from repro.serving import MSCContinuousEngine
+
+        tensors = _stream()
+        ref = _engine().run(tensors)
+
+        eng = _engine(checkpoint_dir=str(tmp_path), ckpt_every_chunks=0)
+        rids = [eng.submit(t) for t in tensors]
+        got = {}
+        for _ in range(3):          # part-way through the solve
+            got.update(eng.step())
+        eng.checkpoint()
+        eng2 = MSCContinuousEngine.restore(str(tmp_path))
+        assert eng2.stats.restores == 1
+        assert eng2.slots == eng.slots and eng2.cfg == eng.cfg
+        while eng2.has_work():
+            got.update(eng2.step())
+        assert sorted(got) == sorted(rids)
+        for rid, r in zip(rids, ref):
+            _assert_identical(got[rid], r)
+
+    def test_periodic_checkpoints_and_gc(self, tmp_path):
+        eng = _engine(checkpoint_dir=str(tmp_path), ckpt_every_chunks=1,
+                      keep_checkpoints=2)
+        eng.run(_stream())
+        assert eng.stats.checkpoints_written >= 3
+        kept = [n for n in os.listdir(tmp_path) if not n.endswith(".tmp")]
+        assert len(kept) <= 2
+
+    def test_corrupt_newest_degrades_to_previous(self, tmp_path):
+        from repro.serving import MSCContinuousEngine
+
+        eng = _engine(checkpoint_dir=str(tmp_path), ckpt_every_chunks=0,
+                      keep_checkpoints=5)
+        [eng.submit(t) for t in _stream()]
+        eng.step()
+        p1 = eng.checkpoint()
+        eng.step()
+        p2 = eng.checkpoint()
+        corrupt_checkpoint_leaf(str(tmp_path),
+                                int(os.path.basename(p2)[5:]))
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            eng2 = MSCContinuousEngine.restore(str(tmp_path))
+        assert any("failed" in str(x.message) for x in w)
+        assert eng2._total_chunks == int(os.path.basename(p1)[5:])
+        while eng2.has_work():
+            eng2.step()
+
+    def test_restore_without_checkpoint_raises(self, tmp_path):
+        from repro.serving import MSCContinuousEngine
+
+        with pytest.raises(FileNotFoundError, match="restorable"):
+            MSCContinuousEngine.restore(str(tmp_path))
+
+    def test_policy_overrides_apply_on_restore(self, tmp_path):
+        from repro.serving import MSCContinuousEngine
+
+        eng = _engine(checkpoint_dir=str(tmp_path))
+        [eng.submit(t) for t in _stream(2)]
+        eng.checkpoint()
+        eng2 = MSCContinuousEngine.restore(str(tmp_path),
+                                           ckpt_every_chunks=0,
+                                           max_retries=7)
+        assert eng2.ckpt_every_chunks == 0 and eng2.max_retries == 7
+
+
+class TestRecoveryPolicy:
+    def test_transient_failure_retries_and_matches(self):
+        tensors = _stream()
+        ref = _engine().run(tensors)
+        fi = FaultInjector(FaultPlan(fail_chunks=(1,)))
+        eng = _engine(retry_backoff_s=0.0, fault_injector=fi)
+        out = eng.run(tensors)
+        assert eng.stats.retries == 1
+        assert eng.stats.fallback_requests == 0
+        for a, b in zip(out, ref):
+            _assert_identical(a, b)
+
+    def test_persistent_failure_falls_back_to_oracle(self):
+        from repro.core import MSCConfig, msc_sequential
+
+        tensors = _stream()
+        cfg = MSCConfig(epsilon=3e-4, power_tol=1e-2)
+        fi = FaultInjector(FaultPlan(fail_chunks=fail_all_from(0)))
+        eng = _engine(retry_backoff_s=0.0, max_retries=2, fault_injector=fi)
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            out = eng.run(tensors)
+        assert any("sequential oracle" in str(x.message) for x in w)
+        # every chunk dispatch fails, so every request is oracle-served
+        assert eng.stats.fallback_requests == len(tensors)
+        assert eng.stats.retries >= 2    # max_retries per sick bucket
+        assert eng.stats.evictions == 0
+        for t, res in zip(tensors, out):
+            _assert_identical(res, msc_sequential(t, cfg))
+
+    def test_refill_failure_rolls_back_and_retries(self):
+        tensors = _stream()
+        ref = _engine().run(tensors)
+        fi = FaultInjector(FaultPlan(fail_refills=(1,)))
+        eng = _engine(retry_backoff_s=0.0, fault_injector=fi)
+        out = eng.run(tensors)
+        assert eng.stats.retries == 1
+        for a, b in zip(out, ref):
+            _assert_identical(a, b)
+
+    def test_load_shedding_during_recovery(self):
+        tensors = _stream()
+        fi = FaultInjector(FaultPlan(fail_chunks=(0,)))
+        eng = _engine(retry_backoff_s=0.0, fault_injector=fi)
+        eng.submit(tensors[0])
+        eng.step()                        # injected failure -> recovering
+        with pytest.raises(LoadShedError, match="recovering"):
+            eng.submit(tensors[1])
+        assert eng.stats.shed_requests == 1
+        eng.step()                        # retry succeeds
+        rid = eng.submit(tensors[1])      # accepted again
+        got = {}
+        while eng.has_work():
+            got.update(eng.step())
+        assert rid in got
+
+    def test_backoff_delays_retry(self):
+        import time
+
+        fi = FaultInjector(FaultPlan(fail_chunks=(0,)))
+        eng = _engine(retry_backoff_s=30.0, fault_injector=fi)
+        eng.submit(_stream(1)[0])
+        eng.step()
+        tb = next(iter(eng._tables.values()))
+        assert tb.retry_at > time.monotonic()
+        assert eng.step() == {}           # still backing off: no dispatch
+
+
+def test_serve_stats_ft_counters_delta():
+    from repro.serving import ServeStats
+
+    a = ServeStats(checkpoints_written=3, restores=1, retries=2,
+                   shed_requests=4, fallback_requests=5)
+    d = a.delta(ServeStats(checkpoints_written=1, retries=1))
+    assert (d.checkpoints_written, d.restores, d.retries,
+            d.shed_requests, d.fallback_requests) == (2, 1, 1, 4, 5)
+
+
+# ---------------------------------- kill-and-resume (subprocess) ------
+
+# The child builds an engine with periodic checkpointing and a SIGKILL
+# fault plan, persists every result it delivers before dying, and is
+# killed with no cleanup — exactly a preempted node.  The outer script
+# restores from the surviving checkpoint and asserts the union of
+# (delivered-before-kill, delivered-after-restore) results equals the
+# uninterrupted run bit-for-bit.
+CHILD = r'''
+import json, os, sys
+import numpy as np, jax
+from repro.core import (MSCConfig, PlantedSpec, make_planted_tensor,
+                        make_msc_mesh)
+from repro.serving import MSCContinuousEngine
+from repro.serving.faults import FaultInjector, FaultPlan
+
+plan = json.loads(sys.argv[1]); ckpt = sys.argv[2]; outdir = sys.argv[3]
+p, q, epi = int(sys.argv[4]), int(sys.argv[5]), sys.argv[6]
+mesh = make_msc_mesh("flat", devices=jax.devices()[:p * q], shape=(p, q))
+cfg = MSCConfig(epsilon=3e-4, power_tol=1e-2, epilogue=epi)
+eng = MSCContinuousEngine(mesh, cfg, slots=2, bucket_quantum=8,
+                          checkpoint_dir=ckpt, ckpt_every_chunks=2,
+                          fault_injector=FaultInjector(FaultPlan(**plan)))
+specs = [PlantedSpec.paper(17, 90.0), PlantedSpec.paper(21, 70.0),
+         PlantedSpec.paper(23, 30.0), PlantedSpec.paper(24, 40.0)]
+for i, s in enumerate(specs):
+    eng.submit(make_planted_tensor(jax.random.PRNGKey(i), s))
+eng.checkpoint()   # a restore point exists before any kill can fire
+while eng.has_work():
+    for rid, res in eng.step().items():
+        np.savez(os.path.join(outdir, "rid_%d.npz" % rid),
+                 **{"m%d_%s" % (j, k): np.asarray(getattr(res[j], k))
+                    for j in range(3)
+                    for k in ("mask", "d", "power_iters_run")})
+raise SystemExit(7)  # the kill never fired: fail the outer rc check
+'''
+
+KILL_RESUME = r'''
+import json, os, signal, subprocess, sys, tempfile
+import numpy as np, jax
+from repro.core import (MSCConfig, PlantedSpec, make_planted_tensor,
+                        make_msc_mesh)
+from repro.serving import MSCContinuousEngine
+
+p, q, epi = {p}, {q}, "{epilogue}"
+plans = {plans}
+restore_shapes = {restore_shapes}
+specs = [PlantedSpec.paper(17, 90.0), PlantedSpec.paper(21, 70.0),
+         PlantedSpec.paper(23, 30.0), PlantedSpec.paper(24, 40.0)]
+tensors = [make_planted_tensor(jax.random.PRNGKey(i), s)
+           for i, s in enumerate(specs)]
+cfg = MSCConfig(epsilon=3e-4, power_tol=1e-2, epilogue=epi)
+mesh = make_msc_mesh("flat", devices=jax.devices()[:p * q], shape=(p, q))
+refs = MSCContinuousEngine(mesh, cfg, slots=2, bucket_quantum=8).run(tensors)
+work = tempfile.mkdtemp()
+cpath = os.path.join(work, "child.py")
+open(cpath, "w").write(__CHILD__)
+for plan in plans:
+    for rp, rq in restore_shapes:
+        ckpt = tempfile.mkdtemp(dir=work)
+        outdir = tempfile.mkdtemp(dir=work)
+        rc = subprocess.call([sys.executable, cpath, json.dumps(plan),
+                              ckpt, outdir, str(p), str(q), epi])
+        assert rc == -signal.SIGKILL, (plan, rc)
+        got = {{}}
+        for f in os.listdir(outdir):
+            got[int(f[4:-4])] = dict(np.load(os.path.join(outdir, f)))
+        rmesh = make_msc_mesh("flat", devices=jax.devices()[:rp * rq],
+                              shape=(rp, rq))
+        eng = MSCContinuousEngine.restore(ckpt, mesh=rmesh,
+                                          ckpt_every_chunks=0)
+        assert eng.stats.restores >= 1
+        while eng.has_work():
+            for rid, res in eng.step().items():
+                got[rid] = {{"m%d_%s" % (j, k):
+                             np.asarray(getattr(res[j], k))
+                             for j in range(3)
+                             for k in ("mask", "d", "power_iters_run")}}
+        assert sorted(got) == list(range(len(tensors))), (plan, sorted(got))
+        d_exact = (rp, rq) == (p, q)
+        for rid, ref in enumerate(refs):
+            for j in range(3):
+                g = got[rid]
+                np.testing.assert_array_equal(
+                    g["m%d_mask" % j], np.asarray(ref[j].mask),
+                    err_msg=str((plan, (rp, rq), rid, j)))
+                assert int(g["m%d_power_iters_run" % j]) == \
+                    int(ref[j].power_iters_run), (plan, (rp, rq), rid, j)
+                if d_exact:
+                    np.testing.assert_array_equal(
+                        g["m%d_d" % j], np.asarray(ref[j].d),
+                        err_msg=str((plan, (rp, rq), rid, j)))
+                else:
+                    np.testing.assert_allclose(
+                        g["m%d_d" % j], np.asarray(ref[j].d),
+                        rtol=3e-5, atol=3e-5,
+                        err_msg=str((plan, (rp, rq), rid, j)))
+print("OK")
+'''
+
+
+def _kill_resume_script(p, q, epilogue, plans, restore_shapes=None):
+    return KILL_RESUME.format(
+        p=p, q=q, epilogue=epilogue, plans=json.dumps(plans),
+        restore_shapes=repr(restore_shapes or [(p, q)]),
+    ).replace("__CHILD__", repr(CHILD))
+
+
+# three kill points: between gate chunks (before a chunk dispatch),
+# after a chunk returned (between dispatch and the next tick's
+# bookkeeping), and mid-refill (before the repack dispatch commits)
+_KILLS3 = [{"kill_chunk": 2}, {"kill_after_chunk": 3}, {"kill_refill": 1}]
+_KILLS1 = [{"kill_chunk": 2}]
+
+
+@pytest.mark.parametrize("p,q,epilogue,plans", [
+    (8, 1, "allgather", _KILLS3),
+    (4, 2, "ring", _KILLS3),
+    (8, 1, "ring", _KILLS1),
+    (4, 2, "allgather", _KILLS1),
+])
+def test_kill_and_resume_bit_identical(subproc, p, q, epilogue, plans):
+    out = subproc(_kill_resume_script(p, q, epilogue, plans), p * q,
+                  timeout=900)
+    assert "OK" in out
+
+
+def test_elastic_restore_after_kill(subproc):
+    """Checkpoint on (8,1), SIGKILL, finish on (4,2) and (4,1): masks
+    and realized sweeps identical, d to cross-mesh tolerance."""
+    out = subproc(_kill_resume_script(8, 1, "allgather", _KILLS1,
+                                      restore_shapes=[(4, 2), (4, 1)]),
+                  8, timeout=900)
+    assert "OK" in out
+
+
+ELASTIC_HELPER = r'''
+import os, tempfile
+import numpy as np, jax
+from repro.core import (MSCConfig, PlantedSpec, make_planted_tensor,
+                        make_msc_mesh)
+from repro.launch.elastic import restore_msc_engine
+from repro.serving import MSCContinuousEngine
+
+mesh = make_msc_mesh("flat", devices=jax.devices()[:8], shape=(4, 2))
+cfg = MSCConfig(epsilon=3e-4, power_tol=1e-2)
+tensors = [make_planted_tensor(jax.random.PRNGKey(i),
+                               PlantedSpec.paper(17 + i, 70.0))
+           for i in range(3)]
+refs = MSCContinuousEngine(mesh, cfg, slots=2, bucket_quantum=8).run(tensors)
+ckpt = tempfile.mkdtemp()
+eng = MSCContinuousEngine(mesh, cfg, slots=2, bucket_quantum=8,
+                          checkpoint_dir=ckpt, ckpt_every_chunks=0)
+rids = [eng.submit(t) for t in tensors]
+eng.step()
+eng.checkpoint()
+# half the pod is gone: only 4 devices survive.  restore_msc_engine
+# reads the checkpointed inner degree (2) and keeps it: (2, 2).
+eng2 = restore_msc_engine(ckpt, devices=jax.devices()[:4],
+                          ckpt_every_chunks=0)
+assert dict(eng2.mesh.shape) == {"slice": 2, "inner": 2}, eng2.mesh.shape
+got = {}
+while eng2.has_work():
+    got.update(eng2.step())
+assert sorted(got) == sorted(rids)
+for rid, ref in zip(rids, refs):
+    for j in range(3):
+        np.testing.assert_array_equal(np.asarray(got[rid][j].mask),
+                                      np.asarray(ref[j].mask))
+        assert int(got[rid][j].power_iters_run) == \
+            int(ref[j].power_iters_run)
+        np.testing.assert_allclose(np.asarray(got[rid][j].d),
+                                   np.asarray(ref[j].d),
+                                   rtol=3e-5, atol=3e-5)
+print("OK")
+'''
+
+
+def test_restore_msc_engine_shrinks_with_devices(subproc):
+    out = subproc(ELASTIC_HELPER, 8, timeout=900)
+    assert "OK" in out
+
+
+# ------------------------------------------- in-process CI matrix ----
+
+
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs >= 8 devices (CI multi-device job)")
+def test_checkpoint_restore_in_process_multidevice(tmp_path):
+    """Real multi-device checkpoint/restore, no subprocess; the CI job
+    matrix sets MSC_MESH_SHAPE to each factorization (8x1, 4x2)."""
+    from repro.core import (MSCConfig, PlantedSpec, make_planted_tensor,
+                            make_msc_mesh)
+    from repro.serving import MSCContinuousEngine
+
+    p, q = (int(x) for x in
+            os.environ.get("MSC_MESH_SHAPE", "4x2").split("x"))
+    mesh = make_msc_mesh("flat", devices=jax.devices()[:p * q], shape=(p, q))
+    cfg = MSCConfig(epsilon=3e-4, power_tol=1e-2, epilogue="ring")
+    tensors = [make_planted_tensor(jax.random.PRNGKey(i),
+                                   PlantedSpec.paper(mm, g))
+               for i, (mm, g) in enumerate(((21, 70.0), (17, 90.0),
+                                            (24, 40.0)))]
+    refs = MSCContinuousEngine(mesh, cfg, slots=2,
+                               bucket_quantum=8).run(tensors)
+    eng = MSCContinuousEngine(mesh, cfg, slots=2, bucket_quantum=8,
+                              checkpoint_dir=str(tmp_path),
+                              ckpt_every_chunks=0)
+    rids = [eng.submit(t) for t in tensors]
+    got = {}
+    got.update(eng.step())
+    got.update(eng.step())
+    eng.checkpoint()
+    eng2 = MSCContinuousEngine.restore(str(tmp_path), mesh=mesh)
+    while eng2.has_work():
+        got.update(eng2.step())
+    assert sorted(got) == sorted(rids)
+    for rid, ref in zip(rids, refs):
+        _assert_identical(got[rid], ref)
