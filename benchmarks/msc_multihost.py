@@ -1,0 +1,136 @@
+"""Multi-host serving: 1-vs-2-process throughput, sharded-checkpoint
+overhead, and host-loss recovery time (DESIGN.md §7.9).
+
+Every cell launches the `repro.launch.distributed` CLI as a real
+multi-process run (master spawns the workers, `jax.distributed` + gloo
+collectives over forced host-platform CPU devices) and parses the
+stats.json it writes:
+
+  * **throughput** — the same skewed request mix served by 1 process
+    holding all 4 devices vs 2 processes holding 2 each.  Same global
+    (4, 1) mesh, same executables; the delta is pure control-plane +
+    cross-process collective cost.  On CPU/gloo this is NOISY and can
+    exceed 1 — the cell documents the cost, it is not gated.
+  * **ckpt_overhead** — the 2-process run with two-phase sharded
+    checkpointing every 10 gate chunks vs checkpointing disabled.
+  * **recovery** — a worker SIGKILLed mid-solve (MSC_DIST_KILL); the
+    row records the master's measured restore-and-resubmit time and the
+    FT counters.  The CI bar: the run still returns every result, saw
+    exactly one host loss, and recovered from a committed checkpoint.
+
+Rows land in experiments/bench/msc_multihost.json AND
+BENCH_msc_multihost.json (the CI perf artifact).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+from typing import Dict, List, Optional
+
+from .common import REPO, SRC
+
+BENCH_PATH = os.path.join(REPO, "BENCH_msc_multihost.json")
+
+CPU_CAVEAT = (
+    "forced host-platform devices + gloo on one machine: process count "
+    "changes scheduling noise more than real network cost, and serve_s "
+    "includes per-process compiles — structural cells (results served, "
+    "loss detected, committed-checkpoint recovery) are the CI bar, not "
+    "the throughput ratio")
+
+SIZES, SLOW_EVERY, SEED = "8", 3, 0
+
+
+def _serve(procs: int, devices_per_proc: int, n_req: int,
+           *extra: str, kill: Optional[str] = None,
+           timeout: int = 900) -> Dict:
+    """One CLI run; returns its stats.json payload."""
+    outdir = tempfile.mkdtemp()
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)  # the CLI re-execs with its own count
+    env.pop("MSC_DIST_KILL", None)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    cmd = [sys.executable, "-m", "repro.launch.distributed",
+           "--num-processes", str(procs),
+           "--devices-per-process", str(devices_per_proc),
+           "--spawn-workers", "--requests", str(n_req),
+           "--sizes", SIZES, "--slow-every", str(SLOW_EVERY),
+           "--seed", str(SEED), "--slots", "4", "--outdir", outdir]
+    if kill:
+        cmd += ["--worker-kill-at", kill]
+    cmd += list(extra)
+    proc = subprocess.run(cmd, capture_output=True, text=True,
+                          timeout=timeout, env=env)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"distributed CLI failed (rc={proc.returncode}):\n"
+            f"{proc.stdout[-1000:]}\n{proc.stderr[-2000:]}")
+    with open(os.path.join(outdir, "stats.json")) as f:
+        return json.load(f)
+
+
+def run(full: bool = False) -> List[Dict]:
+    # enough slow convergers (every 3rd request, ~10 gate chunks each
+    # over 4 slots) that the ckpt_every=10 cell actually checkpoints
+    n_req = 14 if full else 10
+    rows: List[Dict] = []
+
+    # ---- throughput: 1 process × 4 devices vs 2 × 2 ------------------
+    by_procs = {}
+    for procs, devs in ((1, 4), (2, 2)):
+        s = _serve(procs, devs, n_req)
+        by_procs[procs] = s
+        rows.append({"cell": "throughput", "procs": procs,
+                     "devices_per_proc": devs, "n": n_req,
+                     "serve_s": s["serve_s"],
+                     "req_per_s": s["n_results"] / s["serve_s"],
+                     "n_results": s["n_results"],
+                     "host_losses": s["host_losses"]})
+    rows[-1]["multi_host_cost_frac"] = (
+        by_procs[2]["serve_s"] / by_procs[1]["serve_s"] - 1.0)
+
+    # ---- two-phase sharded checkpoint overhead (2 processes) ---------
+    ckdir = tempfile.mkdtemp()
+    s = _serve(2, 2, n_req, "--ckpt-dir", ckdir, "--ckpt-every", "10")
+    rows.append({"cell": "ckpt_overhead", "procs": 2, "n": n_req,
+                 "ckpt_every_chunks": 10, "serve_s": s["serve_s"],
+                 "overhead_frac": s["serve_s"] / by_procs[2]["serve_s"]
+                 - 1.0,
+                 "checkpoints_written": s["checkpoints_written"],
+                 "shard_files_written": s["shard_files_written"],
+                 "n_results": s["n_results"],
+                 "host_losses": s["host_losses"]})
+
+    # ---- host-loss recovery time (worker SIGKILL mid-solve) ----------
+    ckdir = tempfile.mkdtemp()
+    s = _serve(2, 2, n_req, "--ckpt-dir", ckdir, "--ckpt-every", "2",
+               kill="step:3")
+    rows.append({"cell": "recovery", "procs": 2, "n": n_req,
+                 "kill_at": "step:3", "serve_s": s["serve_s"],
+                 "recovery_s": s["recovery_s"],
+                 "host_losses": s["host_losses"],
+                 "heartbeats_missed": s["heartbeats_missed"],
+                 "reinits": s["reinits"], "restores": s["restores"],
+                 "restored_step": s["restored_step"],
+                 "n_results": s["n_results"]})
+
+    for row in rows:
+        row["cpu_caveat"] = CPU_CAVEAT
+        assert row["n_results"] == n_req, f"requests lost: {row}"
+    rec = rows[-1]
+    assert rec["host_losses"] == 1, f"kill cell saw no host loss: {rec}"
+    assert rec["reinits"] == 1, f"no reduced-host reinit: {rec}"
+    assert rec["restores"] == 1, (
+        f"recovery did not resume from a committed checkpoint: {rec}")
+    assert rec["recovery_s"] is not None and rec["recovery_s"] > 0
+    ck = rows[-2]
+    assert ck["checkpoints_written"] >= 1 and \
+        ck["shard_files_written"] > 0, f"no sharded checkpoints: {ck}"
+
+    with open(BENCH_PATH, "w") as f:
+        json.dump(rows, f, indent=2)
+    print(f"[msc_multihost] wrote {BENCH_PATH}")
+    return rows

@@ -12,6 +12,9 @@
   msc_continuous      (new) continuous vs static batching (DESIGN.md §7.7)
   msc_faults          (new) checkpoint overhead + crash/elastic recovery
                       (DESIGN.md §7.8)
+  msc_multihost       (new) 1-vs-2-process jax.distributed serving,
+                      sharded-checkpoint overhead, host-loss recovery
+                      (DESIGN.md §7.9)
 
 Usage:
   PYTHONPATH=src python -m benchmarks.run            # CPU-feasible sizes
@@ -32,9 +35,10 @@ from .common import print_rows, save_rows
 
 ALL = ("fig4_quality", "fig5_strong_scaling", "fig6_data_scaling",
        "fig8_comm", "kernel_bench", "power_iter_bench", "ring_epilogue",
-       "inner_shard", "msc_serving", "msc_continuous", "msc_faults")
+       "inner_shard", "msc_serving", "msc_continuous", "msc_faults",
+       "msc_multihost")
 QUICK = ("power_iter_bench", "kernel_bench", "ring_epilogue", "inner_shard",
-         "msc_serving", "msc_continuous", "msc_faults")
+         "msc_serving", "msc_continuous", "msc_faults", "msc_multihost")
 
 
 def main(argv=None) -> int:

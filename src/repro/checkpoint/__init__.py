@@ -1,6 +1,12 @@
 from .store import (
     CheckpointManager,
+    begin_sharded_checkpoint,
+    commit_sharded_checkpoint,
+    fsync_dir,
+    latest_restorable,
     latest_step,
+    restorable_steps,
     restore_checkpoint,
     save_checkpoint,
+    write_process_shards,
 )

@@ -1,6 +1,6 @@
 """Fault-tolerant checkpointing: atomic commits, integrity, elastic restore.
 
-Design (for 1000+ nodes, exercised here single-host):
+Design (for 1000+ nodes, exercised here single-host and two-process):
   * layout: <dir>/step_<k>/ {manifest.json, leaf_<i>.npy…}
   * atomic commit: every leaf writes to a `.tmp` sibling and
     `os.replace`s into place; the whole step dir is itself written as
@@ -8,7 +8,9 @@ Design (for 1000+ nodes, exercised here single-host):
     half checkpoint that restore would pick up, at either granularity.
     Only the manifest fsyncs (the commit record); leaf durability rides
     the SHA check + degrade-to-previous on restore, keeping the write
-    off the serving critical path.
+    off the serving critical path.  The step directory and its parent
+    fsync after the rename (`fsync_dir`) — rename-without-dirsync can
+    lose a "committed" step on power loss.
   * integrity: per-leaf SHA-256 in the manifest, verified on restore;
     corrupt/partial checkpoints are skipped by `latest_step`, and the
     restore entry points (`restorable_steps` / `restore_latest`)
@@ -24,8 +26,21 @@ Design (for 1000+ nodes, exercised here single-host):
   * elastic restore: leaves are stored UNSHARDED (gathered); restore
     device_puts them under whatever mesh/sharding the *current* run uses,
     so a 16-device checkpoint restores onto 8 or 32 devices (re-shard on
-    restore).  On multi-host pods the same layout generalizes to
-    per-process shard files keyed by (process, shard-index).
+    restore).
+  * multi-process (format 2, DESIGN.md §7.9): on `jax.distributed`
+    meshes a leaf's global value is not addressable from any one
+    process, so sharded leaves are written as per-process shard files
+    keyed by (process, shard-index) — each process dumps its unique
+    `addressable_shards` (`write_process_shards`) plus a phase-1 commit
+    record `shards_p<proc>.json`, and the master alone writes the
+    manifest (phase 2, `commit_sharded_checkpoint`): the manifest
+    embeds every process's shard table, fsyncs, and the step dir
+    renames into place.  A host dying mid-checkpoint therefore can
+    never tear a step — without the master's manifest the step stays a
+    `.tmp` dir that `restorable_steps` never lists, and a committed
+    manifest referencing a missing/corrupt worker shard fails `_valid`.
+    `load_leaves` reassembles sharded leaves by their manifest index
+    ranges (replicated shards overwrite with identical bytes).
   * keep-last-k GC with the newest always retained.
 """
 from __future__ import annotations
@@ -50,6 +65,21 @@ def _leaf_paths(tree) -> Any:
 
 def _sha(arr: np.ndarray) -> str:
     return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()
+
+
+def fsync_dir(path: str):
+    """fsync a directory so a just-renamed entry survives power loss.
+
+    os.replace/os.rename are atomic against crashes of the *writer*, but
+    the new directory entry itself lives in the parent dir's metadata —
+    without this fsync a machine crash can roll the rename back and
+    silently lose a "committed" step.  Shared by the step-dir commit and
+    the per-process shard writes (multi-host checkpoints)."""
+    fd = os.open(path, os.O_RDONLY | getattr(os, "O_DIRECTORY", 0))
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 def _write_atomic(path: str, writer, fsync: bool = True):
@@ -96,6 +126,11 @@ def save_checkpoint(directory: str, step: int, tree, extra: Optional[Dict] = Non
         })
     _write_atomic(os.path.join(tmp, "manifest.json"),
                   lambda f: f.write(json.dumps(manifest).encode()))
+    # the leaf/manifest *entries* live in the step dir's metadata — make
+    # them durable before the rename publishes the dir under its final
+    # name, then fsync the parent so the rename itself survives power
+    # loss (fsyncing only the manifest file is not enough)
+    fsync_dir(tmp)
     if os.path.exists(final):
         # never rmtree the live step before its replacement is in place:
         # park it under a .tmp-suffixed name (invisible to latest_step)
@@ -108,6 +143,142 @@ def save_checkpoint(directory: str, step: int, tree, extra: Optional[Dict] = Non
         shutil.rmtree(old, ignore_errors=True)
     else:
         os.rename(tmp, final)  # atomic commit
+    fsync_dir(directory)
+    return final
+
+
+# ---- multi-process sharded checkpoints (format 2, DESIGN.md §7.9) ----
+
+def shard_filename(leaf_i: int, process: int, shard: int) -> str:
+    """Per-process shard file name, keyed by (process, shard-index)."""
+    return f"leaf_{leaf_i:05d}_p{process:03d}_s{shard:03d}.npy"
+
+
+def _shard_record_path(tmp_dir: str, process: int) -> str:
+    return os.path.join(tmp_dir, f"shards_p{process:03d}.json")
+
+
+def begin_sharded_checkpoint(directory: str, step: int) -> str:
+    """Phase 0 (master only): the staging dir every process writes its
+    shards into.  Stays `.tmp` (invisible to every restore entry point)
+    until `commit_sharded_checkpoint` renames it — the two-phase-commit
+    guarantee that a host dying mid-checkpoint never tears a step."""
+    os.makedirs(directory, exist_ok=True)
+    tmp = os.path.join(directory, f"step_{step:08d}.tmp")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    fsync_dir(directory)
+    return tmp
+
+
+def write_process_shards(tmp_dir: str, process: int,
+                         indexed_leaves) -> int:
+    """Phase 1 (every process): dump this process's unique addressable
+    shards of each (global, possibly non-addressable) array.
+
+    indexed_leaves: [(leaf_i, jax.Array)] — leaf_i is the leaf's global
+    index in the manifest's flat leaf list.  Each distinct index range
+    (replica-deduped within the process; cross-process replicas simply
+    overwrite with identical bytes at reassembly) writes one
+    `shard_filename` .npy, and the per-process commit record
+    `shards_p<proc>.json` (fsynced — it IS this process's vote) lists
+    them with index ranges and SHA-256.  Returns the shard-file count.
+    """
+    entries = []
+    n_files = 0
+    for leaf_i, arr in indexed_leaves:
+        shape = tuple(int(s) for s in arr.shape)
+        shards = {}
+        for sh in arr.addressable_shards:
+            idx = tuple((0 if sl.start is None else int(sl.start),
+                         dim if sl.stop is None else int(sl.stop))
+                        for sl, dim in zip(sh.index, shape))
+            if idx not in shards:
+                shards[idx] = np.asarray(sh.data)
+        for s, idx in enumerate(sorted(shards)):
+            data = shards[idx]
+            fname = shard_filename(leaf_i, process, s)
+            _write_atomic(os.path.join(tmp_dir, fname),
+                          lambda f, a=data: np.save(f, a), fsync=False)
+            n_files += 1
+            entries.append({
+                "leaf": int(leaf_i), "shard": s, "file": fname,
+                "index": [list(ab) for ab in idx],
+                "shape": list(shape), "dtype": str(arr.dtype),
+                "sha256": _sha(data),
+            })
+    _write_atomic(_shard_record_path(tmp_dir, process),
+                  lambda f: f.write(json.dumps(
+                      {"process": int(process),
+                       "entries": entries}).encode()))
+    fsync_dir(tmp_dir)
+    return n_files
+
+
+def commit_sharded_checkpoint(directory: str, step: int, *,
+                              num_processes: int, full_leaves,
+                              extra: Optional[Dict] = None) -> str:
+    """Phase 2 (master only): gather every process's phase-1 record,
+    write the master-held full (replicated/host) leaves, then the
+    manifest — the single commit record — fsync, and rename the step
+    into place.
+
+    full_leaves: [(leaf_i, np.ndarray)] — leaves the master holds
+    whole (host bookkeeping, replicated arrays); every other leaf index
+    must be covered by the processes' shard records.  Raises IOError if
+    any process's record is missing (a host died mid-phase-1): the step
+    then stays a `.tmp` dir no restore path will ever select.
+    """
+    tmp = os.path.join(directory, f"step_{step:08d}.tmp")
+    final = os.path.join(directory, f"step_{step:08d}")
+    sharded: Dict[int, List[Dict]] = {}
+    for p in range(num_processes):
+        rec_path = _shard_record_path(tmp, p)
+        if not os.path.isfile(rec_path):
+            raise IOError(
+                f"checkpoint step {step}: missing shard record for "
+                f"process {p} — refusing to commit a torn step")
+        with open(rec_path) as f:
+            for e in json.load(f)["entries"]:
+                sharded.setdefault(int(e["leaf"]), []).append(e)
+    leaves_meta = []
+    for i, arr in full_leaves:
+        if i in sharded:
+            raise ValueError(f"leaf {i} is both full and sharded")
+        arr = np.asarray(jax.device_get(arr))
+        _write_atomic(os.path.join(tmp, f"leaf_{i:05d}.npy"),
+                      lambda f, a=arr: np.save(f, a), fsync=False)
+        leaves_meta.append({"i": int(i), "kind": "full",
+                            "shape": list(arr.shape),
+                            "dtype": str(arr.dtype), "sha256": _sha(arr)})
+    for i, ents in sharded.items():
+        leaves_meta.append({
+            "i": int(i), "kind": "sharded", "shape": ents[0]["shape"],
+            "dtype": ents[0]["dtype"],
+            "shards": [{"file": e["file"], "index": e["index"],
+                        "sha256": e["sha256"]} for e in ents]})
+    leaves_meta.sort(key=lambda e: e["i"])
+    if [e["i"] for e in leaves_meta] != list(range(len(leaves_meta))):
+        raise ValueError(
+            f"leaf indices {[e['i'] for e in leaves_meta]} do not form a "
+            f"contiguous flat list")
+    manifest = {"format": 2, "step": int(step),
+                "processes": int(num_processes),
+                "extra": extra or {}, "leaves": leaves_meta}
+    _write_atomic(os.path.join(tmp, "manifest.json"),
+                  lambda f: f.write(json.dumps(manifest).encode()))
+    fsync_dir(tmp)
+    if os.path.exists(final):
+        old = final + ".old.tmp"
+        if os.path.exists(old):
+            shutil.rmtree(old)
+        os.rename(final, old)
+        os.rename(tmp, final)
+        shutil.rmtree(old, ignore_errors=True)
+    else:
+        os.rename(tmp, final)
+    fsync_dir(directory)
     return final
 
 
@@ -119,6 +290,14 @@ def _valid(path: str, verify_sha: bool = False) -> bool:
         with open(man) as f:
             m = json.load(f)
         for e in m["leaves"]:
+            if e.get("kind", "full") == "sharded":
+                for srec in e["shards"]:
+                    shard = os.path.join(path, srec["file"])
+                    if not os.path.isfile(shard):
+                        return False
+                    if verify_sha and _sha(np.load(shard)) != srec["sha256"]:
+                        return False
+                continue
             leaf = os.path.join(path, f"leaf_{e['i']:05d}.npy")
             if not os.path.isfile(leaf):
                 return False
@@ -191,6 +370,20 @@ def load_leaves(directory: str, step: int,
         manifest = json.load(f)
     leaves = []
     for e in manifest["leaves"]:
+        if e.get("kind", "full") == "sharded":
+            # format 2: reassemble the global leaf from per-process
+            # shard files by their manifest index ranges (replicated
+            # shards overwrite with identical bytes)
+            arr = np.zeros(tuple(e["shape"]), np.dtype(e["dtype"]))
+            for srec in e["shards"]:
+                data = np.load(os.path.join(path, srec["file"]))
+                if verify and _sha(data) != srec["sha256"]:
+                    raise IOError(
+                        f"checkpoint leaf {e['i']} shard {srec['file']} "
+                        f"of step {step} failed integrity check")
+                arr[tuple(slice(a, b) for a, b in srec["index"])] = data
+            leaves.append(arr)
+            continue
         arr = np.load(os.path.join(path, f"leaf_{e['i']:05d}.npy"))
         if verify and _sha(arr) != e["sha256"]:
             raise IOError(

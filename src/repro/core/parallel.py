@@ -442,13 +442,28 @@ class MSCChunkPlan:
 
     def __init__(self, mesh: Mesh, cfg: MSCConfig, axis_name=None,
                  inner_axis: Optional[str] = None,
-                 chunks_per_step: int = 1):
+                 chunks_per_step: int = 1,
+                 replicate_outputs: bool = False):
         if not cfg.matrix_free:
             raise ValueError("the continuous engine requires "
                              "matrix_free=True (see power_iter."
                              "build_chunk_fn)")
         self.sched = _flat_schedule(mesh, cfg, axis_name, inner_axis)
         self.chunks_per_step = int(chunks_per_step)
+        # multi-process meshes (launch/distributed.py): the engine reads
+        # `finished` and the evicted slots' results on the host, which
+        # np.asarray can only do on fully-addressable arrays — constrain
+        # those outputs replicated so every process holds the whole
+        # value (one extra all-gather of tiny per-slot vectors per
+        # dispatch; single-process meshes skip it)
+        self.replicate_outputs = bool(replicate_outputs)
+
+    def _replicated(self, tree):
+        if not self.replicate_outputs:
+            return tree
+        rep = NamedSharding(self.sched.mesh, P())
+        return jax.tree.map(
+            lambda x: jax.lax.with_sharding_constraint(x, rep), tree)
 
     # ---- shapes / structs --------------------------------------------
     def mode_shapes(self, bucket, B: int):
@@ -606,7 +621,7 @@ class MSCChunkPlan:
             for carry in out_carries:
                 fin_j = carry.done[:, 0] | (carry.iters[:, 0] >= cap)
                 finished = fin_j if finished is None else finished & fin_j
-            return tuple(out_carries), finished
+            return tuple(out_carries), self._replicated(finished)
 
         return step
 
@@ -678,7 +693,7 @@ class MSCChunkPlan:
                 out_blocks.append(blk)
                 out_carries.append(car)
             return (tuple(out_blocks), tuple(out_carries),
-                    MSCResult(modes=tuple(modes)))
+                    self._replicated(MSCResult(modes=tuple(modes))))
 
         return refill
 

@@ -91,6 +91,19 @@ def restore_msc_engine(directory: str, *, devices: Optional[list] = None,
                                        **restore_kwargs)
 
 
+def restore_after_host_loss(directory: str, **restore_kwargs):
+    """Survivor-side restore of the multi-host control plane
+    (DESIGN.md §7.9): when a `jax.distributed` worker dies, the master
+    rebuilds the engine from the newest COMMITTED multi-host checkpoint
+    onto its own local devices — `best_msc_shape` picks the shrunk
+    factorization via restore_msc_engine's prefer-inner policy, exactly
+    the §7.8 elastic path but with `jax.local_devices()` as the reduced
+    host set.  The checkpoint's device-layout carries canonicalize on
+    import, so masks and power_iters_run resume bit-identically."""
+    return restore_msc_engine(directory, devices=jax.local_devices(),
+                              **restore_kwargs)
+
+
 @dataclasses.dataclass
 class ElasticTrainer:
     """Wraps TrainLoop construction so a restart re-derives everything

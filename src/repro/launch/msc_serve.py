@@ -217,7 +217,10 @@ def main(argv=None) -> int:
         print(f"  fault tolerance: {fs.checkpoints_written} checkpoints, "
               f"{fs.restores} restores, {fs.retries} retries, "
               f"{fs.shed_requests} shed, "
-              f"{fs.fallback_requests} fallback-served")
+              f"{fs.fallback_requests} fallback-served, "
+              f"{fs.heartbeats_missed} heartbeats missed, "
+              f"{fs.host_losses} host losses, {fs.reinits} reinits, "
+              f"{fs.shard_files_written} shard files")
         for i in (0, len(tensors) - 1):
             sw = [int(results[i][j].power_iters_run) for j in range(3)]
             print(f"  req {i}: sweeps={sw}")

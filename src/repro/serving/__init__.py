@@ -1,4 +1,5 @@
 from .engine import ServeEngine, build_serve_steps
-from .faults import (FaultInjector, FaultPlan, InjectedFault, LoadShedError,
-                     corrupt_checkpoint_leaf, fail_all_from)
+from .faults import (DistKillPlan, FaultInjector, FaultPlan, InjectedFault,
+                     LoadShedError, corrupt_checkpoint_leaf,
+                     corrupt_checkpoint_shard, fail_all_from)
 from .msc_engine import MSCContinuousEngine, MSCServeEngine, ServeStats

@@ -24,6 +24,14 @@ deterministically in tests and benches:
     `launch/elastic.py:restore_msc_engine` onto a truncated device list
     IS the injection (the checkpoint is mesh-independent by
     construction).
+  * host loss (DESIGN.md §7.9) — `DistKillPlan` SIGKILLs a WORKER
+    process of the multi-host control plane (launch/distributed.py) at
+    a named protocol point: on receiving a tick, after a chunk step
+    completes (mid-solve, before the done-ack), or on a checkpoint
+    command before the shard write (the torn-checkpoint case).  Driven
+    by the MSC_DIST_KILL env var so test/bench subprocess workers need
+    no plumbing; `corrupt_checkpoint_shard` is the format-2 analogue of
+    `corrupt_checkpoint_leaf`.
 
 Engine recovery errors (`LoadShedError`) live here too so policy code
 and tests import them from one place.
@@ -105,6 +113,74 @@ class FaultInjector:
         if kind == "chunk" and self.plan.kill_after_chunk is not None \
                 and self.counts[kind] - 1 == self.plan.kill_after_chunk:
             _sigkill()
+
+
+class DistKillPlan:
+    """SIGKILL this process at the k-th occurrence of a named multi-host
+    control-plane point — the worker-side failure injection of
+    launch/distributed.py (DESIGN.md §7.9).
+
+    Points (0-based per-point counters over the worker's lifetime):
+      "tick"  — on receiving tick #k, before the ready-ack (the master
+                detects the loss before any collective dispatches).
+      "step"  — after chunk step #k completes, before the done-ack
+                (mid-solve: device state is ahead of the last ack).
+      "shard" — on checkpoint command #k, before writing any shard file
+                (the torn-checkpoint case: the step must stay .tmp and
+                never be selected by restorable_steps).
+
+    `from_env` parses MSC_DIST_KILL="point:k" so subprocess workers in
+    tests/benches need no argument plumbing; returns None when unset.
+    """
+
+    POINTS = ("tick", "step", "shard")
+
+    def __init__(self, point: str, index: int):
+        if point not in self.POINTS:
+            raise ValueError(f"unknown kill point {point!r}; "
+                             f"expected one of {self.POINTS}")
+        self.point = point
+        self.index = int(index)
+        self._counts = {p: 0 for p in self.POINTS}
+
+    @classmethod
+    def from_env(cls, var: str = "MSC_DIST_KILL") -> Optional["DistKillPlan"]:
+        val = os.environ.get(var)
+        if not val:
+            return None
+        point, _, idx = val.partition(":")
+        return cls(point, int(idx or 0))
+
+    def hit(self, point: str):
+        """Record one occurrence of `point`; kills if it is the planned
+        one.  No cleanup runs — exactly like a preempted host."""
+        i = self._counts[point]
+        self._counts[point] = i + 1
+        if point == self.point and i == self.index:
+            _sigkill()
+
+
+def corrupt_checkpoint_shard(directory: str, step: int,
+                             offset: int = 128, nbytes: int = 8):
+    """Flip bytes in the first per-process shard file of a committed
+    format-2 (multi-host) checkpoint step without touching the manifest
+    — `restorable_steps(verify_sha=True)` must reject the step."""
+    import glob
+
+    shards = sorted(glob.glob(os.path.join(
+        directory, f"step_{step:08d}", "leaf_*_p*_s*.npy")))
+    if not shards:
+        raise FileNotFoundError(
+            f"no shard files under step {step} of {directory!r}")
+    path = shards[0]
+    size = os.path.getsize(path)
+    offset = min(offset, max(0, size - nbytes))
+    with open(path, "r+b") as f:
+        f.seek(offset)
+        data = f.read(nbytes)
+        f.seek(offset)
+        f.write(bytes(b ^ 0xFF for b in data))
+    return path
 
 
 def corrupt_checkpoint_leaf(directory: str, step: int, leaf_i: int = 0,

@@ -106,6 +106,16 @@ class ServeStats:
         was recovering.
       fallback_requests — requests served by the degrade-to-sequential
         oracle after retries were exhausted.
+
+    Multi-host fault-tolerance counters (DESIGN.md §7.9, bumped by the
+    launch/distributed.py control plane via `note_ft_event`):
+
+      heartbeats_missed — control-channel ack waits that timed out or
+        hit EOF (a SIGKILLed worker closes its socket instantly).
+      host_losses — distinct worker-loss events the master detected.
+      reinits — engines rebuilt on a reduced host set after a loss.
+      shard_files_written — per-process checkpoint shard files written
+        across all processes (the master sums worker acks).
     """
 
     requests: int = 0
@@ -124,6 +134,10 @@ class ServeStats:
     retries: int = 0
     shed_requests: int = 0
     fallback_requests: int = 0
+    heartbeats_missed: int = 0
+    host_losses: int = 0
+    reinits: int = 0
+    shard_files_written: int = 0
 
     @property
     def occupancy(self) -> float:
@@ -399,7 +413,8 @@ class MSCContinuousEngine:
                  checkpoint_dir: Optional[str] = None,
                  ckpt_every_chunks: int = 8, keep_checkpoints: int = 3,
                  max_retries: int = 3, retry_backoff_s: float = 0.05,
-                 retry_backoff_max_s: float = 2.0, fault_injector=None):
+                 retry_backoff_max_s: float = 2.0, fault_injector=None,
+                 replicate_outputs: bool = False):
         if slots < 1:
             raise ValueError(f"slots must be >= 1, got {slots}")
         if placement not in ("compact", "stable"):
@@ -420,9 +435,15 @@ class MSCContinuousEngine:
                                    self.slots)
         self.max_queue_chunks = int(max_queue_chunks)
         self.placement = placement
+        # replicate_outputs=True on multi-process (jax.distributed)
+        # meshes: host-read outputs must be fully addressable everywhere
+        # (see MSCChunkPlan); the per-process executables stay identical
+        # across hosts, which is what keeps the lockstep control plane
+        # (launch/distributed.py) deterministic.
         self._plan = MSCChunkPlan(mesh, cfg, axis_name=axis_name,
                                   inner_axis=inner_axis,
-                                  chunks_per_step=chunks_per_step)
+                                  chunks_per_step=chunks_per_step,
+                                  replicate_outputs=replicate_outputs)
         self._quantum = _bucket_quantum(mesh, inner_axis, bucket_quantum)
         self._quantum_base = int(bucket_quantum)  # mesh-independent (ckpt)
         self._cache: Dict[Tuple, Tuple] = {}
@@ -455,6 +476,12 @@ class MSCContinuousEngine:
         self._stats = dataclasses.replace(
             self._stats, **{k: getattr(self._stats, k) + v
                             for k, v in deltas.items()})
+
+    def note_ft_event(self, **deltas):
+        """Bump fault-tolerance counters owned by an outer control plane
+        (the multi-host driver in launch/distributed.py: heartbeat
+        misses, host losses, reinits, shard files written)."""
+        self._bump(**deltas)
 
     def _executables(self, bucket):
         """(chunk-step, refill) AOT executables for one bucket — the
@@ -769,6 +796,9 @@ class MSCContinuousEngine:
             buckets_meta.append({"bucket": list(bucket),
                                  "chunk": tb.chunk,
                                  "live_slots": live})
+        return leaves, self._export_meta(buckets_meta)
+
+    def _export_meta(self, buckets_meta, **over) -> Dict:
         meta = {
             "format": 1,
             "mesh": [[a, int(s)] for a, s in self.mesh.shape.items()],
@@ -792,7 +822,51 @@ class MSCContinuousEngine:
             "stats": dataclasses.asdict(self._stats),
             "buckets": buckets_meta,
         }
-        return leaves, meta
+        meta.update(over)
+        return meta
+
+    def _export_split(self):
+        """(device_indexed, host_indexed, meta): the multi-host
+        checkpoint payload (DESIGN.md §7.9).
+
+        Same flat leaf order as `_export`, but the 15 per-bucket carry
+        leaves stay as their PADDED device-layout jax.Arrays — on a
+        process-spanning mesh no process can materialize their global
+        values, so each process writes its own addressable shards
+        (store.write_process_shards) and the master commits the rest
+        (`host_indexed`, fully host-side bookkeeping) whole.  The meta
+        carries `carry_layout="device"` so `_import` knows to
+        canonicalize (trim padding, collapse verdict columns) at
+        restore, after which the checkpoint is exactly as
+        mesh-independent as the format-1 export."""
+        device: List[Tuple[int, jax.Array]] = []
+        host: List[Tuple[int, np.ndarray]] = []
+        i = 0
+        buckets_meta = []
+        for bucket in sorted(self._tables):
+            tb = self._tables[bucket]
+            for carry in tb.carries:
+                for leaf in (carry.v, carry.lam, carry.resid,
+                             carry.iters, carry.done):
+                    device.append((i, leaf))
+                    i += 1
+            live = [s for s, r in enumerate(tb.slot_req) if r is not None]
+            host_leaves = [tb.dims.astype(np.int32),
+                           np.asarray(tb.fin, np.bool_),
+                           np.asarray([-1 if r is None else r
+                                       for r in tb.slot_req], np.int64),
+                           np.asarray(list(tb.queue),
+                                      np.int64).reshape(-1, 2)]
+            host_leaves += [tb.arrs[s] for s in live]
+            host_leaves += [self._pending[rid][0] for rid, _ in tb.queue]
+            for leaf in host_leaves:
+                host.append((i, leaf))
+                i += 1
+            buckets_meta.append({"bucket": list(bucket),
+                                 "chunk": tb.chunk,
+                                 "live_slots": live})
+        return device, host, self._export_meta(buckets_meta,
+                                               carry_layout="device")
 
     @classmethod
     def restore(cls, directory: str, *, mesh: Optional[Mesh] = None,
@@ -844,12 +918,25 @@ class MSCContinuousEngine:
         CURRENT mesh (import_carry re-pads + device_puts each carry leaf
         with this engine's shardings; rebuild_blocks re-scatters the
         stashed tensors exactly like the admission path did)."""
+        from repro.core.msc import MODE_PERMS
+
+        # multi-host (format 2) checkpoints store the carries in PADDED
+        # device layout (reassembled from per-process shards); trim each
+        # mode's slice dim to the true bucket size and collapse the
+        # replicated per-request verdict columns to the canonical copy —
+        # after which the import path is identical to format 1 (and just
+        # as mesh-elastic)
+        device_layout = meta.get("carry_layout") == "device"
         it = iter(leaves)
         for bmeta in meta["buckets"]:
             bucket = tuple(int(x) for x in bmeta["bucket"])
             host_carries = []
-            for _ in range(3):
+            for j in range(3):
                 v, lam, resid, iters, done = (next(it) for _ in range(5))
+                if device_layout:
+                    m = bucket[MODE_PERMS[j][0]]
+                    v, lam, resid = v[:, :m], lam[:, :m], resid[:, :m]
+                    iters, done = iters[:, 0], done[:, 0]
                 host_carries.append(SolveState(v=v, lam=lam, resid=resid,
                                                iters=iters, done=done))
             dims = np.asarray(next(it), np.int32)
