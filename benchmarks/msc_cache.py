@@ -1,0 +1,207 @@
+"""Content-addressed result cache + warm-start tier (DESIGN.md §7.10).
+
+The tentpole perf claim of PR 8: at serving scale the request stream is
+repeat-heavy (hyperparameter sweeps re-probing the same tensor, MCAM
+affinity rows, dashboard refreshes), and MSC is deterministic — so a
+content-addressed cache in front of the continuous engine turns the
+common case into a hash lookup, and near-duplicates into warm-started
+solves that converge at their first gate probe.
+
+Per (mesh p×q, epilogue) cell this bench measures both tiers:
+
+  * **Zipf exact-repeat cell** — a Zipf(1.2)-distributed stream of n
+    draws over U unique planted tensors, served batch-by-batch through
+    two warmed continuous engines: cache-off vs cache-on (tier 1 only).
+    Reports the stream's exact-repeat rate (must be ≥ 0.5 — the regime
+    the cache targets), both wall times, and `throughput_ratio` =
+    t_off / t_on (≥ 5 is the acceptance bar: hits skip the device
+    entirely, so the ratio approaches the repeat factor).  Hit results
+    are asserted bit-identical to the cache-off serve of the same
+    stream.
+  * **Warm-start cell** — slow-converging (near-noise γ) donors served
+    cold, then near-duplicates (~0.3% relative perturbation) served
+    with warm_start=True.  Reports median realized sweeps warm vs cold
+    (warm ≤ 0.5 × cold is the bar), asserts every warm-started mask is
+    bit-identical to the sequential oracle, and pins
+    `warm_recompiles == 0` via jax.monitoring across the whole warm
+    phase — the warm inputs are part of the refill executable's lowered
+    signature from the start, so tier 2 must never trigger a recompile.
+
+Rows land in experiments/bench/msc_cache.json AND BENCH_msc_cache.json
+(the CI perf artifact).  CPU caveat: the cache-off baseline pays forced
+host-platform dispatch costs a real TPU wouldn't, but the *ratio* is
+dominated by solves skipped, which transfers.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+from .common import REPO, run_subprocess_json, save_rows
+
+BENCH_PATH = os.path.join(REPO, "BENCH_msc_cache.json")
+
+CPU_CAVEAT = (
+    "measured on forced host-platform devices: absolute times are "
+    "CPU-bound, but throughput_ratio counts solves skipped by the cache, "
+    "which transfers to accelerator deployments")
+
+_CODE = """
+import json
+from benchmarks.msc_cache import measure
+print(json.dumps([measure(**s) for s in json.loads('''{specs}''')]))
+"""
+
+ZIPF_A = 1.2          # rank-probability exponent of the repeat mix
+GAMMA_POOL = 3.0      # pool tensors: non-trivial solves (tens of sweeps)
+GAMMA_WARM = 20.0     # warm-start donors: slow under the tight gate
+WARM_TOL = 1e-4       # tight gate: cold AND warm exits land on the
+                      # same eigenvector to ~1e-4, so threshold
+                      # extraction is insensitive to the different
+                      # iterate paths and masks stay bit-identical
+NEAR_REL = 0.003      # near-duplicate perturbation, relative to std
+
+
+def measure(p: int, q: int, m: int, U: int, n: int, B: int,
+            epilogue: str) -> Dict:
+    """Worker (runs under a forced device count): one cache cell."""
+    import time
+
+    import jax
+    import jax.monitoring as mon
+    import numpy as np
+
+    from repro.core import (MSCConfig, PlantedSpec, make_msc_mesh,
+                            make_planted_tensor, msc_sequential)
+    from repro.serving import MSCContinuousEngine, MSCResultCache
+
+    mesh = make_msc_mesh("flat", devices=jax.devices()[:p * q], shape=(p, q))
+    cfg = MSCConfig(epsilon=3e-4, power_tol=3e-3, power_iters=240,
+                    power_check_every=8, epilogue=epilogue)
+
+    # ---- Zipf exact-repeat cell (tier 1) -----------------------------
+    pool = [np.asarray(make_planted_tensor(
+        jax.random.PRNGKey(i), PlantedSpec.paper(m, GAMMA_POOL)),
+        np.float32) for i in range(U)]
+    rng = np.random.RandomState(0)
+    probs = 1.0 / (np.arange(1, U + 1) ** ZIPF_A)
+    probs /= probs.sum()
+    draws = rng.choice(U, size=n, p=probs)
+    stream = [pool[i] for i in draws]
+    seen: set = set()
+    repeats = 0
+    for i in draws:
+        repeats += int(i in seen)
+        seen.add(int(i))
+    repeat_rate = repeats / n
+
+    off = MSCContinuousEngine(mesh, cfg, slots=B)
+    on = MSCContinuousEngine(mesh, cfg, slots=B,
+                             result_cache=MSCResultCache(max_bytes=256 << 20))
+    off.run([pool[0]])   # compile both engines' executables off the clock
+    on.run([pool[0]])
+
+    def serve(eng):
+        out = []
+        t0 = time.time()
+        for i in range(0, n, B):   # batch-by-batch streaming arrivals
+            out.extend(eng.run(stream[i:i + B]))
+        return out, time.time() - t0
+
+    res_off, t_off = serve(off)
+    base_on = on.stats
+    res_on, t_on = serve(on)
+    s_on = on.stats.delta(base_on)
+    hits_identical = all(
+        (a[j].mask == b[j].mask).all() and np.allclose(a[j].d, b[j].d)
+        for a, b in zip(res_on, res_off) for j in range(3))
+
+    # ---- warm-start cell (tier 2) ------------------------------------
+    wcfg = cfg.with_(power_tol=WARM_TOL, power_iters=480)
+    donors = [np.asarray(make_planted_tensor(
+        jax.random.PRNGKey(100 + i), PlantedSpec.paper(m, GAMMA_WARM)),
+        np.float32) for i in range(4)]
+    nears = []
+    for i in range(2 * len(donors)):
+        base = donors[i % len(donors)]
+        noise = rng.standard_normal(base.shape).astype(np.float32)
+        nears.append(base + NEAR_REL * base.std() * noise)
+
+    warm_eng = MSCContinuousEngine(
+        mesh, wcfg, slots=B, warm_start=True,
+        result_cache=MSCResultCache(max_bytes=256 << 20))
+    cold_res = warm_eng.run(donors)   # cold donors seed the cache
+    cold_sweeps = [max(int(r[j].power_iters_run) for j in range(3))
+                   for r in cold_res]
+
+    events: List[str] = []
+    mon.register_event_duration_secs_listener(
+        lambda ev, dur, **kw: events.append(ev)
+        if "compile" in ev or "trace" in ev else None)
+    try:
+        before = warm_eng.stats
+        warm_res = warm_eng.run(nears)
+        warm_stats = warm_eng.stats.delta(before)
+    finally:
+        mon.clear_event_listeners()
+    warm_sweeps = [max(int(r[j].power_iters_run) for j in range(3))
+                   for r in warm_res]
+    warm_masks_identical = True
+    for t, r in zip(nears, warm_res):
+        ref = msc_sequential(t, wcfg)
+        warm_masks_identical &= all(
+            (r[j].mask == np.asarray(ref[j].mask)).all() for j in range(3))
+
+    return {
+        "p": p, "q": q, "m": m, "U": U, "n": n, "B": B,
+        "epilogue": epilogue, "zipf_a": ZIPF_A,
+        "repeat_rate": repeat_rate,
+        "cache_off_ms": t_off * 1e3, "cache_on_ms": t_on * 1e3,
+        "throughput_ratio": t_off / t_on,
+        "cache_hits": s_on.cache_hits, "cache_misses": s_on.cache_misses,
+        "hit_dispatches": s_on.dispatches,
+        "hits_identical": bool(hits_identical),
+        "warm_starts": warm_stats.warm_starts,
+        "warm_sweeps_saved": warm_stats.warm_sweeps_saved,
+        "cold_median_sweeps": float(np.median(cold_sweeps)),
+        "warm_median_sweeps": float(np.median(warm_sweeps)),
+        "warm_masks_identical": bool(warm_masks_identical),
+        "warm_recompiles": warm_stats.compiles + len(events),
+        "cpu_caveat": None,  # filled by run() from CPU_CAVEAT
+    }
+
+
+def run(full: bool = False) -> List[Dict]:
+    specs = [{"p": 1, "q": 1, "m": 24, "U": 6, "n": 240, "B": 8,
+              "epilogue": "allgather"}]
+    if full:
+        specs += [{"p": 8, "q": 1, "m": 24, "U": 6, "n": 240, "B": 8,
+                   "epilogue": "allgather"},
+                  {"p": 4, "q": 2, "m": 24, "U": 6, "n": 240, "B": 8,
+                   "epilogue": "ring"}]
+    rows: List[Dict] = []
+    for spec in specs:
+        res = run_subprocess_json(_CODE.format(specs=json.dumps([spec])),
+                                  n_devices=spec["p"] * spec["q"],
+                                  timeout=1800)
+        rows.extend(res)
+    for row in rows:
+        row["cpu_caveat"] = CPU_CAVEAT
+        assert row["repeat_rate"] >= 0.5, (
+            f"stream not repeat-heavy enough to exercise tier 1: {row}")
+        assert row["hits_identical"], f"cache hit result mismatch: {row}"
+        assert row["throughput_ratio"] >= 5.0, (
+            f"exact-hit path under 5x effective throughput: {row}")
+        assert row["warm_masks_identical"], (
+            f"warm-started masks diverge from the oracle: {row}")
+        assert row["warm_median_sweeps"] <= 0.5 * row["cold_median_sweeps"], (
+            f"warm starts not halving median sweeps: {row}")
+        assert row["warm_recompiles"] == 0, (
+            f"warm-start admission recompiled: {row}")
+
+    save_rows("msc_cache", rows)
+    with open(BENCH_PATH, "w") as f:
+        json.dump(rows, f, indent=2)
+    print(f"[msc_cache] wrote {BENCH_PATH}")
+    return rows

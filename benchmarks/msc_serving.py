@@ -96,7 +96,7 @@ def measure(p: int, q: int, m: int, B: int, epilogue: str) -> Dict:
         "throughput_ratio": t_l["median_s"] / t_b["median_s"],
         "masks_identical": bool(masks_identical),
         "warm_recompiles": warm.compiles,
-        "warm_cache_hits": warm.cache_hits,
+        "warm_cache_hits": warm.exec_cache_hits,
         "executables_compiled": batched.stats.compiles,
         "predicted_speedup": pred["speedup"],
         "bf16_cpu_caveat": None,  # filled by run() from BF16_CPU_CAVEAT

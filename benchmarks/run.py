@@ -15,6 +15,9 @@
   msc_multihost       (new) 1-vs-2-process jax.distributed serving,
                       sharded-checkpoint overhead, host-loss recovery
                       (DESIGN.md §7.9)
+  msc_cache           (new) content-addressed result cache: Zipf
+                      exact-repeat throughput + spectral warm starts
+                      (DESIGN.md §7.10)
 
 Usage:
   PYTHONPATH=src python -m benchmarks.run            # CPU-feasible sizes
@@ -36,9 +39,10 @@ from .common import print_rows, save_rows
 ALL = ("fig4_quality", "fig5_strong_scaling", "fig6_data_scaling",
        "fig8_comm", "kernel_bench", "power_iter_bench", "ring_epilogue",
        "inner_shard", "msc_serving", "msc_continuous", "msc_faults",
-       "msc_multihost")
+       "msc_multihost", "msc_cache")
 QUICK = ("power_iter_bench", "kernel_bench", "ring_epilogue", "inner_shard",
-         "msc_serving", "msc_continuous", "msc_faults", "msc_multihost")
+         "msc_serving", "msc_continuous", "msc_faults", "msc_multihost",
+         "msc_cache")
 
 
 def main(argv=None) -> int:

@@ -49,6 +49,7 @@ import dataclasses
 import hashlib
 import json
 import os
+import re
 import shutil
 import threading
 import warnings
@@ -393,16 +394,72 @@ def load_leaves(directory: str, step: int,
     return leaves, manifest.get("extra", {})
 
 
+_SHARD_FILE_RE = re.compile(r"^leaf_\d{5}_p\d{3}_s\d{3}\.npy$")
+_SHARD_RECORD_RE = re.compile(r"^shards_p\d{3}\.json$")
+
+
+def _gc_orphan_shards(path: str):
+    """Remove format-2 debris a COMMITTED step dir can carry: shard
+    files (`leaf_*_p*_s*.npy`) the manifest doesn't reference and stale
+    phase-1 records (`shards_p*.json`) pointing at them.
+
+    These arise when a two-phase checkpoint attempt aborts after some
+    processes wrote phase-1 shards and a later attempt commits the same
+    step with a different process count / sharding: the rename carries
+    the earlier attempt's files along.  They are dead weight — every
+    restore path reads only manifest-listed files — but on a 1000-node
+    deployment they accumulate (one eigensolver carry shard per process
+    per abort), so GC reaps them.  Anything unparseable is left alone:
+    this runs inside live checkpoint dirs, so deleting only what is
+    provably unreferenced is the safety bar."""
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        referenced = set()
+        for e in manifest["leaves"]:
+            if e.get("kind", "full") == "sharded":
+                referenced.update(s["file"] for s in e["shards"])
+            else:
+                referenced.add(f"leaf_{e['i']:05d}.npy")
+    except (OSError, json.JSONDecodeError, KeyError, TypeError, ValueError):
+        return
+    for name in os.listdir(path):
+        full = os.path.join(path, name)
+        stale = False
+        if _SHARD_FILE_RE.match(name):
+            stale = name not in referenced
+        elif _SHARD_RECORD_RE.match(name):
+            try:
+                with open(full) as f:
+                    entries = json.load(f)["entries"]
+                stale = any(e["file"] not in referenced for e in entries)
+            except (OSError, json.JSONDecodeError, KeyError, TypeError):
+                stale = True  # an unreadable vote record is pure debris
+        if stale:
+            try:
+                os.remove(full)
+            except OSError:
+                pass
+
+
 def gc_checkpoints(directory: str, keep: int):
-    """Delete all but the newest `keep` steps (and any stale .tmp dirs)."""
+    """Delete all but the newest `keep` steps, any stale `.tmp` /
+    `.old.tmp` step dirs (aborted or parked two-phase commits), and —
+    inside each kept committed step — orphaned format-2 shard files an
+    aborted attempt left behind (`_gc_orphan_shards`)."""
     if not os.path.isdir(directory):
         return
-    for s in _all_steps(directory)[:-keep]:
+    steps = _all_steps(directory)
+    for s in steps[:-keep]:
         shutil.rmtree(os.path.join(directory, f"step_{s:08d}"),
                       ignore_errors=True)
     for name in os.listdir(directory):
         if name.startswith("step_") and name.endswith(".tmp"):
             shutil.rmtree(os.path.join(directory, name), ignore_errors=True)
+    for s in steps[-keep:] if keep > 0 else ():
+        path = os.path.join(directory, f"step_{s:08d}")
+        if os.path.isdir(path):
+            _gc_orphan_shards(path)
 
 
 def restore_checkpoint(directory: str, step: int, like,

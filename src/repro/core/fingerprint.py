@@ -1,0 +1,161 @@
+"""Content-addressed fingerprints for the MSC result cache (DESIGN.md §7.10).
+
+MSC is deterministic: the same tensor bytes under the same solver
+configuration produce the same masks on any mesh (the serving parity
+contract pinned since PR 5).  That makes (tensor content, solver
+config, code version) a sound cache key — this module defines the
+canonical form of each component:
+
+  * `tensor_fingerprint` — SHA-256 over the C-contiguous bytes plus the
+    shape/dtype header, so the key is invariant to memory layout
+    (Fortran order, transposed views, non-contiguous slices) but
+    sensitive to every element.
+  * `config_fingerprint` — sorted-field digest of an `MSCConfig` (or a
+    plain dict of knobs) with purely-observational knobs dropped:
+    checkpoint cadence, retry policy, scheduler batching etc. never
+    change what a solve returns, so they must not fragment the cache.
+  * `cache_salt` — a code/kernel version salt: bump `CODE_VERSION`
+    whenever a numerics-affecting change lands and every persisted
+    entry silently misses instead of serving stale results.
+  * `spectral_sketch` — the tier-2 near-hit signature: per-slice
+    Rayleigh values of each unfolding's covariance against a fixed
+    probe basis (the solver's deterministic init vector plus harmonic
+    probes).  Nearby tensors — small perturbations of the same data —
+    have nearby sketches, while the per-slice resolution keeps
+    different cluster structures apart.  O(r) passes over the tensor on
+    the host; no device work.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Iterable, Union
+
+import numpy as np
+
+# bump on any change that alters solver numerics or result layout: a
+# persisted cache written by older code then misses instead of serving
+# results the current kernels would not reproduce
+CODE_VERSION = "msc-result-cache-v1"
+
+# engine/scheduler knobs that never change what a solve returns — the
+# serving invariance contracts pinned by tests/test_msc_continuous.py
+# (placement/refill batching/arrival order) and tests/test_msc_faults.py
+# (checkpoint cadence, retry policy).  Dropped from config fingerprints
+# so observability/policy tuning never fragments the cache.
+OBSERVATIONAL_KNOBS = frozenset({
+    "ckpt_every_chunks", "keep_checkpoints", "checkpoint_dir",
+    "max_retries", "retry_backoff_s", "retry_backoff_max_s",
+    "refill_min_free", "max_queue_chunks", "placement",
+    "chunks_per_step", "bucket_quantum", "slots",
+})
+
+
+def tensor_fingerprint(arr) -> str:
+    """SHA-256 of a tensor's canonical (C-contiguous) bytes + header.
+
+    `np.ascontiguousarray` normalizes memory layout, so C/F order,
+    transposed-back views, and strided copies of the same values hash
+    identically; shape and dtype are folded in so a reshape or a cast
+    is a different key (the serving engine hashes AFTER casting to its
+    boundary dtype, so client-side dtypes don't fragment the cache).
+    """
+    a = np.ascontiguousarray(np.asarray(arr))
+    h = hashlib.sha256()
+    h.update(str(a.dtype).encode())
+    h.update(np.asarray(a.shape, np.int64).tobytes())
+    h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def _canon_value(v):
+    """Canonical token for one knob value: numeric types collapse to
+    float semantics (60 and 60.0 are the same knob setting), bools stay
+    distinct from ints."""
+    if isinstance(v, bool):
+        return f"b:{int(v)}"
+    if isinstance(v, (int, float, np.integer, np.floating)):
+        return f"n:{float(v)!r}"
+    if v is None:
+        return "z"
+    return f"s:{v}"
+
+
+def config_fingerprint(cfg: Union[dict, object],
+                       ignore: Iterable[str] = OBSERVATIONAL_KNOBS) -> str:
+    """Sorted-field digest of a solver config (dataclass or dict).
+
+    Sorting makes the digest independent of field declaration order;
+    `ignore` drops observational knobs.  Semantically-equal configs —
+    reconstructed via `dataclasses.asdict`, `with_()` round-trips, or
+    int-vs-float spellings of the same number — collide; any
+    solver-relevant change (precision, epilogue, power_tol, ...) does
+    not.
+    """
+    if dataclasses.is_dataclass(cfg) and not isinstance(cfg, type):
+        d = dataclasses.asdict(cfg)
+    elif isinstance(cfg, dict):
+        d = dict(cfg)
+    else:
+        raise TypeError(f"expected a dataclass or dict, got {type(cfg)}")
+    drop = set(ignore)
+    items = sorted((k, _canon_value(v)) for k, v in d.items()
+                   if k not in drop)
+    return hashlib.sha256(json.dumps(items).encode()).hexdigest()
+
+
+def cache_salt() -> str:
+    """Code/kernel version salt mixed into every tier-1 key.
+
+    Covers the repo's numerics version (CODE_VERSION) and the jax
+    runtime a persisted cache was written under — an upgraded runtime
+    re-solves rather than trusting bytes an older compiler produced."""
+    import jax
+
+    return hashlib.sha256(
+        f"{CODE_VERSION}|jax={jax.__version__}".encode()).hexdigest()[:16]
+
+
+def result_cache_key(arr, cfg, salt: str = None) -> str:
+    """The full tier-1 key: tensor content ⊕ solver config ⊕ code salt."""
+    return "-".join((tensor_fingerprint(arr), config_fingerprint(cfg),
+                     salt if salt is not None else cache_salt()))
+
+
+def _probe_vectors(c: int, r: int) -> np.ndarray:
+    """(r, c) deterministic unit probes: row 0 is the eigensolver's own
+    init direction (`power_iter._init_vectors`), the rest fixed
+    harmonics — no PRNG, so sketches are reproducible across hosts."""
+    i = np.arange(c, dtype=np.float32)
+    rows = [np.ones(c, np.float32) + 0.01 * np.sin(1.37 * i + 0.3)]
+    for k in range(1, r):
+        rows.append(np.cos((k + 0.731) * i + 0.17 * k).astype(np.float32))
+    p = np.stack(rows[:r])
+    return p / np.linalg.norm(p, axis=1, keepdims=True)
+
+
+def spectral_sketch(arr, r: int = 4) -> np.ndarray:
+    """Tier-2 near-hit signature: top-r Rayleigh values per slice per
+    unfolding, concatenated.
+
+    For unfolding j with slices T_i (rows × c) and unit probes u_k,
+    the entry is uₖᵀ C_i uₖ = ‖T_i uₖ‖² — the Rayleigh quotient of the
+    slice covariance against the probe basis.  Small perturbations of
+    the tensor move every entry by O(‖δ‖), so the relative L2 distance
+    between sketches bounds how far apart the slice spectra are; the
+    per-slice resolution separates tensors whose planted structure
+    differs even at equal total energy."""
+    from .msc import MODE_PERMS
+
+    a = np.ascontiguousarray(np.asarray(arr, np.float32))
+    if a.ndim != 3:
+        raise ValueError(f"spectral_sketch needs a 3rd-order tensor, "
+                         f"got shape {a.shape}")
+    sigs = []
+    for perm in MODE_PERMS:
+        t = np.transpose(a, perm)                       # (m, rows, c)
+        probes = _probe_vectors(t.shape[-1], r)         # (r, c)
+        tu = np.einsum("mrc,kc->mrk", t, probes)
+        sigs.append(np.sum(tu * tu, axis=1).reshape(-1))  # (m·r,)
+    return np.concatenate(sigs)

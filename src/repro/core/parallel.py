@@ -519,6 +519,24 @@ class MSCChunkPlan:
         return tuple(jax.device_put(np.zeros(sh, dtype), bsh)
                      for sh in self.mode_shapes(bucket, B))
 
+    def warm_shapes(self, bucket, B: int):
+        """(B, m', c) warm-start staging shape per mode — one row of
+        cached eigenvector iterates per slot, laid out exactly like the
+        carry's `v` leaf (DESIGN.md §7.10)."""
+        return tuple((B, m_pad, c)
+                     for (B, m_pad, _, c) in self.mode_shapes(bucket, B))
+
+    def zero_warm(self, bucket, B: int):
+        """Device-resident all-zero warm-start staging (carry-v
+        sharding) — passed on every refill with no warm admissions, so
+        the cold path transfers no warm bytes host→device and the
+        executable signature never changes (zero-recompile contract)."""
+        import numpy as np
+
+        vsh = self._carry_shardings().v
+        return tuple(jax.device_put(np.zeros(sh, np.float32), vsh)
+                     for sh in self.warm_shapes(bucket, B))
+
     def init_state(self, bucket, B: int, dtype):
         """Fresh device-resident slot table: zero blocks, every slot
         inert (done=True ⇒ frozen until the first refill)."""
@@ -627,7 +645,8 @@ class MSCChunkPlan:
 
     def build_refill(self):
         """(blocks, carries, dims, new_blocks, new_dims, take_new,
-        new_done, perm) → (blocks', carries', results).
+        new_done, perm, warm_v, use_warm) → (blocks', carries',
+        results).
 
         The evict/finalize/repack step.  `results` is the bucket-padded
         batched MSCResult finalized from the PRE-repack state (`dims`
@@ -647,6 +666,14 @@ class MSCChunkPlan:
         scatters the staging rows to their shards.  The gather/select
         runs under shard_map (device-local — repacking moves no link
         bytes), fused with the finalize in one region.
+
+        `warm_v` (per-mode (B, m', c) staging, `warm_shapes`) and
+        `use_warm` ((B,) bool) are the tier-2 warm-start inputs
+        (DESIGN.md §7.10): slot s's fresh carry starts from the cached
+        iterates warm_v[j][s] where use_warm[s], else the deterministic
+        init.  Cold dispatches pass the device-resident `zero_warm`
+        zeros + all-False, so ONE executable serves both paths — warm
+        admissions recompile nothing.
         """
         sched = self.sched
         specs = sched.batched_carry_specs
@@ -673,13 +700,14 @@ class MSCChunkPlan:
         )
 
         def refill(blocks, carries, dims, new_blocks, new_dims, take_new,
-                   new_done, perm):
+                   new_done, perm, warm_v, use_warm):
             args = []
             valids = []
             for j in range(3):
                 B, m_pad, _, c = new_blocks[j].shape
                 ncarry = sched.init_mode_carry(
-                    B, m_pad, c, new_dims[:, C_OF[j]], new_done)
+                    B, m_pad, c, new_dims[:, C_OF[j]], new_done,
+                    warm_v=warm_v[j], use_warm=use_warm)
                 valid = jnp.arange(m_pad)[None, :] < dims[:, j][:, None]
                 valids.append(valid)
                 args.extend((blocks[j], carries[j], valid, new_blocks[j],

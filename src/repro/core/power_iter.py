@@ -119,6 +119,26 @@ def _normalize(v, eps=1e-30):
     return v / (jnp.linalg.norm(v, axis=-1, keepdims=True) + eps)
 
 
+def merge_warm_start(v0: jax.Array, warm_v: jax.Array,
+                     use_warm: jax.Array) -> jax.Array:
+    """Per-request warm-start selection for the serving admission path
+    (DESIGN.md §7.10): request b's start iterates are `warm_v[b]` — a
+    cached near-converged eigenvector set — where `use_warm[b]`, else
+    the deterministic `_init_vectors` start `v0[b]`.
+
+    `warm_v` rows are re-normalized defensively (cached iterates are
+    already unit, but persistence round-trips and column re-padding
+    must not be able to feed the gate an off-scale vector); all-zero
+    padded rows stay exactly zero, preserving the padded-slice
+    invariants the chunk step relies on.  Traced-shape only — this runs
+    inside the refill executable, so warm admissions recompile nothing.
+    """
+    w = _normalize(jnp.asarray(warm_v, v0.dtype))
+    u = jnp.asarray(use_warm).reshape(
+        (-1,) + (1,) * (v0.ndim - 1))
+    return jnp.where(u, w, v0)
+
+
 def _maybe_pvary(v, vary_axes):
     """Mark the loop-carry init as device-varying inside shard_map.
 

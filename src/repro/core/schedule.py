@@ -468,7 +468,8 @@ class ModeSchedule:
         return SolveState(v=P(None, _spec_entry(self.slice_axes), None),
                           lam=vs, resid=vs, iters=vs, done=vs)
 
-    def init_mode_carry(self, B: int, m_pad: int, c: int, c_req, done):
+    def init_mode_carry(self, B: int, m_pad: int, c: int, c_req, done,
+                        warm_v=None, use_warm=None):
         """Fresh global carry for one mode of a B-slot table.
 
         c_req: (B,) per-request column bounds masking the deterministic
@@ -477,13 +478,26 @@ class ModeSchedule:
         advances), the state of a slot that has no live request yet.
         Plain jnp, runs inside the refill executable (outside shard_map:
         the init is replicated by construction).
+
+        warm_v/use_warm (both traced, DESIGN.md §7.10): the warm-start
+        admission path.  Slot b starts from the cached iterates
+        `warm_v[b]` (a (B, m_pad, c) staging array the engine fills from
+        the result cache's tier-2 near-hit) where `use_warm[b]`, else
+        from the deterministic init — so near-duplicate requests resume
+        a nearly-converged solve and the adaptive gate fires within a
+        chunk or two.  Because both ride the SAME refill executable as
+        cold admissions (cold dispatches pass zeros + all-False), warm
+        starts add zero recompiles.
         """
-        from .power_iter import SolveState, _init_vectors
+        from .power_iter import SolveState, _init_vectors, merge_warm_start
 
         S = self.slice_shards
+        v = _init_vectors((B, m_pad), c, jnp.float32,
+                          c_valid=jnp.asarray(c_req)[:, None])
+        if warm_v is not None:
+            v = merge_warm_start(v, warm_v, use_warm)
         return SolveState(
-            v=_init_vectors((B, m_pad), c, jnp.float32,
-                            c_valid=jnp.asarray(c_req)[:, None]),
+            v=v,
             lam=jnp.zeros((B, m_pad), jnp.float32),
             resid=jnp.zeros((B, m_pad), jnp.float32),
             iters=jnp.zeros((B, S), jnp.int32),

@@ -73,6 +73,16 @@ class MSCConfig:
     def with_(self, **kw) -> "MSCConfig":
         return dataclasses.replace(self, **kw)
 
+    def fingerprint(self) -> str:
+        """Canonical config digest for result-cache keys (DESIGN.md
+        §7.10): a sorted-field SHA-256 with purely-observational knobs
+        dropped and numeric spellings collapsed (60 == 60.0), so
+        semantically-equal configs collide and any solver-relevant
+        change (precision, epilogue, power_tol, ...) does not."""
+        from .fingerprint import config_fingerprint
+
+        return config_fingerprint(self)
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass

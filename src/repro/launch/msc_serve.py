@@ -122,6 +122,18 @@ def main(argv=None) -> int:
                          "device set (elastic), drain its in-flight "
                          "requests, then serve the stream (implies "
                          "--continuous)")
+    ap.add_argument("--cache-dir", default=None, metavar="DIR",
+                    help="continuous mode: attach a content-addressed "
+                         "result cache persisted under DIR (DESIGN.md "
+                         "§7.10); exact repeats are answered without "
+                         "touching the device")
+    ap.add_argument("--cache-max-bytes", type=int, default=256 << 20,
+                    help="result-cache LRU payload budget")
+    ap.add_argument("--warm-start", action="store_true",
+                    help="continuous mode: attach the result cache "
+                         "(in-memory unless --cache-dir) and seed "
+                         "near-duplicate admissions from cached "
+                         "eigenvector iterates (tier 2)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.restore:
@@ -160,7 +172,8 @@ def main(argv=None) -> int:
 
     s = engine.stats
     print(f"stats: {s.dispatches} dispatches, {s.compiles} compiles, "
-          f"{s.cache_hits} cache hits, {s.filler_slots} filler slots")
+          f"{s.exec_cache_hits} exec cache hits, "
+          f"{s.filler_slots} filler slots")
     print(f"cold {cold_s:.2f}s (incl. {s.compiles} compiles), "
           f"warm {warm_s:.2f}s "
           f"({args.requests / warm_s:.1f} req/s)")
@@ -178,13 +191,24 @@ def main(argv=None) -> int:
     if args.continuous:
         print(f"\ncontinuous decode loop: Poisson arrivals "
               f"{args.arrival_rate}/tick, slow-every={args.slow_every}")
+        rcache = None
+        if args.cache_dir or args.warm_start:
+            from repro.serving import MSCResultCache
+
+            rcache = MSCResultCache(max_bytes=args.cache_max_bytes,
+                                    persist_dir=args.cache_dir)
+            if len(rcache):
+                print(f"result cache: reloaded {len(rcache)} entr"
+                      f"{'y' if len(rcache) == 1 else 'ies'} "
+                      f"({rcache.nbytes >> 10} KiB) from {args.cache_dir}")
         if args.restore:
             from repro.launch.elastic import restore_msc_engine
 
             ceng = restore_msc_engine(
                 args.restore,
                 checkpoint_dir=args.checkpoint_dir or args.restore,
-                ckpt_every_chunks=args.ckpt_every)
+                ckpt_every_chunks=args.ckpt_every,
+                result_cache=rcache, warm_start=args.warm_start)
             drained = {}
             while ceng.has_work():
                 drained.update(ceng.step())
@@ -197,7 +221,8 @@ def main(argv=None) -> int:
                 bucket_quantum=args.bucket_quantum,
                 chunks_per_step=args.chunks_per_step,
                 checkpoint_dir=args.checkpoint_dir,
-                ckpt_every_chunks=args.ckpt_every)
+                ckpt_every_chunks=args.ckpt_every,
+                result_cache=rcache, warm_start=args.warm_start)
         probes = {}  # warm every bucket's executables off the clock
         for t in tensors:
             probes.setdefault(ceng.bucket_of(t.shape), t)
@@ -220,7 +245,14 @@ def main(argv=None) -> int:
               f"{fs.fallback_requests} fallback-served, "
               f"{fs.heartbeats_missed} heartbeats missed, "
               f"{fs.host_losses} host losses, {fs.reinits} reinits, "
-              f"{fs.shard_files_written} shard files")
+              f"{fs.shard_files_written} shard files, "
+              f"{fs.cache_hits} cache hits / {fs.cache_misses} misses, "
+              f"{fs.warm_starts} warm starts "
+              f"({fs.warm_sweeps_saved} sweeps saved)")
+        if rcache is not None and args.cache_dir:
+            rcache.persist()
+            print(f"  result cache persisted: {len(rcache)} entries, "
+                  f"{rcache.nbytes >> 10} KiB → {args.cache_dir}")
         for i in (0, len(tensors) - 1):
             sw = [int(results[i][j].power_iters_run) for j in range(3)]
             print(f"  req {i}: sweeps={sw}")

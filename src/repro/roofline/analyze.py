@@ -218,6 +218,9 @@ def continuous_serving_model(iter_hist, B: int, *, check_every: int = 6,
                              dispatch_s: float = 0.0,
                              refill_min_free: int = 1,
                              dtype_bytes: float = 4.0,
+                             exact_hit_rate: float = 0.0,
+                             warm_hit_rate: float = 0.0,
+                             warm_sweeps=None, lookup_s: float = 0.0,
                              hw: HwSpec = V5E) -> Dict:
     """Predict continuous-vs-static occupancy from a per-request
     iteration histogram (DESIGN.md §7.7).
@@ -250,12 +253,55 @@ def continuous_serving_model(iter_hist, B: int, *, check_every: int = 6,
     `shape`, a sweep costs 1 unit and `dispatch_s` is in the same
     units.  Returns occupancies, wall estimates, and speedup =
     static_s / continuous_s.
+
+    Result-cache terms (DESIGN.md §7.10): `exact_hit_rate` removes that
+    fraction of requests from the device stream entirely (tier-1 exact
+    hits — they cost only `lookup_s` each), and `warm_hit_rate` clamps
+    that fraction of the REMAINING requests' sweeps to `warm_sweeps`
+    (default: one gate chunk, k — tier-2 warm starts converge at their
+    first probe in the measured regime), reshaping the histogram the
+    slot-table simulation runs over.  Hit requests are spread evenly
+    across the arrival order (deterministic, so a replayed measurement
+    is reproducible).  `lookup_s` charges every request one cache probe.
+    Outputs gain `nocache_continuous_s` (the same simulation on the
+    unreshaped histogram) and `cache_speedup` — the throughput factor
+    the cache itself buys on top of continuous batching.  All existing
+    outputs are unchanged when both rates are 0.
     """
     sweeps = [int(s) for s in iter_hist]
     if not sweeps or B < 1:
         raise ValueError("iter_hist must be non-empty and B >= 1")
+    if not (0.0 <= exact_hit_rate <= 1.0 and 0.0 <= warm_hit_rate <= 1.0
+            and exact_hit_rate + warm_hit_rate <= 1.0):
+        raise ValueError(
+            f"hit rates must lie in [0, 1] and sum to <= 1, got "
+            f"exact={exact_hit_rate} warm={warm_hit_rate}")
     k = max(1, int(check_every))
     chunks_of = [max(1, -(-s // k)) for s in sweeps]  # ceil, >=1
+
+    # ---- result-cache histogram reshaping ----
+    n = len(sweeps)
+    w_sweeps = k if warm_sweeps is None else max(1, int(warm_sweeps))
+
+    def _spread(num: int, total: int):
+        """num evenly-spaced indices in range(total) (num <= total:
+        floor(i·(total−1)/(num−1)) is strictly increasing)."""
+        if num <= 0:
+            return []
+        if num >= total:
+            return list(range(total))
+        if num == 1:
+            return [0]
+        return [(i * (total - 1)) // (num - 1) for i in range(num)]
+
+    n_exact = int(round(exact_hit_rate * n))
+    exact_idx = set(_spread(n_exact, n))
+    rest = [i for i in range(n) if i not in exact_idx]
+    n_warm = min(int(round(warm_hit_rate * n)), len(rest))
+    warm_idx = {rest[j] for j in _spread(n_warm, len(rest))}
+    dev_sweeps = [min(s, w_sweeps) if i in warm_idx else s
+                  for i, s in enumerate(sweeps) if i not in exact_idx]
+    dev_chunks_of = [max(1, -(-s // k)) for s in dev_sweeps]
 
     # per-mode per-sweep and per-epilogue wall costs
     if shape is not None:
@@ -286,34 +332,47 @@ def continuous_serving_model(iter_hist, B: int, *, check_every: int = 6,
 
     # continuous: slot-table simulation, modes concurrent per chunk,
     # eviction (and its finalize) at the tick after a slot finishes
-    slots = [0] * B        # remaining chunks per slot (0 = free)
-    queue = list(chunks_of)
-    chunks = refills = busy_slot_chunks = 0
-    freed_now = 0
     # a threshold no drain can reach would deadlock admission (the
     # engine clamps identically)
     min_free = min(max(1, int(refill_min_free)), B)
-    while queue or any(slots) or freed_now:
-        free = [s for s, r in enumerate(slots) if r == 0]
-        admitted = False
-        if queue and free and len(free) >= min(min_free, len(queue)):
-            for s in free:
-                if not queue:
-                    break
-                slots[s] = queue.pop(0)
-                admitted = True
-        refills += int(freed_now > 0 or admitted)
-        live = sum(r > 0 for r in slots)
-        if live == 0:
-            break  # the drain tick: evict/finalize only, no chunk
-        busy_slot_chunks += live
-        chunks += 1
-        freed_now = sum(r == 1 for r in slots)  # evicted next tick
-        slots = [max(0, r - 1) for r in slots]
-    occupancy_continuous = useful / (chunks * B * k)
+
+    def _simulate(stream):
+        slots = [0] * B    # remaining chunks per slot (0 = free)
+        queue = list(stream)
+        chunks = refills = busy_slot_chunks = 0
+        freed_now = 0
+        while queue or any(slots) or freed_now:
+            free = [s for s, r in enumerate(slots) if r == 0]
+            admitted = False
+            if queue and free and len(free) >= min(min_free, len(queue)):
+                for s in free:
+                    if not queue:
+                        break
+                    slots[s] = queue.pop(0)
+                    admitted = True
+            refills += int(freed_now > 0 or admitted)
+            live = sum(r > 0 for r in slots)
+            if live == 0:
+                break  # the drain tick: evict/finalize only, no chunk
+            busy_slot_chunks += live
+            chunks += 1
+            freed_now = sum(r == 1 for r in slots)  # evicted next tick
+            slots = [max(0, r - 1) for r in slots]
+        return chunks, refills, busy_slot_chunks
+
+    chunks, refills, busy_slot_chunks = _simulate(dev_chunks_of)
+    useful_dev = sum(c * k for c in dev_chunks_of)
+    occupancy_continuous = (useful_dev / (chunks * B * k)
+                            if chunks else 1.0)
     chunk_s = dispatch_s + sum(k * e1 for e1 in eig1)
     refill_s = dispatch_s + sum(epi)
-    continuous_s = chunks * chunk_s + refills * refill_s
+    continuous_s = (chunks * chunk_s + refills * refill_s
+                    + n * float(lookup_s))
+    if n_exact or n_warm:
+        c0, r0, _ = _simulate(chunks_of)
+        nocache_continuous_s = c0 * chunk_s + r0 * refill_s
+    else:
+        nocache_continuous_s = chunks * chunk_s + refills * refill_s
     return {
         "requests": len(sweeps), "B": B, "check_every": k,
         "shape": tuple(shape) if shape is not None else None,
@@ -325,6 +384,11 @@ def continuous_serving_model(iter_hist, B: int, *, check_every: int = 6,
         "busy_slot_chunks": busy_slot_chunks,
         "static_s": static_s, "continuous_s": continuous_s,
         "speedup": static_s / continuous_s if continuous_s > 0 else 0.0,
+        "exact_hits": n_exact, "warm_starts": n_warm,
+        "warm_sweeps": w_sweeps, "lookup_s": float(lookup_s),
+        "nocache_continuous_s": nocache_continuous_s,
+        "cache_speedup": (nocache_continuous_s / continuous_s
+                          if continuous_s > 0 else 0.0),
     }
 
 

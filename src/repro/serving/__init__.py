@@ -3,3 +3,4 @@ from .faults import (DistKillPlan, FaultInjector, FaultPlan, InjectedFault,
                      LoadShedError, corrupt_checkpoint_leaf,
                      corrupt_checkpoint_shard, fail_all_from)
 from .msc_engine import MSCContinuousEngine, MSCServeEngine, ServeStats
+from .result_cache import MSCResultCache, NearHit

@@ -85,6 +85,10 @@ class ServeStats:
     continuous engine's decode-loop counters (all cumulative, so
     `delta` stays a plain field-wise subtraction):
 
+      exec_cache_hits — compiled-EXECUTABLE cache hits (warm-bucket
+        dispatches that skipped lower+compile).  Distinct from the
+        result cache below.
+
       chunk_steps / refills — dispatches of the two per-bucket
         executables (`dispatches` counts both).
       evictions — slots freed by a finished request (== requests served
@@ -116,12 +120,24 @@ class ServeStats:
       reinits — engines rebuilt on a reduced host set after a loss.
       shard_files_written — per-process checkpoint shard files written
         across all processes (the master sums worker acks).
+
+    Result-cache counters (DESIGN.md §7.10, continuous engine with a
+    `result_cache` attached):
+
+      cache_hits / cache_misses — tier-1 exact hits served instantly
+        from the content-addressed result cache vs requests that went
+        to the device path.
+      warm_starts — admissions whose eigensolver carry was seeded from
+        a cached near-duplicate's iterates (tier 2).
+      warm_sweeps_saved — Σ over warm-started requests of
+        max(0, donor sweeps − realized sweeps), per mode: the power
+        iteration the warm start skipped.
     """
 
     requests: int = 0
     dispatches: int = 0
     compiles: int = 0
-    cache_hits: int = 0
+    exec_cache_hits: int = 0
     filler_slots: int = 0
     chunk_steps: int = 0
     refills: int = 0
@@ -138,6 +154,10 @@ class ServeStats:
     host_losses: int = 0
     reinits: int = 0
     shard_files_written: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    warm_starts: int = 0
+    warm_sweeps_saved: int = 0
 
     @property
     def occupancy(self) -> float:
@@ -233,7 +253,8 @@ class MSCServeEngine:
                 self._stats, compiles=self._stats.compiles + 1)
         else:
             self._stats = dataclasses.replace(
-                self._stats, cache_hits=self._stats.cache_hits + 1)
+                self._stats,
+                exec_cache_hits=self._stats.exec_cache_hits + 1)
         return compiled
 
     @property
@@ -323,6 +344,15 @@ class _SlotTable:
         # and must be re-zeroed before the next write
         self.stage = tuple(np.zeros(sh, dtype) for sh in mode_shapes)
         self.dirty = np.zeros(slots, bool)
+        # warm-start staging (DESIGN.md §7.10): cached eigenvector
+        # iterates land here in carry-v layout ((B, m_pad, c) per mode,
+        # always f32 like SolveState.v) for the refill executable's
+        # warm_v inputs; warm_meta[s] keeps the donor's realized sweep
+        # counts until eviction settles `warm_sweeps_saved`
+        self.warm_stage = tuple(np.zeros((sh[0], sh[1], sh[3]), np.float32)
+                                for sh in mode_shapes)
+        self.warm_dirty = np.zeros(slots, bool)
+        self.warm_meta: List[Optional[Tuple[int, int, int]]] = [None] * slots
 
     def admit_write(self, s: int, arr: np.ndarray):
         """Write one admitted tensor's three unfoldings into slot s of
@@ -337,6 +367,18 @@ class _SlotTable:
             t = np.transpose(arr, perm)
             self.stage[j][s, :t.shape[0], :t.shape[1], :t.shape[2]] = t
         self.dirty[s] = True
+
+    def write_warm(self, s: int, vectors):
+        """Write one near-hit donor's true-size (m_j, c_j) iterates into
+        slot s of the warm staging buffers (zero-padded to carry
+        layout — padded rows contribute nothing after the merge)."""
+        if self.warm_dirty[s]:
+            for st in self.warm_stage:
+                st[s] = 0
+        for j, v in enumerate(vectors):
+            v = np.asarray(v, np.float32)
+            self.warm_stage[j][s, :v.shape[0], :v.shape[1]] = v
+        self.warm_dirty[s] = True
 
     @property
     def live(self) -> int:
@@ -401,6 +443,24 @@ class MSCContinuousEngine:
       fault_injector — a serving/faults.py FaultInjector consulted at
         every dispatch site (tests/benches only).
 
+    Result-cache knobs (DESIGN.md §7.10):
+      result_cache — a serving/result_cache.py MSCResultCache placed in
+        front of the engine.  submit() first probes it with the
+        content-addressed key (canonical tensor SHA-256 ⊕ config
+        fingerprint ⊕ code-version salt); an exact hit is answered from
+        the cache at the next step() without touching the device.
+        Every request served through the device path (or the fallback
+        oracle) is inserted at eviction — with its frozen eigenvector
+        iterates and spectral sketch on single-process meshes, so it
+        can donate tier-2 warm starts.
+      warm_start — also probe tier 2 at submit: a near-duplicate
+        (sketch within the cache's tolerance, same shape) seeds the
+        admitted slot's eigensolver carry from the cached V through the
+        refill executable's warm-start inputs.  The warm inputs are
+        part of the refill's lowered signature from the start, so
+        enabling this performs ZERO new retraces/recompiles; masks stay
+        bit-identical to a cold solve (the gate just fires earlier).
+
     `run(tensors)` serves a closed batch; `submit()` + `step()` expose
     the decode loop for streaming arrivals (launch/msc_serve.py).
     """
@@ -414,7 +474,8 @@ class MSCContinuousEngine:
                  ckpt_every_chunks: int = 8, keep_checkpoints: int = 3,
                  max_retries: int = 3, retry_backoff_s: float = 0.05,
                  retry_backoff_max_s: float = 2.0, fault_injector=None,
-                 replicate_outputs: bool = False):
+                 replicate_outputs: bool = False, result_cache=None,
+                 warm_start: bool = False):
         if slots < 1:
             raise ValueError(f"slots must be >= 1, got {slots}")
         if placement not in ("compact", "stable"):
@@ -462,6 +523,14 @@ class MSCContinuousEngine:
         self._recovering: set = set()   # buckets mid-retry (sheds load)
         self._total_chunks = 0          # monotonic ckpt step id
         self._chunks_since_ckpt = 0
+        # ---- result cache (DESIGN.md §7.10) ----
+        self.result_cache = result_cache
+        self.warm_start = bool(warm_start)
+        self._salt: Optional[str] = None      # cache_salt(), lazy
+        self._ready: Dict[int, MSCResult] = {}       # tier-1 hits
+        self._req_key: Dict[int, str] = {}           # rid → cache key
+        self._req_sketch: Dict[int, np.ndarray] = {}
+        self._warm_pending: Dict[int, object] = {}   # rid → NearHit
 
     # ---- bucketing / cache -------------------------------------------
     def bucket_of(self, shape: Sequence[int]) -> Tuple[int, int, int]:
@@ -491,7 +560,7 @@ class MSCContinuousEngine:
                self._plan.chunks_per_step)
         entry = self._cache.get(key)
         if entry is not None:
-            self._bump(cache_hits=1)
+            self._bump(exec_cache_hits=1)
             return entry
         B = self.slots
         blocks_s, carries_s = self._plan.state_structs(bucket, B, self.dtype)
@@ -502,11 +571,18 @@ class MSCContinuousEngine:
         bsh = self._plan._block_sharding()
         stage_s = tuple(jax.ShapeDtypeStruct(sh, self.dtype, sharding=bsh)
                         for sh in self._plan.mode_shapes(bucket, B))
+        # warm-start inputs are part of the ONE lowered refill signature
+        # (cold refills pass device-resident zeros + all-False), so the
+        # zero-recompile contract covers warm admissions too
+        vsh = self._plan._carry_shardings().v
+        warm_s = tuple(jax.ShapeDtypeStruct(sh, jnp.float32, sharding=vsh)
+                       for sh in self._plan.warm_shapes(bucket, B))
         refill = jax.jit(self._plan.build_refill()).lower(
             blocks_s, carries_s, dims_s, stage_s, dims_s,
             jax.ShapeDtypeStruct((B,), jnp.bool_),
             jax.ShapeDtypeStruct((B,), jnp.bool_),
-            jax.ShapeDtypeStruct((B,), i32)).compile()
+            jax.ShapeDtypeStruct((B,), i32), warm_s,
+            jax.ShapeDtypeStruct((B,), jnp.bool_)).compile()
         entry = (step, refill)
         self._cache[key] = entry
         self._bump(compiles=2)
@@ -521,6 +597,7 @@ class MSCContinuousEngine:
                             self._plan.mode_shapes(bucket, self.slots))
             tb.zero_stage = self._plan.zero_stage(bucket, self.slots,
                                                   self.dtype)
+            tb.zero_warm = self._plan.zero_warm(bucket, self.slots)
             self._tables[bucket] = tb
         return tb
 
@@ -531,13 +608,31 @@ class MSCContinuousEngine:
         recovering from a dispatch failure: shedding load keeps the
         queue from growing unboundedly behind a sick bucket (clients
         resubmit after recovery)."""
+        arr = np.asarray(tensor, self.dtype)
+        cache = self.result_cache
+        key = None
+        if cache is not None:
+            # tier-1 probe BEFORE the load-shed gate: an exact hit never
+            # touches the (possibly sick) device path, so there is
+            # nothing to shed
+            if self._salt is None:
+                from repro.core.fingerprint import cache_salt
+                self._salt = cache_salt()
+            from repro.core.fingerprint import result_cache_key
+            key = result_cache_key(arr, self.cfg, salt=self._salt)
+            res = cache.get(key)
+            if res is not None:
+                rid = self._next_rid
+                self._next_rid += 1
+                self._ready[rid] = res
+                self._bump(requests=1, cache_hits=1)
+                return rid
         if self._recovering:
             self._bump(shed_requests=1)
             raise LoadShedError(
                 f"engine is recovering from a dispatch failure on "
                 f"bucket(s) {sorted(self._recovering)}; resubmit after "
                 f"recovery")
-        arr = np.asarray(tensor, self.dtype)
         bucket = self.bucket_of(arr.shape)
         rid = self._next_rid
         self._next_rid += 1
@@ -545,10 +640,21 @@ class MSCContinuousEngine:
         tb = self._table(bucket)
         tb.queue.append((rid, tb.chunk))
         self._bump(requests=1)
+        if cache is not None:
+            self._bump(cache_misses=1)
+            self._req_key[rid] = key
+            if self.warm_start:
+                from repro.core.fingerprint import spectral_sketch
+                sketch = spectral_sketch(arr, r=cache.sketch_r)
+                self._req_sketch[rid] = sketch
+                hit = cache.lookup_near(sketch, arr.shape)
+                if hit is not None:
+                    self._warm_pending[rid] = hit
         return rid
 
     def has_work(self) -> bool:
-        return any(tb.has_work() for tb in self._tables.values())
+        return bool(self._ready) or any(tb.has_work()
+                                        for tb in self._tables.values())
 
     def step(self) -> Dict[int, MSCResult]:
         """One scheduler tick on every bucket with work: admit (policy
@@ -557,6 +663,9 @@ class MSCContinuousEngine:
         (the engine retains nothing, so a long-running decode loop
         doesn't accumulate served results)."""
         finished: Dict[int, MSCResult] = {}
+        if self._ready:   # tier-1 cache hits, answered without a dispatch
+            finished.update(self._ready)
+            self._ready.clear()
         for tb in self._tables.values():
             if tb.has_work():
                 finished.update(self._step_table(tb))
@@ -599,18 +708,31 @@ class MSCContinuousEngine:
         """Evict/finalize/repack dispatch: finalize results for `evict`
         slots (pre-repack indices), free them, then permute + admit."""
         old_dims = tb.dims.copy()
+        old_warm_meta = list(tb.warm_meta)
         evict_rids = [(s, tb.slot_req[s]) for s in evict]
+        cache = self.result_cache
+        # host-read the frozen iterates of the evicted slots BEFORE the
+        # dispatch replaces tb.carries: they become tier-2 warm-start
+        # donors.  Skipped on multi-process meshes (replicate_outputs) —
+        # the sharded carries are not fully addressable on any one host.
+        capture = None
+        if (cache is not None and evict_rids
+                and not self._plan.replicate_outputs):
+            capture = [np.asarray(tb.carries[j].v) for j in range(3)]
         for s in evict:
             tb.slot_req[s] = None
             tb.arrs[s] = None
+            tb.warm_meta[s] = None
         perm = self._permutation(tb)
         tb.slot_req = [tb.slot_req[p] for p in perm]
         tb.arrs = [tb.arrs[p] for p in perm]
         tb.dims = tb.dims[perm]
         tb.fin = tb.fin[perm]
+        tb.warm_meta = [tb.warm_meta[p] for p in perm]
         new_dims = np.tile(np.int32(_FILLER_DIMS), (self.slots, 1))
         take_new = np.zeros(self.slots, bool)
         new_done = np.ones(self.slots, bool)
+        use_warm = np.zeros(self.slots, bool)
         waited = 0
         for s in tb.free:
             if not tb.queue:
@@ -625,21 +747,48 @@ class MSCContinuousEngine:
             tb.arrs[s] = arr
             tb.dims[s] = arr.shape
             tb.fin[s] = False
+            hit = self._warm_pending.pop(rid, None)
+            if hit is not None:
+                tb.write_warm(s, hit.vectors)
+                use_warm[s] = True
+                tb.warm_meta[s] = hit.donor_iters
+                self._bump(warm_starts=1)
+            else:
+                tb.warm_meta[s] = None
             waited += tb.chunk - submitted
         # eviction-only repack: reuse the device-resident zero staging
         # so no staging bytes cross the host boundary
         stage = tb.stage if take_new.any() else tb.zero_stage
+        wstage = tb.warm_stage if use_warm.any() else tb.zero_warm
         tb.blocks, tb.carries, results = self._invoke(
             "refill", refill_exec, tb.blocks, tb.carries, old_dims, stage,
-            new_dims, take_new, new_done, perm)
+            new_dims, take_new, new_done, perm, wstage, use_warm)
         self._bump(refills=1, dispatches=1, queue_wait_chunks=waited,
                    evictions=len(evict_rids))
         out: Dict[int, MSCResult] = {}
         if evict_rids:
+            from repro.core.parallel import C_OF
+
             host = jax.tree.map(np.asarray, results)
             for s, rid in evict_rids:
-                out[rid] = _trim_request(
+                res = _trim_request(
                     host, s, tuple(int(x) for x in old_dims[s]))
+                out[rid] = res
+                wm = old_warm_meta[s]
+                if wm is not None:
+                    self._bump(warm_sweeps_saved=sum(
+                        max(0, int(di) - int(res.modes[j].power_iters_run))
+                        for j, di in enumerate(wm)))
+                key = self._req_key.pop(rid, None)
+                sketch = self._req_sketch.pop(rid, None)
+                if cache is not None and key is not None:
+                    vecs = None
+                    if capture is not None:
+                        d = old_dims[s]
+                        vecs = tuple(capture[j][s, :d[j], :d[C_OF[j]]]
+                                     for j in range(3))
+                    cache.put(key, res, shape=old_dims[s], vectors=vecs,
+                              sketch=sketch)
         return out
 
     def _step_table(self, tb: _SlotTable) -> Dict[int, MSCResult]:
@@ -658,12 +807,15 @@ class MSCContinuousEngine:
             # retry re-plans identically from (device state is only
             # REPLACED by dispatch outputs, never mutated in place)
             snap = (list(tb.slot_req), list(tb.arrs), tb.dims.copy(),
-                    tb.fin.copy(), deque(tb.queue), dict(self._pending))
+                    tb.fin.copy(), deque(tb.queue), dict(self._pending),
+                    list(tb.warm_meta), dict(self._warm_pending),
+                    dict(self._req_key), dict(self._req_sketch))
             try:
                 out = self._refill(tb, refill_exec, evict)
             except Exception as e:  # noqa: BLE001 — recovery boundary
                 (tb.slot_req, tb.arrs, tb.dims, tb.fin, tb.queue,
-                 self._pending) = snap
+                 self._pending, tb.warm_meta, self._warm_pending,
+                 self._req_key, self._req_sketch) = snap
                 return self._dispatch_failed(tb, e, out)
         if tb.live > 0:
             live = tb.live
@@ -735,7 +887,16 @@ class MSCContinuousEngine:
         out: Dict[int, MSCResult] = {}
         for rid, arr in jobs:
             res = msc_sequential(jnp.asarray(arr), self.cfg)
-            out[rid] = jax.tree.map(np.asarray, res)
+            host = jax.tree.map(np.asarray, res)
+            out[rid] = host
+            # the oracle path still feeds tier 1 (exact repeats of a
+            # fallback-served tensor hit the cache); no iterates to
+            # donate, so no tier-2 sketch entry
+            key = self._req_key.pop(rid, None)
+            self._req_sketch.pop(rid, None)
+            self._warm_pending.pop(rid, None)
+            if self.result_cache is not None and key is not None:
+                self.result_cache.put(key, host, shape=arr.shape)
         tb.blocks, tb.carries = self._plan.init_state(tb.bucket, self.slots,
                                                       self.dtype)
         tb.slot_req = [None] * self.slots
@@ -743,6 +904,8 @@ class MSCContinuousEngine:
         tb.dims = np.tile(np.int32(_FILLER_DIMS), (self.slots, 1))
         tb.fin = np.zeros(self.slots, bool)
         tb.dirty = np.ones(self.slots, bool)
+        tb.warm_dirty = np.ones(self.slots, bool)
+        tb.warm_meta = [None] * self.slots
         tb.retries = 0
         tb.retry_at = 0.0
         self._recovering.discard(tb.bucket)
@@ -774,7 +937,13 @@ class MSCContinuousEngine:
         device blocks omitted entirely (they are a pure function of the
         stashed admitted tensors, so restore rebuilds them byte-identical
         on whatever mesh it runs under).  That is what makes the
-        checkpoint mesh-independent."""
+        checkpoint mesh-independent.
+
+        Result-cache bookkeeping (_req_key/_req_sketch/_warm_pending) is
+        deliberately NOT checkpointed: a restored engine re-solves its
+        in-flight requests correctly either way, it just skips their
+        cache insertion / warm accounting — the cache persists itself
+        separately (MSCResultCache.persist)."""
         leaves: List[np.ndarray] = []
         buckets_meta = []
         for bucket in sorted(self._tables):
@@ -954,6 +1123,7 @@ class MSCContinuousEngine:
                             self._plan.mode_shapes(bucket, self.slots))
             tb.zero_stage = self._plan.zero_stage(bucket, self.slots,
                                                   self.dtype)
+            tb.zero_warm = self._plan.zero_warm(bucket, self.slots)
             tb.slot_req = [None if r < 0 else int(r) for r in slot_rids]
             tb.arrs = arrs
             tb.dims = dims

@@ -1,0 +1,320 @@
+"""Two-tier content-addressed result cache for MSC serving (§7.10).
+
+At millions-of-users scale the common case is repeated and
+near-duplicate tensors, and MSC is deterministic — the fastest solve is
+the one skipped entirely, and the second fastest starts from a
+nearly-converged iterate.  `MSCResultCache` sits in front of
+`MSCContinuousEngine` and provides both:
+
+  * **Tier 1 — exact hit.**  Key = `core.fingerprint.result_cache_key`
+    (canonical tensor SHA-256 ⊕ `MSCConfig.fingerprint()` ⊕ code/kernel
+    version salt) → the stored per-mode masks / d vectors / λ /
+    sweep counts, returned instantly without touching the device.
+    LRU + size-bounded: inserts evict least-recently-used entries until
+    `max_bytes` holds.
+  * **Tier 2 — near hit / warm start.**  Each inserted entry may carry
+    the finished solve's per-slice eigenvector iterates (one (m, c)
+    matrix per unfolding, read off the slot's frozen `SolveState` at
+    eviction) plus its `core.fingerprint.spectral_sketch`.  Sketches
+    are LSH-bucketed (sign-random-projection, `lsh_tables` tables of
+    `lsh_bits` bits each, deterministic projections); `lookup_near`
+    probes the admission sketch's buckets and verifies candidates by
+    relative L2 distance ≤ `sketch_tol`.  A near hit seeds the admitted
+    slot's eigensolver carry from the cached V (through the refill
+    executable's warm-start inputs — zero new recompiles), so the
+    adaptive gate converges in a few sweeps instead of a cold solve.
+
+  * **Persistence** rides `checkpoint/store.py`'s atomic tmp+rename
+    machinery: `persist()` writes the whole cache as one checkpoint
+    step (keep-last-1 GC), `MSCResultCache(persist_dir=...)` reloads it
+    at construction — a restarted host keeps its cache.  Entries whose
+    code-version salt no longer matches are dropped at load (their keys
+    could never hit anyway).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.fingerprint import cache_salt
+from repro.core.types import ModeResult, MSCResult
+
+
+def _np_result(result: MSCResult) -> MSCResult:
+    """Host-side numpy copy of a (possibly device) MSCResult."""
+    modes = []
+    for res in result.modes:
+        pir = res.power_iters_run
+        modes.append(ModeResult(
+            mask=np.asarray(res.mask), d=np.asarray(res.d),
+            lambdas=np.asarray(res.lambdas),
+            n_iters=np.asarray(res.n_iters),
+            power_iters_run=None if pir is None else np.asarray(pir)))
+    return MSCResult(modes=tuple(modes))
+
+
+@dataclasses.dataclass
+class _CacheEntry:
+    key: str
+    shape: Tuple[int, int, int]
+    result: MSCResult                      # host numpy, true sizes
+    vectors: Optional[Tuple[np.ndarray, ...]] = None  # (m_j, c_j) per mode
+    sketch: Optional[np.ndarray] = None
+    lsh_keys: Tuple = ()
+
+    @property
+    def nbytes(self) -> int:
+        n = 0
+        for res in self.result.modes:
+            for leaf in (res.mask, res.d, res.lambdas, res.n_iters,
+                         res.power_iters_run):
+                if leaf is not None:
+                    n += np.asarray(leaf).nbytes
+        for v in self.vectors or ():
+            n += v.nbytes
+        if self.sketch is not None:
+            n += self.sketch.nbytes
+        return n
+
+    @property
+    def donor_iters(self) -> Tuple[int, int, int]:
+        """Realized sweeps of the cached solve, per mode — the baseline
+        `warm_sweeps_saved` accounting compares a warm start against."""
+        return tuple(
+            0 if res.power_iters_run is None else int(res.power_iters_run)
+            for res in self.result.modes)
+
+
+@dataclasses.dataclass(frozen=True)
+class NearHit:
+    """A tier-2 match: the cached iterates to seed the admitted slot
+    with, plus the donor's sweep counts and the verified distance."""
+    key: str
+    vectors: Tuple[np.ndarray, ...]
+    donor_iters: Tuple[int, int, int]
+    distance: float
+
+
+class MSCResultCache:
+    """LRU, size-bounded, optionally persistent MSC result cache.
+
+    Parameters:
+      max_bytes: total payload budget; inserting past it evicts
+        least-recently-used entries (a single over-budget entry is
+        admitted alone — the cache never refuses the newest result).
+      persist_dir: enable persistence through checkpoint/store.py
+        (atomic tmp+rename, keep-last-1); the constructor reloads the
+        newest restorable step so a restarted host starts warm.
+      sketch_r: probes per unfolding of the tier-2 spectral sketch.
+      sketch_tol: relative L2 acceptance bound for a near hit.  The
+        default is loose enough for perturbations ~1% of tensor norm
+        and tight enough that differently-planted tensors (disjoint
+        cluster structure) verify as misses.
+      lsh_bits / lsh_tables: sign-random-projection LSH geometry; any
+        one table matching makes a candidate (multi-table OR), so a
+        near-duplicate surviving a few bit flips still probes its
+        donor.
+    """
+
+    def __init__(self, max_bytes: int = 256 << 20,
+                 persist_dir: Optional[str] = None, *,
+                 sketch_r: int = 4, sketch_tol: float = 0.05,
+                 lsh_bits: int = 8, lsh_tables: int = 4):
+        if max_bytes < 1:
+            raise ValueError(f"max_bytes must be >= 1, got {max_bytes}")
+        self.max_bytes = int(max_bytes)
+        self.persist_dir = persist_dir
+        self.sketch_r = int(sketch_r)
+        self.sketch_tol = float(sketch_tol)
+        self.lsh_bits = int(lsh_bits)
+        self.lsh_tables = int(lsh_tables)
+        self.salt = cache_salt()
+        self._entries: "OrderedDict[str, _CacheEntry]" = OrderedDict()
+        self._nbytes = 0
+        self._buckets: Dict[Tuple, List[str]] = {}
+        self._proj: Dict[Tuple[int, int], np.ndarray] = {}
+        self._persist_step = 0
+        self.hits = self.misses = self.near_hits = self.evicted = 0
+        if persist_dir is not None:
+            self._load(persist_dir)
+
+    # ---- introspection ----------------------------------------------
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._entries
+
+    @property
+    def nbytes(self) -> int:
+        return self._nbytes
+
+    # ---- tier 1: exact ----------------------------------------------
+    def get(self, key: str) -> Optional[MSCResult]:
+        """Exact-hit lookup; refreshes LRU recency on hit."""
+        e = self._entries.get(key)
+        if e is None:
+            self.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.hits += 1
+        return e.result
+
+    def put(self, key: str, result: MSCResult, *, shape,
+            vectors: Optional[Tuple[np.ndarray, ...]] = None,
+            sketch: Optional[np.ndarray] = None):
+        """Insert (or refresh) one finished solve.
+
+        vectors/sketch are optional — without them the entry serves
+        tier-1 exact hits only (e.g. results produced by the sequential
+        fallback path, which has no device iterates to capture)."""
+        if key in self._entries:
+            self._remove(key)
+        entry = _CacheEntry(
+            key=key, shape=tuple(int(s) for s in shape),
+            result=_np_result(result),
+            vectors=None if vectors is None else tuple(
+                np.ascontiguousarray(v, np.float32) for v in vectors),
+            sketch=None if sketch is None else
+            np.ascontiguousarray(sketch, np.float32))
+        if entry.vectors is not None and entry.sketch is not None:
+            entry.lsh_keys = self._bucket_keys(entry.sketch, entry.shape)
+            for bk in entry.lsh_keys:
+                self._buckets.setdefault(bk, []).append(key)
+        self._entries[key] = entry
+        self._nbytes += entry.nbytes
+        while self._nbytes > self.max_bytes and len(self._entries) > 1:
+            victim = next(iter(self._entries))
+            self._remove(victim)
+            self.evicted += 1
+
+    def _remove(self, key: str):
+        e = self._entries.pop(key)
+        self._nbytes -= e.nbytes
+        for bk in e.lsh_keys:
+            keys = self._buckets.get(bk)
+            if keys is not None:
+                try:
+                    keys.remove(key)
+                except ValueError:
+                    pass
+                if not keys:
+                    del self._buckets[bk]
+
+    # ---- tier 2: near hit -------------------------------------------
+    def _projection(self, table: int, dim: int) -> np.ndarray:
+        pk = (table, dim)
+        proj = self._proj.get(pk)
+        if proj is None:
+            # deterministic per (table, sketch length): sketches from
+            # any host/process bucket identically
+            rng = np.random.RandomState(10007 * (table + 1) + dim)
+            proj = rng.standard_normal((self.lsh_bits, dim)) \
+                      .astype(np.float32)
+            self._proj[pk] = proj
+        return proj
+
+    def _bucket_keys(self, sketch: np.ndarray, shape) -> Tuple:
+        s = np.asarray(sketch, np.float32).reshape(-1)
+        nrm = float(np.linalg.norm(s))
+        s_hat = s / nrm if nrm > 0 else s
+        keys = []
+        for t in range(self.lsh_tables):
+            bits = self._projection(t, s.size) @ s_hat >= 0.0
+            code = int.from_bytes(
+                np.packbits(bits, bitorder="little").tobytes(), "little")
+            keys.append((tuple(shape), t, code))
+        return tuple(keys)
+
+    def lookup_near(self, sketch: np.ndarray, shape) -> Optional[NearHit]:
+        """Probe the sketch's LSH buckets; return the closest cached
+        entry of the SAME shape within `sketch_tol` relative L2 (the
+        warm start needs dimension-compatible eigenvectors), or None."""
+        shape = tuple(int(x) for x in shape)
+        s = np.asarray(sketch, np.float32).reshape(-1)
+        cand: List[str] = []
+        for bk in self._bucket_keys(s, shape):
+            cand.extend(self._buckets.get(bk, ()))
+        best: Optional[NearHit] = None
+        for key in dict.fromkeys(cand):       # dedupe, keep order
+            e = self._entries.get(key)
+            if e is None or e.sketch is None or e.vectors is None:
+                continue
+            if e.shape != shape or e.sketch.size != s.size:
+                continue
+            ref = float(np.linalg.norm(e.sketch))
+            dist = float(np.linalg.norm(s - e.sketch)) / max(ref, 1e-30)
+            if dist <= self.sketch_tol and (best is None
+                                            or dist < best.distance):
+                best = NearHit(key=key, vectors=e.vectors,
+                               donor_iters=e.donor_iters, distance=dist)
+        if best is not None:
+            self._entries.move_to_end(best.key)
+            self.near_hits += 1
+        return best
+
+    # ---- persistence (checkpoint/store.py) --------------------------
+    def persist(self) -> Optional[str]:
+        """Write the whole cache as one atomic checkpoint step (LRU
+        order preserved), keep-last-1 GC.  No-op without persist_dir."""
+        if self.persist_dir is None:
+            return None
+        from repro.checkpoint.store import gc_checkpoints, save_checkpoint
+
+        leaves: List[np.ndarray] = []
+        metas = []
+        for e in self._entries.values():
+            for res in e.result.modes:
+                pir = (-1 if res.power_iters_run is None
+                       else int(res.power_iters_run))
+                leaves.extend([np.asarray(res.mask), np.asarray(res.d),
+                               np.asarray(res.lambdas),
+                               np.asarray(res.n_iters, np.int64),
+                               np.asarray(pir, np.int64)])
+            if e.vectors is not None:
+                leaves.extend(e.vectors)
+            if e.sketch is not None:
+                leaves.append(e.sketch)
+            metas.append({"key": e.key, "shape": list(e.shape),
+                          "has_vectors": e.vectors is not None,
+                          "has_sketch": e.sketch is not None})
+        self._persist_step += 1
+        path = save_checkpoint(self.persist_dir, self._persist_step, leaves,
+                               extra={"kind": "msc_result_cache",
+                                      "salt": self.salt,
+                                      "entries": metas})
+        gc_checkpoints(self.persist_dir, 1)
+        return path
+
+    def _load(self, directory: str):
+        from repro.checkpoint.store import load_leaves, restorable_steps
+
+        steps = restorable_steps(directory, verify_sha=False)
+        if not steps:
+            return
+        try:
+            leaves, extra = load_leaves(directory, steps[0], verify=True)
+        except (IOError, OSError, ValueError):
+            return
+        if extra.get("kind") != "msc_result_cache":
+            return
+        stale = extra.get("salt") != self.salt
+        self._persist_step = steps[0]
+        it = iter(leaves)
+        for meta in extra.get("entries", ()):
+            modes = []
+            for _ in range(3):
+                mask, d, lam, n_it, pir = (next(it) for _ in range(5))
+                modes.append(ModeResult(
+                    mask=mask, d=d, lambdas=lam, n_iters=n_it,
+                    power_iters_run=None if int(pir) < 0 else pir))
+            vectors = (tuple(next(it) for _ in range(3))
+                       if meta["has_vectors"] else None)
+            sketch = next(it) if meta["has_sketch"] else None
+            if stale:
+                continue  # drain the iterator, drop stale-salt entries
+            self.put(meta["key"], MSCResult(modes=tuple(modes)),
+                     shape=meta["shape"], vectors=vectors, sketch=sketch)

@@ -1,0 +1,409 @@
+"""Content-addressed result cache + warm-start tier (DESIGN.md §7.10).
+
+Coverage layers:
+  * fingerprint canonicalization: tier-1 keys are invariant to memory
+    layout (C/F order, strided views) but sensitive to every element,
+    the shape, the dtype, and the code-version salt; config digests
+    collide for semantically-equal configs and ignore observational
+    knobs (checkpoint cadence, retry policy, scheduler batching).
+  * `MSCResultCache` units: LRU eviction under the byte budget,
+    recency refresh, replace-in-place accounting, LSH near-lookup
+    accept/reject, and the checkpoint-backed persistence round trip
+    (including the stale-salt drop at load).
+  * `gc_checkpoints` orphan reaping: format-2 shard files and phase-1
+    vote records a committed step dir carries from an aborted two-phase
+    attempt are removed; everything the manifest references survives
+    and the step stays restorable.
+  * engine integration: exact repeats answered with zero device
+    dispatches and bit-identical results; warm-started near-duplicates
+    converge in no more sweeps than their cold solve with masks
+    bit-identical to the sequential oracle — single-device here, the
+    real (8,1)/(4,2) × epilogue matrix in the in-process CI test.
+"""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import (gc_checkpoints, load_leaves,
+                                    save_checkpoint, shard_filename)
+from repro.core import (MSCConfig, PlantedSpec, make_msc_mesh,
+                        make_planted_tensor, msc_sequential)
+from repro.core.fingerprint import (OBSERVATIONAL_KNOBS, cache_salt,
+                                    config_fingerprint, result_cache_key,
+                                    spectral_sketch, tensor_fingerprint)
+from repro.core.types import ModeResult, MSCResult
+from repro.serving import MSCContinuousEngine, MSCResultCache
+
+
+def _tensor(seed=0, m=12, gamma=40.0):
+    return np.asarray(make_planted_tensor(
+        jax.random.PRNGKey(seed), PlantedSpec.paper(m, gamma)), np.float32)
+
+
+def _result(m=4, sweeps=6):
+    mode = ModeResult(mask=np.zeros(m, bool), d=np.zeros(m, np.float32),
+                      lambdas=np.ones(m, np.float32),
+                      n_iters=np.asarray(sweeps),
+                      power_iters_run=np.asarray(sweeps))
+    return MSCResult(modes=(mode, mode, mode))
+
+
+# ------------------------------------------------ tier-1 key layout --
+
+class TestTensorFingerprint:
+    def test_layout_invariance(self):
+        a = _tensor()
+        base = tensor_fingerprint(a)
+        assert tensor_fingerprint(np.asfortranarray(a)) == base
+        assert tensor_fingerprint(a.transpose(2, 0, 1)
+                                  .transpose(1, 2, 0)) == base
+        # a strided (non-contiguous) view of the same values
+        big = np.zeros((a.shape[0], 2 * a.shape[1], a.shape[2]), a.dtype)
+        big[:, ::2, :] = a
+        assert tensor_fingerprint(big[:, ::2, :]) == base
+
+    def test_content_sensitivity(self):
+        a = _tensor()
+        b = a.copy()
+        b[3, 4, 5] += 1e-6
+        assert tensor_fingerprint(b) != tensor_fingerprint(a)
+
+    def test_shape_and_dtype_sensitivity(self):
+        a = _tensor()
+        assert (tensor_fingerprint(a.reshape(-1))
+                != tensor_fingerprint(a))
+        assert (tensor_fingerprint(a.astype(np.float64))
+                != tensor_fingerprint(a))
+
+    def test_key_mixes_config_and_salt(self):
+        a = _tensor()
+        cfg = MSCConfig(epsilon=3e-4)
+        k = result_cache_key(a, cfg)
+        assert k == result_cache_key(np.asfortranarray(a), cfg)
+        assert k != result_cache_key(a, cfg.with_(epsilon=1e-3))
+        assert k != result_cache_key(a, cfg, salt="other-code-version")
+
+
+class TestConfigFingerprint:
+    def test_semantic_equality_collides(self):
+        cfg = MSCConfig(epsilon=3e-4, power_tol=1e-2)
+        assert cfg.fingerprint() == cfg.with_().fingerprint()
+        # int/float spellings of the same number are one knob setting
+        assert (MSCConfig(power_iters=60).fingerprint()
+                == MSCConfig(power_iters=60.0).fingerprint())
+
+    def test_solver_knobs_fragment(self):
+        base = MSCConfig(epsilon=3e-4).fingerprint()
+        for kw in ({"epsilon": 1e-3}, {"power_tol": 1e-4},
+                   {"epilogue": "ring"}, {"precision": "bf16_fp32"},
+                   {"matrix_free": False}, {"use_kernels": True}):
+            assert MSCConfig(epsilon=3e-4).with_(**kw).fingerprint() != base
+
+    def test_observational_knobs_ignored(self):
+        d = {"epsilon": 3e-4, "power_tol": 1e-2}
+        noisy = dict(d, ckpt_every_chunks=4, max_retries=7,
+                     placement="stable", refill_min_free=2)
+        assert set(noisy) - set(d) <= OBSERVATIONAL_KNOBS
+        assert config_fingerprint(noisy) == config_fingerprint(d)
+
+    def test_field_order_independent(self):
+        a = {"epsilon": 3e-4, "power_tol": 1e-2}
+        b = {"power_tol": 1e-2, "epsilon": 3e-4}
+        assert config_fingerprint(a) == config_fingerprint(b)
+
+
+# ------------------------------------------------ cache units --------
+
+class TestCacheEviction:
+    def test_lru_eviction_under_budget(self):
+        r = _result()
+        cache = MSCResultCache(max_bytes=1)  # everything over budget
+        cache.put("a", r, shape=(4, 4, 4))
+        assert len(cache) == 1               # newest always admitted
+        one = cache.nbytes                   # exact size of one entry
+        cache = MSCResultCache(max_bytes=int(2.5 * one))
+        for k in ("a", "b", "c"):
+            cache.put(k, r, shape=(4, 4, 4))
+        assert "a" not in cache and cache.evicted >= 1
+        assert cache.nbytes <= cache.max_bytes
+
+    def test_get_refreshes_recency(self):
+        r = _result()
+        cache = MSCResultCache(max_bytes=256 << 20)
+        cache.put("a", r, shape=(4, 4, 4))
+        cache.put("b", r, shape=(4, 4, 4))
+        assert cache.get("a") is not None
+        # force exactly one eviction: shrink the budget via max_bytes
+        cache.max_bytes = cache.nbytes  # room for 2 of 3
+        cache.put("c", r, shape=(4, 4, 4))
+        assert "b" not in cache and "a" in cache and "c" in cache
+
+    def test_replace_in_place_accounting(self):
+        r = _result()
+        cache = MSCResultCache(max_bytes=256 << 20)
+        cache.put("a", r, shape=(4, 4, 4))
+        n1 = cache.nbytes
+        cache.put("a", r, shape=(4, 4, 4))
+        assert len(cache) == 1 and cache.nbytes == n1
+
+    def test_miss_and_hit_counters(self):
+        cache = MSCResultCache()
+        assert cache.get("nope") is None and cache.misses == 1
+        cache.put("a", _result(), shape=(4, 4, 4))
+        assert cache.get("a") is not None and cache.hits == 1
+
+
+class TestNearLookup:
+    def _entry(self, cache, key, t):
+        m = t.shape[0]
+        vecs = tuple(np.ones((m, m), np.float32) for _ in range(3))
+        cache.put(key, _result(m), shape=t.shape, vectors=vecs,
+                  sketch=spectral_sketch(t, r=cache.sketch_r))
+
+    def test_near_duplicate_hits_distinct_tensor_misses(self):
+        rng = np.random.RandomState(0)
+        a, b = _tensor(0), _tensor(1)
+        near = a + 0.003 * a.std() * rng.standard_normal(a.shape) \
+                                        .astype(np.float32)
+        cache = MSCResultCache()
+        self._entry(cache, "a", a)
+        hit = cache.lookup_near(spectral_sketch(near, r=cache.sketch_r),
+                                near.shape)
+        assert hit is not None and hit.key == "a"
+        assert hit.distance <= cache.sketch_tol
+        assert cache.lookup_near(spectral_sketch(b, r=cache.sketch_r),
+                                 b.shape) is None
+
+    def test_shape_mismatch_rejected(self):
+        a = _tensor(0, m=12)
+        cache = MSCResultCache()
+        self._entry(cache, "a", a)
+        other = _tensor(2, m=16)
+        assert cache.lookup_near(
+            spectral_sketch(other, r=cache.sketch_r), other.shape) is None
+
+    def test_entries_without_vectors_never_near_hit(self):
+        a = _tensor(0)
+        cache = MSCResultCache()
+        cache.put("a", _result(a.shape[0]), shape=a.shape)  # tier-1 only
+        assert cache.lookup_near(
+            spectral_sketch(a, r=cache.sketch_r), a.shape) is None
+
+
+class TestPersistence:
+    def test_round_trip(self, tmp_path):
+        d = str(tmp_path / "cache")
+        a = _tensor(0)
+        cache = MSCResultCache(persist_dir=d)
+        m = a.shape[0]
+        cache.put("plain", _result(), shape=(4, 4, 4))
+        cache.put("rich", _result(m), shape=a.shape,
+                  vectors=tuple(np.ones((m, m), np.float32)
+                                for _ in range(3)),
+                  sketch=spectral_sketch(a, r=cache.sketch_r))
+        assert cache.persist() is not None
+
+        fresh = MSCResultCache(persist_dir=d)
+        assert len(fresh) == 2 and fresh.nbytes == cache.nbytes
+        got = fresh.get("rich")
+        for j in range(3):
+            np.testing.assert_array_equal(got[j].mask, _result(m)[j].mask)
+        # the LSH index is rebuilt at load: near lookups still work
+        hit = fresh.lookup_near(spectral_sketch(a, r=fresh.sketch_r),
+                                a.shape)
+        assert hit is not None and hit.key == "rich"
+
+    def test_persist_keeps_last_one(self, tmp_path):
+        d = str(tmp_path / "cache")
+        cache = MSCResultCache(persist_dir=d)
+        cache.put("a", _result(), shape=(4, 4, 4))
+        cache.persist()
+        cache.put("b", _result(), shape=(4, 4, 4))
+        cache.persist()
+        steps = [n for n in os.listdir(d) if n.startswith("step_")]
+        assert len(steps) == 1
+        assert len(MSCResultCache(persist_dir=d)) == 2
+
+    def test_stale_salt_dropped_at_load(self, tmp_path, monkeypatch):
+        d = str(tmp_path / "cache")
+        cache = MSCResultCache(persist_dir=d)
+        cache.put("a", _result(), shape=(4, 4, 4))
+        cache.persist()
+        import repro.core.fingerprint as fp
+        monkeypatch.setattr(fp, "CODE_VERSION", "msc-result-cache-v999")
+        assert cache_salt() != cache.salt
+        assert len(MSCResultCache(persist_dir=d)) == 0
+
+    def test_no_persist_dir_is_noop(self):
+        assert MSCResultCache().persist() is None
+
+
+# ------------------------------------------------ gc orphan reaping --
+
+class TestGcOrphanShards:
+    def test_orphan_shards_and_vote_records_reaped(self, tmp_path):
+        d = str(tmp_path / "ckpt")
+        save_checkpoint(d, 1, [np.arange(4, dtype=np.float32)])
+        step = os.path.join(d, "step_00000001")
+        orphan = shard_filename(0, 1, 0)
+        np.save(os.path.join(step, orphan), np.zeros(2))
+        with open(os.path.join(step, "shards_p001.json"), "w") as f:
+            json.dump({"entries": [{"file": orphan}]}, f)
+        with open(os.path.join(step, "shards_p002.json"), "w") as f:
+            f.write("{not json")            # unreadable vote record
+        gc_checkpoints(d, 1)
+        names = set(os.listdir(step))
+        assert orphan not in names
+        assert "shards_p001.json" not in names
+        assert "shards_p002.json" not in names
+        assert {"manifest.json", "leaf_00000.npy"} <= names
+        leaves, _ = load_leaves(d, 1)        # step still restorable
+        np.testing.assert_array_equal(leaves[0],
+                                      np.arange(4, dtype=np.float32))
+
+    def test_referenced_shards_survive(self, tmp_path):
+        d = str(tmp_path / "ckpt")
+        step = os.path.join(d, "step_00000001")
+        os.makedirs(step)
+        data = np.arange(4, dtype=np.float32)
+        kept = shard_filename(0, 0, 0)
+        np.save(os.path.join(step, kept), data)
+        orphan = shard_filename(0, 5, 0)
+        np.save(os.path.join(step, orphan), data)
+        import hashlib
+        sha = hashlib.sha256(np.ascontiguousarray(data).tobytes()) \
+                     .hexdigest()
+        manifest = {"step": 1, "treedef": "*", "extra": {}, "leaves": [
+            {"i": 0, "kind": "sharded", "shape": [4], "dtype": "float32",
+             "shards": [{"file": kept, "sha256": sha, "index": [[0, 4]]}]}]}
+        with open(os.path.join(step, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        gc_checkpoints(d, 1)
+        names = set(os.listdir(step))
+        assert kept in names and orphan not in names
+
+    def test_unparseable_manifest_left_alone(self, tmp_path):
+        d = str(tmp_path / "ckpt")
+        step = os.path.join(d, "step_00000001")
+        os.makedirs(step)
+        with open(os.path.join(step, "manifest.json"), "w") as f:
+            f.write("{broken")
+        shard = shard_filename(0, 0, 0)
+        np.save(os.path.join(step, shard), np.zeros(2))
+        gc_checkpoints(d, 1)
+        assert shard in os.listdir(step)     # provably-safe bar: no-op
+
+    def test_tmp_step_dirs_removed(self, tmp_path):
+        d = str(tmp_path / "ckpt")
+        save_checkpoint(d, 1, [np.zeros(2)])
+        os.makedirs(os.path.join(d, "step_00000002.tmp"))
+        os.makedirs(os.path.join(d, "step_00000001.old.tmp"))
+        gc_checkpoints(d, 1)
+        names = os.listdir(d)
+        assert names == ["step_00000001"]
+
+
+# ------------------------------------------------ engine integration --
+
+class TestEngineCache:
+    def _mesh(self):
+        return make_msc_mesh("flat", devices=jax.devices()[:1],
+                             shape=(1, 1))
+
+    def test_exact_hit_skips_device(self):
+        cfg = MSCConfig(epsilon=3e-4, power_tol=1e-2)
+        cache = MSCResultCache()
+        eng = MSCContinuousEngine(self._mesh(), cfg, slots=2,
+                                  result_cache=cache)
+        t = _tensor(0, m=12, gamma=40.0)
+        cold = eng.run([t])[0]
+        before = eng.stats
+        # repeat in a different memory layout: the key is content-based
+        hot = eng.run([np.asfortranarray(t)])[0]
+        s = eng.stats.delta(before)
+        assert s.cache_hits == 1 and s.cache_misses == 0
+        assert s.dispatches == 0 and s.refills == 0
+        for j in range(3):
+            np.testing.assert_array_equal(hot[j].mask, cold[j].mask)
+            np.testing.assert_array_equal(hot[j].d, cold[j].d)
+            assert (int(hot[j].power_iters_run)
+                    == int(cold[j].power_iters_run))
+
+    def test_warm_start_oracle_parity_and_fewer_sweeps(self):
+        # the tight gate makes warm and cold exit on the same
+        # eigenvector to ~1e-4, so threshold extraction — and hence the
+        # masks — is insensitive to the different iterate paths
+        cfg = MSCConfig(epsilon=3e-4, power_tol=1e-4, power_iters=480,
+                        power_check_every=8)
+        eng = MSCContinuousEngine(self._mesh(), cfg, slots=2,
+                                  result_cache=MSCResultCache(),
+                                  warm_start=True)
+        donor = _tensor(7, m=16, gamma=20.0)
+        rng = np.random.RandomState(3)
+        near = donor + 0.003 * donor.std() * rng.standard_normal(
+            donor.shape).astype(np.float32)
+        cold = eng.run([donor])[0]
+        before = eng.stats
+        warm = eng.run([near])[0]
+        s = eng.stats.delta(before)
+        assert s.warm_starts == 1 and s.cache_misses == 1
+        assert s.warm_sweeps_saved > 0
+        ref = msc_sequential(near, cfg)
+        for j in range(3):
+            assert (int(warm[j].power_iters_run)
+                    <= int(cold[j].power_iters_run))
+            assert (warm[j].mask == np.asarray(ref[j].mask)).all()
+
+    def test_cold_path_unaffected_without_cache(self):
+        cfg = MSCConfig(epsilon=3e-4, power_tol=1e-2)
+        t = _tensor(0, m=12, gamma=40.0)
+        plain = MSCContinuousEngine(self._mesh(), cfg, slots=2)
+        cached = MSCContinuousEngine(self._mesh(), cfg, slots=2,
+                                     result_cache=MSCResultCache(),
+                                     warm_start=True)
+        a, b = plain.run([t])[0], cached.run([t])[0]
+        for j in range(3):
+            np.testing.assert_array_equal(a[j].mask, b[j].mask)
+            np.testing.assert_array_equal(a[j].d, b[j].d)
+            assert (int(a[j].power_iters_run)
+                    == int(b[j].power_iters_run))
+
+
+# ------------------------------------------- in-process CI matrix ----
+
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs >= 8 devices (CI multi-device job)")
+def test_cache_in_process():
+    """Real multi-device cache path: exact hits skip the device, warm
+    starts keep oracle parity with fewer sweeps, on the mesh shape the
+    CI matrix sets via MSC_MESH_SHAPE — both epilogues."""
+    p, q = (int(x) for x in
+            os.environ.get("MSC_MESH_SHAPE", "4x2").split("x"))
+    mesh = make_msc_mesh("flat", devices=jax.devices()[:p * q],
+                         shape=(p, q))
+    donor = _tensor(7, m=16, gamma=20.0)
+    rng = np.random.RandomState(3)
+    near = donor + 0.003 * donor.std() * rng.standard_normal(
+        donor.shape).astype(np.float32)
+    for epilogue in ("allgather", "ring"):
+        cfg = MSCConfig(epsilon=3e-4, power_tol=1e-4, power_iters=480,
+                        power_check_every=8, epilogue=epilogue)
+        eng = MSCContinuousEngine(mesh, cfg, slots=2,
+                                  result_cache=MSCResultCache(),
+                                  warm_start=True)
+        cold = eng.run([donor])[0]
+        before = eng.stats
+        hot = eng.run([np.asfortranarray(donor)])[0]
+        warm = eng.run([near])[0]
+        s = eng.stats.delta(before)
+        assert s.cache_hits == 1 and s.warm_starts == 1
+        assert s.dispatches > 0 and s.compiles == 0  # warm ≠ recompile
+        ref = msc_sequential(near, cfg)
+        for j in range(3):
+            np.testing.assert_array_equal(hot[j].mask, cold[j].mask)
+            assert (warm[j].mask == np.asarray(ref[j].mask)).all()
+            assert (int(warm[j].power_iters_run)
+                    <= int(cold[j].power_iters_run))

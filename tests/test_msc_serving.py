@@ -117,7 +117,7 @@ def test_warm_bucket_performs_zero_recompiles():
         mon.clear_event_listeners()
 
     assert events == [], f"warm dispatch traced/compiled: {events}"
-    assert delta.compiles == 0 and delta.cache_hits == 2, delta
+    assert delta.compiles == 0 and delta.exec_cache_hits == 2, delta
     assert delta.dispatches == 2 and delta.filler_slots == 1, delta
     assert all(o is not None for o in outs)
 
