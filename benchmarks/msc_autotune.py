@@ -1,0 +1,227 @@
+"""Roofline-driven autotuner + comm/compute overlap (DESIGN.md §7.11).
+
+Three claims, one bench:
+
+  * **Auto-config does no harm and needs no flags.**  The same skewed
+    serving mix as BENCH_msc_continuous is served by two warmed
+    continuous engines: the hand-set default config (allgather
+    epilogue, chunks_per_step=1, default kernel blocks) and the
+    all-auto engine (epilogue="auto", chunks_per_step="auto",
+    autotune=True — every knob resolved per bucket from the roofline
+    models + the block search at the AOT compile site).
+    `autotuned_ratio` = default_ms / autotuned_ms must be ≥ 1.0 on the
+    p=8 serving-mix row; when the choosers resolve exactly the default
+    config the engines share one executable shape and the ratio is 1.0
+    by construction.
+  * **The streamed relayout overlap wins at scale, per the comm
+    model.**  `roofline.relayout_model` evaluated at the MEASURED
+    per-request sweep histogram's median gives `overlap_speedup`
+    (blocking collective / ring-streamed collective); the p=8 bar is
+    ≥ 1.2.  The streamed schedule itself is validated against compiled
+    HLO: its executable must contain collective-permute chunk steps
+    (the blocking one an all-to-all) and produce bit-identical masks.
+  * **Warm serving still performs 0 searches / 0 recompiles.**
+    jax.monitoring compile/trace listeners + ServeStats deltas pin the
+    warm timed runs of the AUTOTUNED engine at zero compiles, and its
+    autotune counters at zero warm searches.
+
+Rows land in experiments/bench/msc_autotune.json AND
+BENCH_msc_autotune.json (the CI perf artifact).  CPU caveat: measured
+ratios come from forced host-platform devices; the overlap headline is
+the comm-model number (CPU has no ICI to overlap), which is the same
+methodology as the projected columns of BENCH_ring_epilogue.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+from .common import REPO, run_subprocess_json
+
+BENCH_PATH = os.path.join(REPO, "BENCH_msc_autotune.json")
+
+CPU_CAVEAT = (
+    "measured on forced host-platform devices: autotuned_ratio is a "
+    "do-no-harm bar on CPU walltime; overlap_speedup is the V5E comm-model "
+    "prediction (no ICI to overlap on host devices), validated "
+    "structurally against the compiled streamed-relayout HLO")
+
+_CODE = """
+import json
+from benchmarks.msc_autotune import measure
+print(json.dumps([measure(**s) for s in json.loads('''{specs}''')]))
+"""
+
+SLOW_EVERY, GAMMA_SLOW, GAMMA_FAST = 8, 2.0, 300.0
+
+
+def _mix(m: int, n: int):
+    import jax
+
+    from repro.core import PlantedSpec, make_planted_tensor
+
+    specs = [PlantedSpec.paper(
+        m, GAMMA_SLOW if i % SLOW_EVERY == 0 else GAMMA_FAST)
+        for i in range(n)]
+    return [make_planted_tensor(jax.random.PRNGKey(i), s)
+            for i, s in enumerate(specs)]
+
+
+def measure(p: int, q: int, m: int, n: int, B: int) -> Dict:
+    """Worker (runs under a forced device count): one autotune cell."""
+    import time
+
+    import jax
+    import jax.monitoring as mon
+    import numpy as np
+
+    from repro.core import MSCConfig, make_msc_mesh, msc_sequential
+    from repro.core.parallel import build_msc_parallel_flat
+    from repro.roofline import relayout_model
+    from repro.serving import MSCContinuousEngine
+
+    mesh = make_msc_mesh("flat", devices=jax.devices()[:p * q], shape=(p, q))
+    dcfg = MSCConfig(epsilon=3e-4, power_tol=3e-3, power_iters=240,
+                     power_check_every=8)
+    tensors = _mix(m, n)
+
+    default = MSCContinuousEngine(mesh, dcfg, slots=B)
+    tuned = MSCContinuousEngine(mesh, dcfg.with_(epilogue="auto"), slots=B,
+                                chunks_per_step="auto", autotune=True)
+    res_d = default.run(tensors)         # cold: compiles + search excluded
+    res_t = tuned.run(tensors)
+    cold = tuned.stats
+
+    masks_identical = all(
+        (rt[j].mask == rd[j].mask).all()
+        and int(rt[j].power_iters_run) == int(rd[j].power_iters_run)
+        for rt, rd in zip(res_t, res_d) for j in range(3))
+    for i in (0, 1):                     # sequential-oracle spot check
+        ref = msc_sequential(tensors[i], dcfg)
+        masks_identical &= all(
+            (res_t[i][j].mask == np.asarray(ref[j].mask)).all()
+            for j in range(3))
+
+    # what did the auto layer resolve for the (single) serving bucket?
+    bucket = tuned.bucket_of(tensors[0].shape)
+    tplan = tuned._plan_for(bucket)
+    tcfg = tplan.sched.cfg
+    resolved = {"epilogue": tcfg.epilogue,
+                "chunks_per_step": tplan.chunks_per_step,
+                "inner_overlap": bool(tcfg.inner_overlap),
+                "block_r": tcfg.block_r or 256,
+                "block_i": tcfg.block_i or 128,
+                "block_j": tcfg.block_j or 128}
+    same_config = (resolved["epilogue"] == dcfg.epilogue
+                   and resolved["chunks_per_step"] == 1
+                   and not resolved["inner_overlap"]
+                   and (resolved["block_r"], resolved["block_i"],
+                        resolved["block_j"]) == (256, 128, 128))
+
+    # ---- warm timed runs: min-of-3, recompiles pinned ---------------
+    events: List[str] = []
+    mon.register_event_duration_secs_listener(
+        lambda ev, dur, **kw: events.append(ev)
+        if "compile" in ev or "trace" in ev else None)
+    try:
+        before = tuned.stats
+        # interleave the reps: host drift (page cache, malloc arenas
+        # warming over the bench) must not bias one engine's min
+        tuned_reps, default_reps = [], []
+        for _ in range(3):
+            tuned_reps.append(_timed(tuned, tensors, time))
+            if not same_config:
+                default_reps.append(_timed(default, tensors, time))
+        warm = tuned.stats.delta(before)
+        tuned_s = min(tuned_reps)
+        # identical resolved config ⇒ identical executables: ratio 1.0
+        default_s = tuned_s if same_config else min(default_reps)
+    finally:
+        mon.clear_event_listeners()
+
+    # ---- comm-model overlap headline at the measured sweep median ---
+    iter_hist = [max(int(r[j].power_iters_run) for j in range(3))
+                 for r in res_t]
+    sweeps = int(np.median(iter_hist))
+    rel = relayout_model((m, m, m), p, q, B=B, sweeps=sweeps)
+
+    # ---- streamed relayout vs compiled HLO (BENCH_ring_epilogue
+    # methodology): ppermute chunk steps in the text, masks identical --
+    scfg = dcfg.with_(power_tol=1e-2)
+    blocking = build_msc_parallel_flat(mesh, scfg, relayout="collective")
+    streamed = build_msc_parallel_flat(mesh, scfg,
+                                       relayout="collective_stream")
+    x = jax.ShapeDtypeStruct(tensors[0].shape, tensors[0].dtype)
+    hlo = streamed.lower(x).compile().as_text()
+    stream_ppermutes = hlo.count("collective-permute")
+    rb, rs = blocking(tensors[0]), streamed(tensors[0])
+    stream_masks_identical = all(
+        (np.asarray(rs[j].mask) == np.asarray(rb[j].mask)).all()
+        for j in range(3))
+
+    return {
+        "p": p, "q": q, "m": m, "n": n, "B": B,
+        "resolved_epilogue": resolved["epilogue"],
+        "resolved_chunks_per_step": resolved["chunks_per_step"],
+        "resolved_inner_overlap": resolved["inner_overlap"],
+        "resolved_block_r": resolved["block_r"],
+        "same_as_default": bool(same_config),
+        "default_ms": default_s * 1e3, "autotuned_ms": tuned_s * 1e3,
+        "autotuned_ratio": default_s / tuned_s,
+        "masks_identical": bool(masks_identical),
+        "autotune_searches": cold.autotune_searches,
+        "warm_autotune_searches": warm.autotune_searches,
+        "warm_recompiles": warm.compiles + len(events),
+        "median_sweeps": sweeps,
+        "overlap_speedup": rel["overlap_speedup"],
+        "relayout_blocking_s": rel["collective_s"],
+        "relayout_streamed_s": rel["collective_stream_s"],
+        "stream_ppermutes": stream_ppermutes,
+        "stream_masks_identical": bool(stream_masks_identical),
+        "cpu_caveat": None,  # filled by run() from CPU_CAVEAT
+    }
+
+
+def _timed(engine, tensors, time):
+    t0 = time.time()
+    engine.run(tensors)
+    return time.time() - t0
+
+
+def run(full: bool = False) -> List[Dict]:
+    specs = [{"p": 8, "q": 1, "m": 96, "n": 32, "B": 8},
+             {"p": 4, "q": 2, "m": 48, "n": 24, "B": 8}]
+    if full:
+        specs.append({"p": 8, "q": 1, "m": 96, "n": 80, "B": 8})
+    rows: List[Dict] = []
+    for spec in specs:
+        res = run_subprocess_json(_CODE.format(specs=json.dumps([spec])),
+                                  n_devices=spec["p"] * spec["q"],
+                                  timeout=1800)
+        rows.extend(res)
+    for row in rows:
+        row["cpu_caveat"] = CPU_CAVEAT
+        assert row["masks_identical"], f"autotuned masks diverged: {row}"
+        assert row["stream_masks_identical"], \
+            f"streamed relayout not bit-identical: {row}"
+        assert row["stream_ppermutes"] > 0, \
+            f"streamed relayout compiled without ppermute chunks: {row}"
+        assert row["warm_recompiles"] == 0, f"warm bucket recompiled: {row}"
+        assert row["warm_autotune_searches"] == 0, \
+            f"warm serving re-searched blocks: {row}"
+        assert row["autotune_searches"] >= 1, \
+            f"cold engine never resolved its bucket: {row}"
+        if row["p"] == 8 and row["q"] == 1:
+            assert row["autotuned_ratio"] >= 1.0, (
+                f"auto-config lost to hand-set defaults: {row}")
+            assert row["overlap_speedup"] >= 1.2, (
+                f"streamed relayout under the 1.2x comm-model bar: {row}")
+        else:
+            assert row["autotuned_ratio"] >= 0.9, (
+                f"auto-config regressed the serving mix: {row}")
+
+    with open(BENCH_PATH, "w") as f:
+        json.dump(rows, f, indent=2)
+    print(f"[msc_autotune] wrote {BENCH_PATH}")
+    return rows

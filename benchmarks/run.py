@@ -18,31 +18,107 @@
   msc_cache           (new) content-addressed result cache: Zipf
                       exact-repeat throughput + spectral warm starts
                       (DESIGN.md §7.10)
+  msc_autotune        (new) roofline-driven autotuner + comm/compute
+                      overlap: autotuned vs default serving config,
+                      streamed-relayout speedup, warm-recompile pin
+                      (DESIGN.md §7.11)
 
 Usage:
   PYTHONPATH=src python -m benchmarks.run            # CPU-feasible sizes
   PYTHONPATH=src python -m benchmarks.run --full     # paper-scale sizes
   PYTHONPATH=src python -m benchmarks.run --quick    # CI smoke subset
   PYTHONPATH=src python -m benchmarks.run --only fig4_quality,kernel_bench
+  PYTHONPATH=src python -m benchmarks.run --trajectory   # aggregate only
 
 Rows are printed as CSV and saved to experiments/bench/<name>.json.
+
+--trajectory folds every repo-root BENCH_*.json headline metric into
+BENCH_trajectory.json: one snapshot entry APPENDED per invocation (the
+per-PR perf trajectory — earlier snapshots are never rewritten).  Alone
+it only aggregates; combined with --quick/--full/--only it aggregates
+after the selected benches refresh their artifacts.
 """
 from __future__ import annotations
 
 import argparse
+import glob
 import importlib
+import json
+import os
+import subprocess
 import time
 import traceback
 
-from .common import print_rows, save_rows
+from .common import REPO, print_rows, save_rows
 
 ALL = ("fig4_quality", "fig5_strong_scaling", "fig6_data_scaling",
        "fig8_comm", "kernel_bench", "power_iter_bench", "ring_epilogue",
        "inner_shard", "msc_serving", "msc_continuous", "msc_faults",
-       "msc_multihost", "msc_cache")
+       "msc_multihost", "msc_cache", "msc_autotune")
 QUICK = ("power_iter_bench", "kernel_bench", "ring_epilogue", "inner_shard",
          "msc_serving", "msc_continuous", "msc_faults", "msc_multihost",
-         "msc_cache")
+         "msc_cache", "msc_autotune")
+
+# headline-metric key fragments: the per-PR trajectory keeps ratios,
+# parity bits, and medians — not every raw measurement
+_HEADLINE_TAGS = ("ratio", "speedup", "identical", "recompile",
+                  "occupancy", "median_ms", "searches")
+
+TRAJECTORY_PATH = os.path.join(REPO, "BENCH_trajectory.json")
+
+
+def _headline(rows) -> dict:
+    """First-seen headline metrics across a bench's rows."""
+    head: dict = {}
+    for row in rows if isinstance(rows, list) else ():
+        if not isinstance(row, dict):
+            continue
+        for k, v in row.items():
+            if (isinstance(v, (int, float, bool))
+                    and any(t in k for t in _HEADLINE_TAGS)):
+                head.setdefault(k, v)
+    return head
+
+
+def append_trajectory() -> dict:
+    """Fold every BENCH_*.json headline into one trajectory snapshot,
+    appended to BENCH_trajectory.json (earlier entries untouched)."""
+    benches = {}
+    for path in sorted(glob.glob(os.path.join(REPO, "BENCH_*.json"))):
+        name = os.path.basename(path)[len("BENCH_"):-len(".json")]
+        if name == "trajectory":
+            continue
+        try:
+            with open(path) as f:
+                head = _headline(json.load(f))
+        except (OSError, ValueError):
+            continue
+        if head:
+            benches[name] = head
+    try:
+        commit = subprocess.run(
+            ["git", "-C", REPO, "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10).stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        commit = None
+    traj = []
+    if os.path.exists(TRAJECTORY_PATH):
+        try:
+            with open(TRAJECTORY_PATH) as f:
+                loaded = json.load(f)
+            if isinstance(loaded, list):
+                traj = loaded
+        except (OSError, ValueError):
+            pass
+    entry = {"seq": len(traj) + 1, "commit": commit,
+             "time": time.strftime("%Y-%m-%dT%H:%M:%S"),
+             "benches": benches}
+    traj.append(entry)
+    with open(TRAJECTORY_PATH, "w") as f:
+        json.dump(traj, f, indent=1, sort_keys=True)
+    print(f"[trajectory] appended snapshot {entry['seq']} "
+          f"({len(benches)} benches) to {TRAJECTORY_PATH}")
+    return entry
 
 
 def main(argv=None) -> int:
@@ -53,12 +129,18 @@ def main(argv=None) -> int:
                     help="CI smoke subset (perf-trajectory benches only)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of benches")
+    ap.add_argument("--trajectory", action="store_true",
+                    help="append a BENCH_trajectory.json snapshot from "
+                         "the repo-root BENCH_*.json artifacts (alone: "
+                         "aggregate only, run no benches)")
     args = ap.parse_args(argv)
 
     if args.only:
         names = args.only.split(",")
     elif args.quick:
         names = list(QUICK)
+    elif args.trajectory and not args.full:
+        names = []          # aggregate-only invocation
     else:
         names = list(ALL)
     failures = []
@@ -73,10 +155,13 @@ def main(argv=None) -> int:
         except Exception:
             failures.append(name)
             traceback.print_exc()
+    if args.trajectory:
+        append_trajectory()
     if failures:
         print("FAILED benches:", failures)
         return 1
-    print("\nall benches complete")
+    if names:
+        print("\nall benches complete")
     return 0
 
 

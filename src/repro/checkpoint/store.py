@@ -446,7 +446,10 @@ def gc_checkpoints(directory: str, keep: int):
     """Delete all but the newest `keep` steps, any stale `.tmp` /
     `.old.tmp` step dirs (aborted or parked two-phase commits), and —
     inside each kept committed step — orphaned format-2 shard files an
-    aborted attempt left behind (`_gc_orphan_shards`)."""
+    aborted attempt left behind (`_gc_orphan_shards`).  An `autotune/`
+    subdirectory (the engine-private AutotuneCache persistence,
+    DESIGN.md §7.11) is reaped alongside to its own keep-last-1 — its
+    single step is a full rewrite, so older steps are always orphans."""
     if not os.path.isdir(directory):
         return
     steps = _all_steps(directory)
@@ -460,6 +463,9 @@ def gc_checkpoints(directory: str, keep: int):
         path = os.path.join(directory, f"step_{s:08d}")
         if os.path.isdir(path):
             _gc_orphan_shards(path)
+    sub = os.path.join(directory, "autotune")
+    if os.path.basename(directory) != "autotune" and os.path.isdir(sub):
+        gc_checkpoints(sub, 1)
 
 
 def restore_checkpoint(directory: str, step: int, like,

@@ -1,0 +1,248 @@
+"""Kernel block-shape autotuner with a content-addressed persisted
+cache (DESIGN.md §7.11).
+
+The Pallas kernels (`kernels/power_iter.py` r-tiled power iteration,
+`kernels/ring.py` `abs_rowsum`) take static block shapes that until now
+were hand-set constants.  The right blocks depend on the bucket shape,
+the mesh factorization, and the dtype — exactly the tuple the serving
+engines already AOT-compile one executable pair per.  This module
+closes the loop *at that compile site*:
+
+  * `block_candidates` — the small per-bucket search space (the
+    defaults plus a few r-tile and epilogue-tile variants, clamped to
+    the operand extents and deduplicated, so the einsum path — where
+    blocks are inert — degenerates to a single candidate and costs no
+    extra compiles).
+  * `search_blocks` — measure-and-pick: the caller supplies
+    `measure(candidate) -> (seconds, payload)` (compile the candidate
+    where compile already happens, time one dispatch on scratch state);
+    the winner's payload (its compiled executables) is returned so the
+    search itself adds zero recompiles for the winning config.  The
+    default candidate wins near-ties (`margin`) — retunes should not
+    flap between equivalent blocks.
+  * `AutotuneCache` — winners keyed content-addressed:
+    (shape signature, mesh, dtype, numerics-relevant config digest,
+    code/jax salt).  The config digest is `config_fingerprint`, which
+    drops the block knobs themselves — the key names the *problem*, the
+    entry holds the solution.  Persistence mirrors
+    `serving/result_cache.py`: one `checkpoint/store.py` step under
+    `persist_dir` (atomic tmp+rename, keep-last-1 GC), stale-salt
+    entries dropped at load, so a jax upgrade or a kernel-numerics bump
+    re-searches instead of trusting stale timings.
+
+Every block shape produces bit-identical results (padded/masked tiles;
+pinned by tests/test_autotune.py), so autotuning never touches the
+result-cache key space — it only changes which executable the engine
+compiles, and the winners ride the engines' existing executable caches:
+warm serving still sees 0 searches and 0 recompiles.
+"""
+from __future__ import annotations
+
+import json
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
+
+AUTOTUNE_KIND = "msc_autotune_cache"
+
+# the hand-set defaults every kernel shipped with before autotuning
+DEFAULT_BLOCKS: Dict[str, int] = {"block_r": 256, "block_i": 128,
+                                  "block_j": 128}
+# prefer the default on near-ties: timing jitter must not flap retunes
+DEFAULT_MARGIN = 0.05
+# wider margin when validating roofline-proposed CONFIG variants
+# (epilogue/inner_overlap): the candidate executables differ in one
+# collective schedule, so scratch timings sit near the host noise
+# floor — a proposal must beat the hand-set default decisively before
+# auto-config deviates from it (do-no-harm beats chasing small wins)
+VALIDATE_MARGIN = 0.10
+
+
+def autotune_key(shape_sig, mesh_shape, dtype, cfg, salt: Optional[str]
+                 = None) -> str:
+    """Content-addressed key of one autotune problem.
+
+    shape_sig: the bucket/operand shape tuple the executables are
+    lowered for (the serving engines pass (bucket..., B)); mesh_shape:
+    the mesh's (axis, size) items; cfg: an MSCConfig (digested with the
+    block knobs dropped — `config_fingerprint`'s OBSERVATIONAL_KNOBS —
+    so a previous tune's winners don't fragment the key space); salt:
+    `fingerprint.cache_salt()` — a code or jax bump invalidates cleanly.
+    """
+    from .fingerprint import cache_salt, config_fingerprint
+
+    return "|".join((
+        "x".join(str(int(s)) for s in shape_sig),
+        ",".join(f"{a}={n}" for a, n in mesh_shape),
+        str(dtype),
+        config_fingerprint(cfg) if not isinstance(cfg, str) else cfg,
+        salt if salt is not None else cache_salt(),
+    ))
+
+
+def block_candidates(bucket, use_kernels: bool) -> List[Dict[str, int]]:
+    """The per-bucket block search space.
+
+    Without kernels the block knobs are inert (einsum path) — one
+    candidate, zero extra compiles, but the resolution still runs so
+    the cache/persistence machinery is exercised identically.  With
+    kernels: r-tile variants for the power-iter kernel and square
+    epilogue-tile variants for `abs_rowsum`, clamped to the operand
+    extents exactly like the kernels clamp them (candidates that clamp
+    to the same effective blocks deduplicate away — tiny buckets search
+    almost nothing).
+    """
+    if not use_kernels:
+        return [dict(DEFAULT_BLOCKS)]
+    m = max(int(s) for s in bucket) if bucket else 1
+    raw: List[Dict[str, int]] = [dict(DEFAULT_BLOCKS)]
+    for br in (128, 512):
+        raw.append({"block_r": br, "block_i": 128, "block_j": 128})
+    for bij in (64, 256):
+        raw.append({"block_r": 256, "block_i": bij, "block_j": bij})
+    out, seen = [], set()
+    for cand in raw:
+        eff = (min(cand["block_r"], m), min(cand["block_i"], m),
+               min(cand["block_j"], m))
+        if eff in seen:
+            continue
+        seen.add(eff)
+        out.append(cand)
+    return out
+
+
+def search_blocks(candidates: Iterable[Dict[str, int]],
+                  measure: Callable[[Dict[str, int]], Tuple[float, object]],
+                  *, margin: float = DEFAULT_MARGIN):
+    """Measure every candidate and pick the winner.
+
+    measure(candidate) -> (seconds, payload): compile the candidate at
+    the caller's AOT site and time one dispatch on scratch state; the
+    payload is whatever the caller wants back for the winner (its
+    compiled executables — reused directly, so the winning config is
+    never compiled twice).  The first candidate is the default: it wins
+    whenever it is within `margin` of the fastest, so jittery timings
+    don't flap the tune away from the known-good blocks.
+
+    Returns (winner_candidate, winner_payload, timings) with timings a
+    {json-candidate: seconds} dict (persisted for observability).
+    """
+    cands = list(candidates)
+    if not cands:
+        raise ValueError("no autotune candidates")
+    timings: Dict[str, float] = {}
+    payloads = []
+    for cand in cands:
+        secs, payload = measure(cand)
+        timings[json.dumps(cand, sort_keys=True)] = float(secs)
+        payloads.append(payload)
+    secs_of = [timings[json.dumps(c, sort_keys=True)] for c in cands]
+    best_i = min(range(len(cands)), key=secs_of.__getitem__)
+    if best_i != 0 and secs_of[0] <= secs_of[best_i] * (1.0 + margin):
+        best_i = 0
+    return cands[best_i], payloads[best_i], timings
+
+
+class AutotuneCache:
+    """Persisted content-addressed store of autotune winners.
+
+    In-memory dict of key → entry ({"block_r", "block_i", "block_j",
+    "searched", "timings"}), persisted through `checkpoint/store.py` as
+    one step (no array leaves — the entries ride the manifest `extra`,
+    like `MSCResultCache` metadata) under `persist_dir`, keep-last-1.
+    The salt rides the manifest: a reload under a different salt drops
+    every entry (stale-salt hygiene, mirroring the result cache), so a
+    code/jax bump re-searches instead of reusing timings an older
+    toolchain produced.
+
+    Counters: `searches` (resolution misses that ran a live search) and
+    `hits` (resolutions served from the cache) — the engines surface
+    them as ServeStats.autotune_searches / autotune_cache_hits, and the
+    persistence round-trip test pins reload ⇒ 0 searches.
+    """
+
+    def __init__(self, persist_dir: Optional[str] = None,
+                 salt: Optional[str] = None):
+        from .fingerprint import cache_salt
+
+        self.salt = salt if salt is not None else cache_salt()
+        self.persist_dir = persist_dir
+        self._entries: Dict[str, Dict] = {}
+        self._persist_step = 0
+        self.searches = 0
+        self.hits = 0
+        if persist_dir:
+            self._load(persist_dir)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._entries
+
+    def entries(self) -> Dict[str, Dict]:
+        return dict(self._entries)
+
+    def get(self, key: str) -> Optional[Dict]:
+        e = self._entries.get(key)
+        if e is not None:
+            self.hits += 1
+        return e
+
+    def put(self, key: str, entry: Dict):
+        self._entries[key] = dict(entry)
+
+    def resolve(self, key: str, candidates: Iterable[Dict[str, int]],
+                measure, *, margin: float = DEFAULT_MARGIN):
+        """Get-or-search: cached winner (payload None — the caller
+        compiles it once at its own site) or a live `search_blocks`
+        whose winner is recorded.  Returns (knobs dict, payload); the
+        knobs are the winning candidate verbatim — block shapes plus
+        any config knobs the caller put up for measurement (the engine
+        adds epilogue/inner_overlap when the roofline models proposed a
+        non-default pick: the model proposes, the measured search
+        disposes, and the default still wins near-ties)."""
+        e = self.get(key)
+        if e is not None:
+            return ({k: v for k, v in e.items()
+                     if k not in ("searched", "timings")}, None)
+        self.searches += 1
+        winner, payload, timings = search_blocks(candidates, measure,
+                                                 margin=margin)
+        entry = dict(winner)
+        entry["searched"] = len(timings) > 1
+        entry["timings"] = timings
+        self.put(key, entry)
+        return (dict(winner), payload)
+
+    # ---- persistence (mirrors serving/result_cache.py) ---------------
+    def persist(self) -> Optional[str]:
+        """Write every entry as one checkpoint step (atomic), keep 1."""
+        if not self.persist_dir:
+            return None
+        from repro.checkpoint.store import gc_checkpoints, save_checkpoint
+
+        self._persist_step += 1
+        path = save_checkpoint(
+            self.persist_dir, self._persist_step, [],
+            extra={"kind": AUTOTUNE_KIND, "salt": self.salt,
+                   "entries": self._entries})
+        gc_checkpoints(self.persist_dir, 1)
+        return path
+
+    def _load(self, directory: str):
+        from repro.checkpoint.store import load_leaves, restorable_steps
+
+        steps = restorable_steps(directory, verify_sha=False)
+        if not steps:
+            return
+        try:
+            _, extra = load_leaves(directory, steps[0], verify=True)
+        except (IOError, OSError, ValueError):
+            return
+        if extra.get("kind") != AUTOTUNE_KIND:
+            return
+        self._persist_step = steps[0]
+        if extra.get("salt") != self.salt:
+            return  # stale salt: drop every persisted winner
+        for key, entry in dict(extra.get("entries", {})).items():
+            if all(k in entry for k in DEFAULT_BLOCKS):
+                self._entries[key] = dict(entry)

@@ -49,6 +49,11 @@ OBSERVATIONAL_KNOBS = frozenset({
     "max_retries", "retry_backoff_s", "retry_backoff_max_s",
     "refill_min_free", "max_queue_chunks", "placement",
     "chunks_per_step", "bucket_quantum", "slots",
+    # kernel block shapes + comm/compute overlap are numerics-neutral
+    # (bit-identical results per the autotune parity contract,
+    # tests/test_autotune.py) — a retune must not fragment the result
+    # cache, only the compiled-executable caches
+    "block_r", "block_i", "block_j", "inner_overlap",
 })
 
 

@@ -67,6 +67,98 @@ from .schedule import (EPILOGUES, ModeSchedule, axis_arg,  # noqa: F401
 from .types import MSCConfig, MSCResult
 
 
+RELAYOUTS = ("gspmd", "collective", "collective_stream")
+
+
+def _single_axis(ax):
+    """The one axis name of `ax`, or None when it spans several axes
+    (the stream relayout's ppermute needs a single named ring)."""
+    if isinstance(ax, str):
+        return ax
+    if isinstance(ax, (tuple, list)) and len(ax) == 1:
+        return ax[0]
+    return None
+
+
+def _stream_all_to_all(x, axis_name, split_axis: int, concat_axis: int,
+                       shards: int):
+    """Ring-streamed tiled all_to_all (DESIGN.md §7.11): p−1
+    lax.ppermute chunk steps, bit-identical to
+    `lax.all_to_all(..., tiled=True)` over the same axis.
+
+    A blocking all_to_all is one collective: downstream compute waits
+    for the whole payload.  Decomposed into per-peer ppermutes — step k
+    moves my split-part (i+k) mod p to device (i+k) mod p, each chunk
+    L/p of the local bytes — the chunks are independent collectives the
+    scheduler can interleave with unrelated compute, exactly the PR 2
+    ring-epilogue pattern: the previous mode's eigensolve sweeps hide
+    the next mode's relayout (`roofline.relayout_model`).  Pure data
+    movement (dynamic_slice in, dynamic_update_slice out, no
+    arithmetic), so results are bit-identical to the blocking a2a.
+    """
+    p = shards
+    part = x.shape[split_axis] // p
+    csize = x.shape[concat_axis]
+    idx = jax.lax.axis_index(axis_name)
+
+    def take(j):
+        start = [0] * x.ndim
+        start[split_axis] = j * part
+        sizes = list(x.shape)
+        sizes[split_axis] = part
+        return jax.lax.dynamic_slice(x, start, sizes)
+
+    out_shape = list(x.shape)
+    out_shape[split_axis] = part
+    out_shape[concat_axis] = csize * p
+
+    def place(out, chunk, j):
+        start = [0] * len(out_shape)
+        start[concat_axis] = j * csize
+        return jax.lax.dynamic_update_slice(out, chunk, start)
+
+    # my own part needs no transfer; peers arrive one ppermute each
+    out = place(jnp.zeros(out_shape, x.dtype), take(idx), idx)
+    for k in range(1, p):
+        perm = [(s, (s + k) % p) for s in range(p)]
+        chunk = jax.lax.ppermute(take((idx + k) % p), axis_name, perm)
+        out = place(out, chunk, (idx - k) % p)
+    return out
+
+
+def _a2a(x, ax, split_axis: int, concat_axis: int, shards: int,
+         stream: bool):
+    """One inter-mode relayout collective: blocking tiled all_to_all, or
+    the ring-streamed decomposition when `stream` (single-name axes of
+    ≥ 2 shards only — composed axes and p=1 keep the blocking form,
+    which is what the roofline chooser assumes too)."""
+    name = _single_axis(ax)
+    if stream and name is not None and shards > 1:
+        return _stream_all_to_all(x, name, split_axis, concat_axis, shards)
+    return jax.lax.all_to_all(x, ax, split_axis=split_axis,
+                              concat_axis=concat_axis, tiled=True)
+
+
+def _resolve_auto(mesh: Mesh, cfg: MSCConfig, shape, relayout: str,
+                  axis_name, inner_axis, B: int = 1):
+    """Resolve relayout="auto" / cfg.epilogue="auto" for one tensor
+    shape from the roofline models (DESIGN.md §7.11) — flags become
+    overrides simply by not saying "auto"."""
+    from repro.roofline import choose_epilogue, choose_relayout
+
+    sched = _flat_schedule(mesh, cfg, axis_name, inner_axis)
+    p, q = sched.slice_shards, sched.inner_shards
+    if relayout == "auto":
+        relayout = choose_relayout(shape, p, q, B=B,
+                                   sweeps=max(cfg.power_check_every, 1))
+    if cfg.epilogue == "auto":
+        m1, m2, m3 = shape
+        # mode 1 dominates the epilogue bytes on cubes; all modes share
+        # one policy (the schedules take a single cfg.epilogue)
+        cfg = cfg.with_(epilogue=choose_epilogue(m1, m3, p))
+    return cfg, relayout
+
+
 def _flat_schedule(mesh: Mesh, cfg: MSCConfig, axis_name,
                    inner_axis) -> ModeSchedule:
     """Resolve the flat schedule's axis roles.
@@ -107,13 +199,37 @@ def build_msc_parallel_flat(
                      materialized intermediates.  On 2-D meshes one
                      extra all_to_all over "inner" first frees the
                      row-sharded dim (see _build_flat_collective).
+      "collective_stream" — the collective schedule with each
+                     all_to_all decomposed into p−1 ppermute chunk
+                     steps (`_stream_all_to_all`): bit-identical
+                     relayout, but the chunks interleave with the
+                     previous mode's eigensolve sweeps (DESIGN.md
+                     §7.11) instead of blocking on one collective.
+      "auto"       — pick per tensor shape from
+                     `roofline.choose_relayout`; cfg.epilogue="auto"
+                     resolves alongside via `choose_epilogue` (works
+                     with any relayout setting).
     """
+    if relayout == "auto" or cfg.epilogue == "auto":
+        built = {}
+
+        def run_auto(tensor: jax.Array) -> MSCResult:
+            key = tuple(tensor.shape)
+            if key not in built:
+                rcfg, rlay = _resolve_auto(mesh, cfg, key, relayout,
+                                           axis_name, inner_axis)
+                built[key] = build_msc_parallel_flat(
+                    mesh, rcfg, axis_name, rlay, inner_axis)
+            return built[key](tensor)
+
+        return run_auto
     sched = _flat_schedule(mesh, cfg, axis_name, inner_axis)
-    if relayout == "collective":
-        return _build_flat_collective(sched)
+    if relayout in ("collective", "collective_stream"):
+        return _build_flat_collective(sched,
+                                      stream=relayout == "collective_stream")
     if relayout != "gspmd":
         raise ValueError(f"unknown relayout {relayout!r}; "
-                         f"expected 'gspmd' or 'collective'")
+                         f"expected one of {RELAYOUTS + ('auto',)}")
 
     @jax.jit
     def run(tensor: jax.Array) -> MSCResult:
@@ -126,7 +242,7 @@ def build_msc_parallel_flat(
     return run
 
 
-def _build_flat_collective(sched: ModeSchedule):
+def _build_flat_collective(sched: ModeSchedule, stream: bool = False):
     """Flat schedule with explicit all_to_all relayout (§Perf msc it 2).
 
     The tensor is distributed once — mode-1 slices over the slice axes,
@@ -168,17 +284,14 @@ def _build_flat_collective(sched: ModeSchedule):
 
         blk = t_block
         if sched.inner_axes:  # step A: free the inner-sharded dim
-            blk = jax.lax.all_to_all(blk, inner_ax, split_axis=0,
-                                     concat_axis=1, tiled=True)
+            blk = _a2a(blk, inner_ax, 0, 1, q, stream)
         # mode 2: m2 takes the slice axes; (m1P/(pq), m2P, m3P) →
         # (m1P/q, m2P/p, m3P) → slice-major (m2P/p, m1P/q, m3P)
-        b2 = jax.lax.all_to_all(blk, slice_ax, split_axis=1,
-                                concat_axis=0, tiled=True)
+        b2 = _a2a(blk, slice_ax, 1, 0, p, stream)
         outs.append(sched.mode_local(jnp.transpose(b2, (1, 0, 2)), valid1,
                                      c_valid=c_valids[1]))
         # mode 3: m3 takes the slice axes → slice-major (m3P/p, m1P/q, m2P)
-        b3 = jax.lax.all_to_all(blk, slice_ax, split_axis=2,
-                                concat_axis=0, tiled=True)
+        b3 = _a2a(blk, slice_ax, 2, 0, p, stream)
         outs.append(sched.mode_local(jnp.transpose(b3, (2, 0, 1)), valid2,
                                      c_valid=c_valids[2]))
         return tuple(outs)
@@ -304,18 +417,36 @@ def build_msc_batched(
     serving engine's executable cache.
 
     relayout: "gspmd" (per-mode global transpose, partitioner-chosen
-    collectives) or "collective" (explicit all_to_all relayout — the
+    collectives), "collective" (explicit all_to_all relayout — the
     §Perf msc it 2 schedule with every split/concat axis shifted under
     the leading request dim, so batches move exactly
     B·tensor_bytes/device of link traffic with no materialized
-    intermediates).
+    intermediates), "collective_stream" (the same schedule with each
+    a2a ring-streamed as p−1 ppermute chunks, DESIGN.md §7.11), or
+    "auto" (per-shape roofline choice — also resolves
+    cfg.epilogue="auto").
     """
+    if relayout == "auto" or cfg.epilogue == "auto":
+        built = {}
+
+        def run_auto(batch: jax.Array, dims: jax.Array) -> MSCResult:
+            key = tuple(batch.shape)
+            if key not in built:
+                rcfg, rlay = _resolve_auto(mesh, cfg, key[1:], relayout,
+                                           axis_name, inner_axis,
+                                           B=key[0])
+                built[key] = build_msc_batched(mesh, rcfg, axis_name,
+                                               inner_axis, rlay)
+            return built[key](batch, dims)
+
+        return run_auto
     sched = _flat_schedule(mesh, cfg, axis_name, inner_axis)
-    if relayout == "collective":
-        return _build_batched_collective(sched)
+    if relayout in ("collective", "collective_stream"):
+        return _build_batched_collective(
+            sched, stream=relayout == "collective_stream")
     if relayout != "gspmd":
         raise ValueError(f"unknown relayout {relayout!r}; "
-                         f"expected 'gspmd' or 'collective'")
+                         f"expected one of {RELAYOUTS + ('auto',)}")
 
     @jax.jit
     def run(batch: jax.Array, dims: jax.Array) -> MSCResult:
@@ -330,7 +461,7 @@ def build_msc_batched(
     return run
 
 
-def _build_batched_collective(sched: ModeSchedule):
+def _build_batched_collective(sched: ModeSchedule, stream: bool = False):
     """Request-batched flat schedule with explicit all_to_all relayout.
 
     Identical collective schedule to `_build_flat_collective` — one
@@ -357,17 +488,14 @@ def _build_batched_collective(sched: ModeSchedule):
 
         blk = t_block
         if sched.inner_axes:  # step A: free the inner-sharded dim
-            blk = jax.lax.all_to_all(blk, inner_ax, split_axis=1,
-                                     concat_axis=2, tiled=True)
+            blk = _a2a(blk, inner_ax, 1, 2, q, stream)
         # mode 2: m2 takes the slice axes; (B, m1P/(pq), m2P, m3P) →
         # (B, m1P/q, m2P/p, m3P) → slice-major (B, m2P/p, m1P/q, m3P)
-        b2 = jax.lax.all_to_all(blk, slice_ax, split_axis=2,
-                                concat_axis=1, tiled=True)
+        b2 = _a2a(blk, slice_ax, 2, 1, p, stream)
         outs.append(sched.mode_local(jnp.transpose(b2, (0, 2, 1, 3)),
                                      valid1, c_valid=c1[:, None]))
         # mode 3: m3 takes the slice axes → (B, m3P/p, m1P/q, m2P)
-        b3 = jax.lax.all_to_all(blk, slice_ax, split_axis=3,
-                                concat_axis=1, tiled=True)
+        b3 = _a2a(blk, slice_ax, 3, 1, p, stream)
         outs.append(sched.mode_local(jnp.transpose(b3, (0, 3, 1, 2)),
                                      valid2, c_valid=c2[:, None]))
         return tuple(outs)

@@ -317,19 +317,41 @@ def _run_adaptive(matvec, v, n_iters: int, tol: float, check_every: int,
 
 
 def matvec_matrix_free(slices: jax.Array, precision: str = "fp32",
-                       inner_axis=None):
+                       inner_axis=None, overlap: bool = False):
     """matvec(v) = Tᵀ(T v) closure over `slices` — precision-policy
-    operands, fp32 accumulation, partials psum'd over `inner_axis`."""
+    operands, fp32 accumulation, partials psum'd over `inner_axis`.
+
+    overlap=True double-buffers the inner reduction (DESIGN.md §7.11):
+    the slice batch splits in half and each half psums independently,
+    so half B's local contractions have no data dependence on half A's
+    psum and the scheduler hides one reduction under the other half's
+    T·v.  Bit-preserving — psum is elementwise per slice, and the
+    halves concatenate back in order — so the engine can flip it per
+    bucket from the roofline model without touching results.  Needs an
+    inner axis and ≥ 2 local slices; degenerates to the fused form
+    otherwise.
+    """
     dt = compute_dtype(precision)
     s = slices.astype(dt)
+    b = slices.shape[-3]
+    split = bool(overlap) and inner_axis is not None and b >= 2
+
+    def _local(sh, vh):
+        tv = jnp.einsum("...rc,...c->...r", sh, vh.astype(dt),
+                        preferred_element_type=jnp.float32)
+        return jnp.einsum("...rc,...r->...c", sh, tv.astype(dt),
+                          preferred_element_type=jnp.float32)
 
     def matvec(v):
         vb = _maybe_pvary(v, inner_axis)
-        tv = jnp.einsum("...rc,...c->...r", s, vb.astype(dt),
-                        preferred_element_type=jnp.float32)
-        w = jnp.einsum("...rc,...r->...c", s, tv.astype(dt),
-                       preferred_element_type=jnp.float32)
-        return _psum_inner(w, inner_axis)
+        if not split:
+            return _psum_inner(_local(s, vb), inner_axis)
+        h = b // 2
+        wa = _psum_inner(_local(s[..., :h, :, :], vb[..., :h, :]),
+                         inner_axis)
+        wb = _psum_inner(_local(s[..., h:, :, :], vb[..., h:, :]),
+                         inner_axis)
+        return jnp.concatenate([wa, wb], axis=-2)
 
     return matvec
 
@@ -358,10 +380,13 @@ def build_chunk_fn(slices: jax.Array, cfg, inner_axis=None):
     if cfg.use_kernels:
         from repro.kernels import ops as kops
 
+        block_r = cfg.block_r if cfg.block_r else 256
         return kops.build_chunk_fn(slices, k, precision=cfg.precision,
-                                   inner_axis=inner_axis), k
+                                   inner_axis=inner_axis,
+                                   block_r=block_r), k
     return make_chunk_probe(
-        matvec_matrix_free(slices, cfg.precision, inner_axis), k), k
+        matvec_matrix_free(slices, cfg.precision, inner_axis,
+                           overlap=cfg.inner_overlap), k), k
 
 
 @partial(jax.jit, static_argnames=("n_iters", "tol", "check_every",

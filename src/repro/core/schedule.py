@@ -116,7 +116,9 @@ def _chunk_rowsum(v_local: jax.Array, chunk: jax.Array,
     if cfg.use_kernels:
         from repro.kernels import ops as kops
 
-        return kops.abs_rowsum(v_local, chunk, acc)
+        return kops.abs_rowsum(v_local, chunk, acc,
+                               block_i=cfg.block_i or 128,
+                               block_j=cfg.block_j or 128)
     prod = jnp.abs(jnp.einsum("...ic,...jc->...ij", v_local, chunk,
                               preferred_element_type=jnp.float32))
     d = jnp.sum(prod, axis=-1)

@@ -58,6 +58,20 @@ class MSCConfig:
         (≤ m always suffices: each iteration removes one element).
       use_kernels: route hot spots through the Pallas kernels in
         repro.kernels (interpret mode on CPU) instead of plain jnp.
+      block_r / block_i / block_j: Pallas kernel block shapes — block_r
+        tiles the power-iter kernel's row dim, block_i/block_j tile the
+        ring `abs_rowsum` kernel's output grid.  None (default) means
+        the kernels' hand-set defaults (256/128/128); the autotuner
+        (core/autotune.py) fills these per (bucket, mesh, dtype) at
+        engine warmup.  Numerics-neutral: every block shape produces
+        bit-identical results (masked/padded tiles), so these are
+        observational knobs for the result cache — but they DO key the
+        compiled-executable caches (a retune recompiles).
+      inner_overlap: double-buffer the inner-axis psum (DESIGN.md
+        §7.11): split the slice batch in half so half B's local T·v
+        overlaps half A's cross-device reduction.  Bit-preserving
+        (psum is elementwise per slice); applies only on meshes with an
+        inner axis of size > 1 and falls back silently otherwise.
     """
 
     epsilon: float = 1e-6
@@ -69,6 +83,10 @@ class MSCConfig:
     epilogue: str = "allgather"
     max_extraction_iters: int = 0  # 0 → use m (set at call time)
     use_kernels: bool = False
+    block_r: Optional[int] = None
+    block_i: Optional[int] = None
+    block_j: Optional[int] = None
+    inner_overlap: bool = False
 
     def with_(self, **kw) -> "MSCConfig":
         return dataclasses.replace(self, **kw)

@@ -45,15 +45,20 @@ def batched_gram(slices: jax.Array, *, interpret: bool | None = None,
 
 
 def abs_rowsum(a: jax.Array, b: jax.Array, acc=None, *,
+               block_i: int = 128, block_j: int = 128,
                interpret: bool | None = None) -> jax.Array:
     """Fused accumulation acc + Σ|a bᵀ| row-sums (see ring.py).
 
     The single epilogue kernel: the ring epilogue calls it once per
     circulating chunk with the running accumulator, the allgather
     epilogue once with the full gathered V and acc=None (the schedule
-    that the retired similarity.py kernel hard-coded)."""
+    that the retired similarity.py kernel hard-coded).  block_i/block_j
+    tile the output grid (clamped to the operand extents inside the
+    kernel); every block shape is bit-identical — the autotuner only
+    changes which one compiles fastest."""
     interpret = _interpret_default() if interpret is None else interpret
-    return _ring.abs_rowsum(a, b, acc, interpret=interpret)
+    return _ring.abs_rowsum(a, b, acc, block_i=block_i, block_j=block_j,
+                            interpret=interpret)
 
 
 def build_chunk_fn(slices: jax.Array, k: int, *, precision: str = "fp32",

@@ -22,6 +22,9 @@ Examples:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \\
       python -m repro.launch.msc_serve --mesh-shape 4,2 \\
       --continuous --arrival-rate 2 --slow-every 6
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \\
+      python -m repro.launch.msc_serve --continuous --autotune \\
+      --epilogue auto --chunks-per-step auto   # §7.11 auto-config
 """
 from __future__ import annotations
 
@@ -93,7 +96,9 @@ def main(argv=None) -> int:
                     help="flat-mesh factorization, e.g. '4,2' (DESIGN.md "
                          "§7.5)")
     ap.add_argument("--epilogue", default="allgather",
-                    choices=("allgather", "ring"))
+                    choices=("allgather", "ring", "auto"),
+                    help="'auto' resolves per bucket from the roofline "
+                         "comm model (DESIGN.md §7.11)")
     ap.add_argument("--precision", default="fp32",
                     choices=("fp32", "bf16_fp32"))
     ap.add_argument("--power-tol", type=float, default=1e-2)
@@ -104,7 +109,18 @@ def main(argv=None) -> int:
                          "continuous-batching engine (DESIGN.md §7.7)")
     ap.add_argument("--slots", type=int, default=None,
                     help="continuous slot-table size (default: max-batch)")
-    ap.add_argument("--chunks-per-step", type=int, default=1)
+    ap.add_argument("--chunks-per-step", default="1",
+                    help="gate chunks fused per dispatch, or 'auto' "
+                         "(roofline pick from the measured sweep "
+                         "histogram, DESIGN.md §7.11)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="continuous mode: search kernel block shapes "
+                         "and validate roofline config proposals per "
+                         "bucket at warmup; winners persist under "
+                         "<--checkpoint-dir>/autotune")
+    ap.add_argument("--no-donate", action="store_true",
+                    help="disable slot-table buffer donation on the "
+                         "hot executables")
     ap.add_argument("--arrival-rate", type=float, default=2.0,
                     help="mean Poisson arrivals per scheduler tick "
                          "(continuous mode)")
@@ -216,13 +232,17 @@ def main(argv=None) -> int:
                   f"{dict(ceng.mesh.shape)}; drained {len(drained)} "
                   f"in-flight request(s)")
         else:
+            chunks = (args.chunks_per_step if args.chunks_per_step == "auto"
+                      else int(args.chunks_per_step))
             ceng = MSCContinuousEngine(
                 mesh, cfg, slots=args.slots or args.max_batch,
                 bucket_quantum=args.bucket_quantum,
-                chunks_per_step=args.chunks_per_step,
+                chunks_per_step=chunks,
                 checkpoint_dir=args.checkpoint_dir,
                 ckpt_every_chunks=args.ckpt_every,
-                result_cache=rcache, warm_start=args.warm_start)
+                result_cache=rcache, warm_start=args.warm_start,
+                autotune=args.autotune,
+                donate_buffers=not args.no_donate)
         probes = {}  # warm every bucket's executables off the clock
         for t in tensors:
             probes.setdefault(ceng.bucket_of(t.shape), t)
@@ -249,6 +269,9 @@ def main(argv=None) -> int:
               f"{fs.cache_hits} cache hits / {fs.cache_misses} misses, "
               f"{fs.warm_starts} warm starts "
               f"({fs.warm_sweeps_saved} sweeps saved)")
+        if args.autotune:
+            print(f"  autotune: {fs.autotune_searches} searches, "
+                  f"{fs.autotune_cache_hits} cache hits")
         if rcache is not None and args.cache_dir:
             rcache.persist()
             print(f"  result cache persisted: {len(rcache)} entries, "

@@ -1,6 +1,7 @@
 from .hw import V5E, CHIPS_PER_POD, HwSpec
 from .hlo import HloAnalysis, analyze, shape_bytes
-from .analyze import (RooflineReport, active_param_count,
+from .analyze import (RELAYOUTS, RooflineReport, active_param_count,
+                      choose_chunk_steps, choose_epilogue, choose_relayout,
                       continuous_serving_model, eigensolve_model,
-                      epilogue_model, model_flops, report_from_compiled,
-                      save_report, serving_model)
+                      epilogue_model, model_flops, relayout_model,
+                      report_from_compiled, save_report, serving_model)

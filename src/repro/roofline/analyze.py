@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 from typing import Dict, Optional
 
 from .hlo import HloAnalysis, analyze
@@ -168,7 +169,7 @@ def epilogue_model(m: int, c: int, p: int, *, epilogue: str = "allgather",
 
 def eigensolve_model(m: int, r: int, c: int, p: int, q: int = 1, *,
                      sweeps: int = 12, dtype_bytes: float = 4.0,
-                     hw: HwSpec = V5E) -> Dict:
+                     overlap: bool = False, hw: HwSpec = V5E) -> Dict:
     """Analytic memory/comm/compute model of the 2-D sharded eigensolve.
 
     Models the matrix-free power iteration on a ("slice"=p, "inner"=q)
@@ -188,6 +189,14 @@ def eigensolve_model(m: int, r: int, c: int, p: int, q: int = 1, *,
         complete before normalization), so the no-overlap latency is
         sweeps · (step_compute + step_comm).
 
+    overlap=True models the double-buffered inner psum (DESIGN.md
+    §7.11, `matvec_matrix_free(overlap=True)`): the slice batch splits
+    in half, so half B's local contractions hide half A's reduction —
+    per sweep, latency drops from (compute + comm) to
+    compute/2 + max(compute/2, comm/2) + comm/2 (the second half's
+    psum stays exposed: normalization needs the complete w).  No-op at
+    q = 1, exactly like the implementation.
+
     Dims are padded to even shards exactly like ModeSchedule pads them.
     """
     m_pad = ((m + p - 1) // p) * p
@@ -199,17 +208,166 @@ def eigensolve_model(m: int, r: int, c: int, p: int, q: int = 1, *,
     step_flops = 4.0 * b_loc * r_loc * c
     step_compute = step_flops / hw.peak_flops_bf16
     step_comm = step_link / hw.ici_bw
+    if overlap and q > 1:
+        step_latency = (step_compute / 2.0
+                        + max(step_compute / 2.0, step_comm / 2.0)
+                        + step_comm / 2.0)
+    else:
+        step_latency = step_compute + step_comm
     return {
         "m": m, "r": r, "c": c, "p": p, "q": q, "sweeps": sweeps,
-        "dtype_bytes": dtype_bytes,
+        "dtype_bytes": dtype_bytes, "overlap": bool(overlap and q > 1),
         "block_bytes_per_device": block_bytes,
         "w_partial_bytes": w_bytes,
         "psum_link_bytes": sweeps * step_link,
         "flops": sweeps * step_flops,
         "comm_s": sweeps * step_comm,
         "compute_s": sweeps * step_compute,
-        "latency_s": sweeps * (step_compute + step_comm),
+        "latency_s": sweeps * step_latency,
     }
+
+
+RELAYOUTS = ("gspmd", "collective", "collective_stream")
+
+
+def relayout_model(shape, p: int, q: int = 1, *, B: int = 1,
+                   sweeps: int = 12, dtype_bytes: float = 4.0,
+                   launch_s: float = 1e-6, hw: HwSpec = V5E) -> Dict:
+    """Analytic model of the flat schedule's inter-mode relayout
+    (DESIGN.md §7.11) — the decision surface of `choose_relayout`.
+
+    The collective relayout moves the whole local block twice over the
+    slice axis (modes 2 and 3; plus once over the inner axis at q > 1),
+    each all_to_all sending L·(p−1)/p bytes per device where L is the
+    padded local block (`_build_flat_collective` pads each dim to its
+    split multiple).  Three schedules:
+
+      gspmd — the partitioner's reshard: same link bytes, no explicit
+        collective launches (the reshard fuses), but the measured
+        replicate-then-slice fallback materializes the block once
+        (§Perf msc it 2): + 2·L/hbm_bw per relayout.
+      collective — explicit tiled all_to_all per relayout: exact link
+        bytes, one launch each, but the a2a is a single blocking
+        collective: every downstream mode waits for the full payload.
+        Total = comm + all three modes' eigensolve compute, serial.
+      collective_stream — the a2a decomposed into p−1 ppermute chunk
+        steps (`_stream_all_to_all`, the PR 2 ring-epilogue pattern):
+        mode j+1's chunks stream while mode j's eigensolve runs, so
+        per relayout only max(0, comm − prev_mode_compute) plus one
+        chunk's fill is exposed.  p−1 launches per relayout.
+
+    Per-sweep compute takes the HBM floor max(flops/peak, L/hbm_bw) —
+    at serving sizes the block re-read dominates the matvec flops.
+    `sweeps` feeds from measured sweep histograms (the engine passes
+    the observed per-bucket median, not a guess).  Returns latencies
+    for all three plus `overlap_speedup` = blocking/streamed — the
+    BENCH_msc_autotune acceptance quantity.
+    """
+    m1, m2, m3 = (int(s) for s in shape)
+    g = math.gcd(p, q)
+    m1p = -(-m1 // (p * q)) * (p * q)
+    m2p = -(-m2 // (p * q // g)) * (p * q // g)
+    m3p = -(-m3 // p) * p
+    L = float(B) * m1p * m2p * m3p * dtype_bytes / (p * q)
+    a2a_bytes = L * (p - 1) / p          # per slice-axis all_to_all
+    inner_bytes = L * (q - 1) / q if q > 1 else 0.0
+    comm_a2a_s = a2a_bytes / hw.ici_bw
+    comm_inner_s = inner_bytes / hw.ici_bw
+    link_bytes = 2 * a2a_bytes + inner_bytes
+
+    # per-mode eigensolve compute with the HBM floor (B·m/p·r/q·c block
+    # re-read per sweep)
+    mode_dims = ((m1p, m2p, m3p), (m2p, m1p, m3p), (m3p, m1p, m2p))
+    mode_compute = []
+    for m, r, c in mode_dims:
+        flops = 4.0 * B * (m // p) * (-(-r // q)) * c
+        sweep_s = max(flops / hw.peak_flops_bf16, L / hw.hbm_bw)
+        mode_compute.append(sweeps * sweep_s)
+    compute_s = sum(mode_compute)
+
+    # gspmd: fused reshard, no explicit launches, + materialization
+    n_relayouts = 2 + (1 if q > 1 else 0)
+    remat_s = 2.0 * L / hw.hbm_bw
+    gspmd_s = (compute_s + 2 * comm_a2a_s + comm_inner_s
+               + n_relayouts * remat_s)
+    # collective: blocking a2a, one launch each, fully serialized
+    blocking_s = (compute_s + 2 * comm_a2a_s + comm_inner_s
+                  + n_relayouts * launch_s)
+    # collective_stream: mode j+1's relayout hides under mode j's solve
+    fill_s = comm_a2a_s / max(p - 1, 1)
+    exposed2 = max(0.0, comm_a2a_s - mode_compute[0])
+    exposed3 = max(0.0, comm_a2a_s - mode_compute[1])
+    stream_launch = (p - 1) * 2 * launch_s + \
+        ((q - 1) * launch_s if q > 1 else 0.0)
+    streamed_s = (compute_s + comm_inner_s + exposed2 + exposed3
+                  + 2 * fill_s + stream_launch)
+    return {
+        "shape": (m1, m2, m3), "p": p, "q": q, "B": B, "sweeps": sweeps,
+        "dtype_bytes": dtype_bytes, "launch_s": launch_s,
+        "local_block_bytes": L, "link_bytes": link_bytes,
+        "a2a_bytes": a2a_bytes, "comm_s": 2 * comm_a2a_s + comm_inner_s,
+        "compute_s": compute_s,
+        "gspmd_s": gspmd_s, "collective_s": blocking_s,
+        "collective_stream_s": streamed_s,
+        "overlap_speedup": (blocking_s / streamed_s
+                            if streamed_s > 0 else 0.0),
+    }
+
+
+def choose_relayout(shape, p: int, q: int = 1, *, B: int = 1,
+                    sweeps: int = 12, dtype_bytes: float = 4.0,
+                    launch_s: float = 1e-6, hw: HwSpec = V5E) -> str:
+    """Pick the flat schedule's relayout from `relayout_model`:
+    the latency argmin over ("gspmd", "collective", "collective_stream"),
+    first-listed wins ties (stability: a degenerate p=1 mesh, where all
+    three collapse to zero comm, keeps the partitioner default)."""
+    if p <= 1:
+        return "gspmd"
+    m = relayout_model(shape, p, q, B=B, sweeps=sweeps,
+                       dtype_bytes=dtype_bytes, launch_s=launch_s, hw=hw)
+    lat = {"gspmd": m["gspmd_s"], "collective": m["collective_s"],
+           "collective_stream": m["collective_stream_s"]}
+    return min(RELAYOUTS, key=lambda k: (lat[k],))
+
+
+def choose_epilogue(m: int, c: int, p: int, *, dtype_bytes: float = 4.0,
+                    hw: HwSpec = V5E) -> str:
+    """Pick the similarity epilogue from `epilogue_model`: ring when its
+    overlapped latency beats the blocking all_gather, allgather on ties
+    (one collective, simpler schedule) and always at p = 1."""
+    if p <= 1:
+        return "allgather"
+    ag = epilogue_model(m, c, p, epilogue="allgather",
+                        dtype_bytes=dtype_bytes, hw=hw)["latency_s"]
+    ring = epilogue_model(m, c, p, epilogue="ring",
+                          dtype_bytes=dtype_bytes, hw=hw)["latency_s"]
+    return "ring" if ring < ag else "allgather"
+
+
+def choose_chunk_steps(iter_hist, B: int, *, check_every: int = 6,
+                       candidates=(1, 2, 4), shape=None, p: int = 1,
+                       q: int = 1, epilogue: str = "allgather",
+                       dispatch_s: float = 0.0,
+                       dtype_bytes: float = 4.0, hw: HwSpec = V5E) -> int:
+    """Pick the continuous engine's chunks_per_step from the measured
+    sweep histogram: run `continuous_serving_model` once per candidate
+    (chunks_per_step=s coarsens the scheduler tick to s·check_every
+    sweeps per dispatch — fewer dispatches, coarser eviction) and take
+    the wall-time argmin; smallest candidate wins ties (finest eviction
+    granularity at equal predicted cost)."""
+    best, best_s = None, None
+    for s in sorted(int(c) for c in candidates):
+        if s < 1:
+            continue
+        r = continuous_serving_model(
+            iter_hist, B, check_every=check_every * s, shape=shape,
+            p=p, q=q, epilogue=epilogue, dispatch_s=dispatch_s,
+            dtype_bytes=dtype_bytes, hw=hw)
+        if best_s is None or r["continuous_s"] < best_s:
+            best, best_s = s, r["continuous_s"]
+    if best is None:
+        raise ValueError(f"no valid chunk-step candidates in {candidates}")
+    return best
 
 
 def continuous_serving_model(iter_hist, B: int, *, check_every: int = 6,

@@ -53,6 +53,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
 import time
 import warnings
 from collections import defaultdict, deque
@@ -132,6 +133,16 @@ class ServeStats:
       warm_sweeps_saved — Σ over warm-started requests of
         max(0, donor sweeps − realized sweeps), per mode: the power
         iteration the warm start skipped.
+
+    Autotuner counters (DESIGN.md §7.11, continuous engine with
+    autotuning enabled):
+
+      autotune_searches — per-bucket block searches that actually
+        measured candidates (autotune-cache misses).  A warm engine —
+        or one that reloaded a persisted autotune cache — performs 0.
+      autotune_cache_hits — bucket resolutions served from the
+        autotune cache (in-memory or reloaded), compiling only the
+        winner.
     """
 
     requests: int = 0
@@ -158,6 +169,8 @@ class ServeStats:
     cache_misses: int = 0
     warm_starts: int = 0
     warm_sweeps_saved: int = 0
+    autotune_searches: int = 0
+    autotune_cache_hits: int = 0
 
     @property
     def occupancy(self) -> float:
@@ -206,8 +219,11 @@ class MSCServeEngine:
         schedule's even-shard contract).
       dtype: request tensor dtype at the engine boundary (the precision
         *policy* stays cfg.precision).
-      relayout: passed to build_msc_batched — "gspmd" (default) or
-        "collective" (explicit batched all_to_all relayout).
+      relayout: passed to build_msc_batched — "gspmd" (default),
+        "collective" / "collective_stream" (explicit batched all_to_all
+        relayout, blocking or ring-streamed), or "auto" (per-bucket
+        pick from roofline.choose_relayout; cfg.epilogue="auto"
+        resolves alongside — DESIGN.md §7.11).
 
     `run(tensors)` is the whole API: a list of third-order tensors in,
     a list of per-request MSCResults (host-side numpy, true sizes) out,
@@ -224,9 +240,17 @@ class MSCServeEngine:
         self.cfg = cfg
         self.max_batch = int(max_batch)
         self.dtype = jnp.dtype(dtype)
-        self._runner = build_msc_batched(mesh, cfg, axis_name=axis_name,
-                                         inner_axis=inner_axis,
-                                         relayout=relayout)
+        self._axis_name = axis_name
+        self._inner_axis = inner_axis
+        self._relayout = relayout
+        # "auto" anywhere: defer building runners — each bucket gets a
+        # concrete (relayout, epilogue) from the roofline choosers at
+        # its first (and only) lower+compile in _executable
+        self._auto = relayout == "auto" or cfg.epilogue == "auto"
+        self._runner = None if self._auto else build_msc_batched(
+            mesh, cfg, axis_name=axis_name, inner_axis=inner_axis,
+            relayout=relayout)
+        self._runners: Dict[Tuple[int, int, int], object] = {}
         self._quantum = _bucket_quantum(mesh, inner_axis, bucket_quantum)
         self._cache: Dict[Tuple, jax.stages.Compiled] = {}
         self._stats = ServeStats()
@@ -244,7 +268,20 @@ class MSCServeEngine:
                tuple(self.mesh.shape.items()), self.cfg)
         compiled = self._cache.get(key)
         if compiled is None:
-            lowered = self._runner.lower(
+            runner = self._runner
+            if self._auto:
+                runner = self._runners.get(bucket)
+                if runner is None:
+                    from repro.core.parallel import _resolve_auto
+                    rcfg, rlay = _resolve_auto(
+                        self.mesh, self.cfg, bucket, self._relayout,
+                        self._axis_name, self._inner_axis,
+                        B=self.max_batch)
+                    runner = build_msc_batched(
+                        self.mesh, rcfg, axis_name=self._axis_name,
+                        inner_axis=self._inner_axis, relayout=rlay)
+                    self._runners[bucket] = runner
+            lowered = runner.lower(
                 jax.ShapeDtypeStruct((self.max_batch,) + bucket, self.dtype),
                 jax.ShapeDtypeStruct((self.max_batch, 3), jnp.int32))
             compiled = lowered.compile()
@@ -461,6 +498,38 @@ class MSCContinuousEngine:
         enabling this performs ZERO new retraces/recompiles; masks stay
         bit-identical to a cold solve (the gate just fires earlier).
 
+    Autotune / auto-config knobs (DESIGN.md §7.11):
+      autotune — enable the roofline-driven auto-config layer: per
+        bucket, kernel block shapes come from a measured search at the
+        AOT compile site (core/autotune.py; a degenerate one-candidate
+        "search" on the einsum path), and `inner_overlap` switches on
+        when `roofline.eigensolve_model` predicts the double-buffered
+        inner psum wins (q > 1 meshes).  Explicit cfg.block_* values
+        are overrides: the search is skipped for knobs the caller
+        pinned.  All of it is numerics-neutral — masks stay
+        bit-identical — and winners ride the per-bucket executable
+        cache, so warm serving still performs 0 searches/recompiles.
+      autotune_cache — a core/autotune.py AutotuneCache holding
+        persisted winners (implies autotune); without one, autotune=True
+        creates an engine-private cache persisted under
+        `<checkpoint_dir>/autotune` when checkpointing is on.
+      cfg.epilogue="auto" — per-bucket epilogue from
+        `roofline.choose_epilogue` instead of a flag.
+      chunks_per_step="auto" — per-bucket gate-chunk fusion from
+        `roofline.choose_chunk_steps`, fed by the measured sweep
+        histogram of previously served requests (cold buckets assume
+        4 gate chunks).
+      donate_buffers — donate the slot-table carries to the chunk-step
+        and refill executables (`donate_argnums`): XLA aliases the
+        carry outputs onto the inputs, halving the solver-state HBM
+        high-water mark per dispatch.  Safe because the engine always
+        replaces `tb.carries` with the dispatch output and never
+        re-reads the input.  Forced off when a fault_injector is
+        attached — an injected post-dispatch failure consumes the
+        donated carry, and the retry contract re-dispatches the same
+        buffers (real failures still recover: the sequential-oracle
+        fallback rebuilds state from the stashed host tensors).
+
     `run(tensors)` serves a closed batch; `submit()` + `step()` expose
     the decode loop for streaming arrivals (launch/msc_serve.py).
     """
@@ -468,14 +537,15 @@ class MSCContinuousEngine:
     def __init__(self, mesh: Mesh, cfg: MSCConfig, *, slots: int = 8,
                  bucket_quantum: int = 8, dtype=jnp.float32,
                  axis_name=None, inner_axis: Optional[str] = None,
-                 chunks_per_step: int = 1, refill_min_free: int = 1,
+                 chunks_per_step=1, refill_min_free: int = 1,
                  max_queue_chunks: int = 8, placement: str = "compact",
                  checkpoint_dir: Optional[str] = None,
                  ckpt_every_chunks: int = 8, keep_checkpoints: int = 3,
                  max_retries: int = 3, retry_backoff_s: float = 0.05,
                  retry_backoff_max_s: float = 2.0, fault_injector=None,
                  replicate_outputs: bool = False, result_cache=None,
-                 warm_start: bool = False):
+                 warm_start: bool = False, autotune: bool = False,
+                 autotune_cache=None, donate_buffers: bool = True):
         if slots < 1:
             raise ValueError(f"slots must be >= 1, got {slots}")
         if placement not in ("compact", "stable"):
@@ -496,14 +566,25 @@ class MSCContinuousEngine:
                                    self.slots)
         self.max_queue_chunks = int(max_queue_chunks)
         self.placement = placement
+        # the default plan needs a concrete config — "auto" knobs
+        # resolve per bucket in _plan_for; the base stands in wherever
+        # no bucket is in scope (fallback oracle, checkpoint plumbing)
+        self._base_cfg = (cfg.with_(epilogue="allgather")
+                          if cfg.epilogue == "auto" else cfg)
+        self._chunks_param = chunks_per_step
+        base_chunks = (1 if chunks_per_step == "auto"
+                       else int(chunks_per_step))
+        self._axis_name = axis_name
+        self._inner_axis = inner_axis
         # replicate_outputs=True on multi-process (jax.distributed)
         # meshes: host-read outputs must be fully addressable everywhere
         # (see MSCChunkPlan); the per-process executables stay identical
         # across hosts, which is what keeps the lockstep control plane
         # (launch/distributed.py) deterministic.
-        self._plan = MSCChunkPlan(mesh, cfg, axis_name=axis_name,
+        self._plan = MSCChunkPlan(mesh, self._base_cfg,
+                                  axis_name=axis_name,
                                   inner_axis=inner_axis,
-                                  chunks_per_step=chunks_per_step,
+                                  chunks_per_step=base_chunks,
                                   replicate_outputs=replicate_outputs)
         self._quantum = _bucket_quantum(mesh, inner_axis, bucket_quantum)
         self._quantum_base = int(bucket_quantum)  # mesh-independent (ckpt)
@@ -531,6 +612,23 @@ class MSCContinuousEngine:
         self._req_key: Dict[int, str] = {}           # rid → cache key
         self._req_sketch: Dict[int, np.ndarray] = {}
         self._warm_pending: Dict[int, object] = {}   # rid → NearHit
+        # ---- autotune / auto-config (DESIGN.md §7.11) ----
+        self.autotune_cache = autotune_cache
+        if autotune and autotune_cache is None:
+            from repro.core.autotune import AutotuneCache
+            self.autotune_cache = AutotuneCache(
+                persist_dir=os.path.join(checkpoint_dir, "autotune")
+                if checkpoint_dir else None)
+        self._autotune = self.autotune_cache is not None
+        self.donate_buffers = (bool(donate_buffers)
+                               and fault_injector is None)
+        self._bucket_plans: Dict[Tuple[int, int, int], MSCChunkPlan] = {}
+        # winner (plan, step-executable) a live search just compiled,
+        # consumed by _executables so the winning config compiles once
+        self._tuned_step: Dict[Tuple[int, int, int], Tuple] = {}
+        # realized max-mode sweep counts of served requests — the
+        # measured histogram feeding choose_chunk_steps
+        self._sweep_hist: Deque[int] = deque(maxlen=256)
 
     # ---- bucketing / cache -------------------------------------------
     def bucket_of(self, shape: Sequence[int]) -> Tuple[int, int, int]:
@@ -552,52 +650,215 @@ class MSCContinuousEngine:
         misses, host losses, reinits, shard files written)."""
         self._bump(**deltas)
 
-    def _executables(self, bucket):
-        """(chunk-step, refill) AOT executables for one bucket — the
-        only two programs a bucket ever runs (zero-retrace contract)."""
-        key = (bucket, self.slots, str(self.dtype),
-               tuple(self.mesh.shape.items()), self.cfg,
-               self._plan.chunks_per_step)
-        entry = self._cache.get(key)
-        if entry is not None:
-            self._bump(exec_cache_hits=1)
-            return entry
+    # ---- per-bucket auto-config + block autotune (DESIGN.md §7.11) ----
+    def _resolve_bucket(self, bucket) -> Tuple[MSCConfig, int]:
+        """Resolved (cfg, chunks_per_step) for one bucket: the roofline
+        choosers fill every knob the caller left on "auto"; explicit
+        flags pass through untouched (flags are overrides)."""
+        cfg = self._base_cfg
+        p = self._plan.sched.slice_shards
+        q = self._plan.sched.inner_shards
+        check = max(cfg.power_check_every, 1)
+        if self.cfg.epilogue == "auto":
+            from repro.roofline import choose_epilogue
+            # mode 1 dominates epilogue bytes on near-cube buckets; the
+            # schedules take one policy (same framing as parallel.py)
+            cfg = cfg.with_(epilogue=choose_epilogue(bucket[0], bucket[2],
+                                                     p))
+        if self._autotune and q > 1 and not cfg.inner_overlap:
+            from repro.roofline import eigensolve_model
+            m, r, c = bucket
+            plain = eigensolve_model(m, r, c, p, q, sweeps=check)
+            both = eigensolve_model(m, r, c, p, q, sweeps=check,
+                                    overlap=True)
+            if both["latency_s"] < plain["latency_s"]:
+                cfg = cfg.with_(inner_overlap=True)
+        chunks = self._plan.chunks_per_step
+        if self._chunks_param == "auto":
+            from repro.roofline import choose_chunk_steps
+            hist = list(self._sweep_hist) or [4 * check]
+            chunks = choose_chunk_steps(hist, self.slots,
+                                        check_every=check, shape=bucket,
+                                        p=p, q=q, epilogue=cfg.epilogue)
+        return cfg, chunks
+
+    def _make_plan(self, cfg: MSCConfig, chunks: int) -> MSCChunkPlan:
+        if cfg == self._base_cfg and chunks == self._plan.chunks_per_step:
+            return self._plan
+        return MSCChunkPlan(self.mesh, cfg, axis_name=self._axis_name,
+                            inner_axis=self._inner_axis,
+                            chunks_per_step=chunks,
+                            replicate_outputs=self._plan.replicate_outputs)
+
+    def _tune_blocks(self, bucket, cfg: MSCConfig,
+                     chunks: int) -> MSCConfig:
+        """Resolve kernel block shapes — and validate the roofline
+        models' config proposals — for one bucket through the autotune
+        cache.  A live search compiles and times each candidate's
+        chunk-step AND refill executables on scratch state, exactly at
+        the AOT site (the similarity epilogue runs in the refill, so
+        block_i/block_j and the epilogue pick are only observable
+        there), and stashes the winner's executables so they never
+        compile twice.  When `_resolve_bucket` proposed a non-default
+        epilogue/inner_overlap, both variants enter the measured
+        candidate set with the hand-set default first: the model
+        proposes, the measurement disposes, and the default wins
+        near-ties — auto-config does no harm on hardware the comm model
+        doesn't describe.  Knobs the caller pinned in cfg are not
+        searched."""
+        from repro.core import autotune as at
+
+        base = self._base_cfg
+        variants = [cfg]
+        if (cfg.epilogue != base.epilogue
+                or cfg.inner_overlap != base.inner_overlap):
+            variants = [cfg.with_(epilogue=base.epilogue,
+                                  inner_overlap=base.inner_overlap), cfg]
+        pinned = (cfg.block_r is not None and cfg.block_i is not None
+                  and cfg.block_j is not None)
+        if pinned and len(variants) == 1:
+            return cfg   # fully pinned, no proposal to validate
+        ac = self.autotune_cache
+        key = at.autotune_key(bucket + (self.slots,),
+                              tuple(self.mesh.shape.items()),
+                              str(self.dtype), cfg, salt=ac.salt)
+        bcands = [c for c in at.block_candidates(bucket, cfg.use_kernels)
+                  if all(getattr(cfg, k) in (None, v)
+                         for k, v in c.items())] \
+            or [{k: getattr(cfg, k) if getattr(cfg, k) is not None else v
+                 for k, v in at.DEFAULT_BLOCKS.items()}]
+        cands = [dict(b, epilogue=v.epilogue,
+                      inner_overlap=v.inner_overlap)
+                 for v in variants for b in bcands]
+        searches0 = ac.searches
         B = self.slots
-        blocks_s, carries_s = self._plan.state_structs(bucket, B, self.dtype)
-        i32 = jnp.int32
-        dims_s = jax.ShapeDtypeStruct((B, 3), i32)
-        step = jax.jit(self._plan.build_step()).lower(
+        fill = np.tile(np.int32(_FILLER_DIMS), (B, 1))
+        no = np.zeros(B, bool)
+
+        def measure(cand):
+            ccfg = cfg.with_(**cand)
+            plan = self._make_plan(ccfg, chunks)
+            step = self._compile_step(plan, bucket)
+            refill = self._compile_refill(plan, bucket)
+            secs = []
+            # rep 0 is a warmup: a fresh executable's first dispatch
+            # pays one-time host costs that would swamp the comparison
+            for rep in range(4):
+                blocks, carries = plan.init_state(bucket, B, self.dtype)
+                stage = plan.zero_stage(bucket, B, self.dtype)
+                warm = plan.zero_warm(bucket, B)
+                t0 = time.perf_counter()
+                carries, _ = step(blocks, carries)
+                blocks, carries, _ = refill(
+                    blocks, carries, fill, stage, fill, no,
+                    np.ones(B, bool), np.arange(B, dtype=np.int32),
+                    warm, no)
+                jax.block_until_ready(carries)
+                if rep:
+                    secs.append(time.perf_counter() - t0)
+            secs.sort()
+            return secs[len(secs) // 2], (plan, step, refill)
+
+        margin = (at.VALIDATE_MARGIN if len(variants) > 1
+                  else at.DEFAULT_MARGIN)
+        knobs, payload = ac.resolve(key, cands, measure, margin=margin)
+        if ac.searches > searches0:
+            self._bump(autotune_searches=1, compiles=2 * len(cands))
+            ac.persist()
+        else:
+            self._bump(autotune_cache_hits=1)
+        tuned = cfg.with_(**knobs)
+        if payload is not None:
+            self._tuned_step[bucket] = payload
+        return tuned
+
+    def _plan_for(self, bucket) -> MSCChunkPlan:
+        """The bucket's resolved chunk plan (cached): base plan when
+        nothing resolves differently, else one built from the bucket's
+        auto-configured config."""
+        plan = self._bucket_plans.get(bucket)
+        if plan is None:
+            cfg, chunks = self._resolve_bucket(bucket)
+            if self._autotune:
+                cfg = self._tune_blocks(bucket, cfg, chunks)
+                stash = self._tuned_step.get(bucket)
+                if stash is not None:
+                    plan = stash[0]
+            if plan is None:
+                plan = self._make_plan(cfg, chunks)
+            self._bucket_plans[bucket] = plan
+        return plan
+
+    def _compile_step(self, plan: MSCChunkPlan, bucket):
+        blocks_s, carries_s = plan.state_structs(bucket, self.slots,
+                                                 self.dtype)
+        donate = (1,) if self.donate_buffers else ()
+        return jax.jit(plan.build_step(),
+                       donate_argnums=donate).lower(
             blocks_s, carries_s).compile()
-        bsh = self._plan._block_sharding()
+
+    def _compile_refill(self, plan: MSCChunkPlan, bucket):
+        B = self.slots
+        i32 = jnp.int32
+        blocks_s, carries_s = plan.state_structs(bucket, B, self.dtype)
+        dims_s = jax.ShapeDtypeStruct((B, 3), i32)
+        bsh = plan._block_sharding()
         stage_s = tuple(jax.ShapeDtypeStruct(sh, self.dtype, sharding=bsh)
-                        for sh in self._plan.mode_shapes(bucket, B))
+                        for sh in plan.mode_shapes(bucket, B))
         # warm-start inputs are part of the ONE lowered refill signature
         # (cold refills pass device-resident zeros + all-False), so the
         # zero-recompile contract covers warm admissions too
-        vsh = self._plan._carry_shardings().v
+        vsh = plan._carry_shardings().v
         warm_s = tuple(jax.ShapeDtypeStruct(sh, jnp.float32, sharding=vsh)
-                       for sh in self._plan.warm_shapes(bucket, B))
-        refill = jax.jit(self._plan.build_refill()).lower(
+                       for sh in plan.warm_shapes(bucket, B))
+        donate = (1,) if self.donate_buffers else ()
+        return jax.jit(plan.build_refill(),
+                       donate_argnums=donate).lower(
             blocks_s, carries_s, dims_s, stage_s, dims_s,
             jax.ShapeDtypeStruct((B,), jnp.bool_),
             jax.ShapeDtypeStruct((B,), jnp.bool_),
             jax.ShapeDtypeStruct((B,), i32), warm_s,
             jax.ShapeDtypeStruct((B,), jnp.bool_)).compile()
+
+    def _executables(self, bucket):
+        """(chunk-step, refill) AOT executables for one bucket — the
+        only two programs a bucket ever runs (zero-retrace contract).
+        With autotuning on, the bucket's plan carries the resolved
+        blocks/epilogue/overlap/fusion; a just-searched bucket reuses
+        the winner's already-compiled chunk step."""
+        plan = self._plan_for(bucket)
+        key = (bucket, self.slots, str(self.dtype),
+               tuple(self.mesh.shape.items()), plan.sched.cfg,
+               plan.chunks_per_step, self.donate_buffers)
+        entry = self._cache.get(key)
+        if entry is not None:
+            self._bump(exec_cache_hits=1)
+            return entry
+        stash = self._tuned_step.pop(bucket, None)
+        if stash is not None and stash[0] is plan:
+            # the search compiled (and counted) the winner's pair
+            step, refill = stash[1], stash[2]
+            new_compiles = 0
+        else:
+            step = self._compile_step(plan, bucket)
+            refill = self._compile_refill(plan, bucket)
+            new_compiles = 2
         entry = (step, refill)
         self._cache[key] = entry
-        self._bump(compiles=2)
+        self._bump(compiles=new_compiles)
         return entry
 
     def _table(self, bucket) -> _SlotTable:
         tb = self._tables.get(bucket)
         if tb is None:
-            blocks, carries = self._plan.init_state(bucket, self.slots,
-                                                    self.dtype)
+            plan = self._plan_for(bucket)
+            blocks, carries = plan.init_state(bucket, self.slots,
+                                              self.dtype)
             tb = _SlotTable(bucket, blocks, carries, self.slots, self.dtype,
-                            self._plan.mode_shapes(bucket, self.slots))
-            tb.zero_stage = self._plan.zero_stage(bucket, self.slots,
-                                                  self.dtype)
-            tb.zero_warm = self._plan.zero_warm(bucket, self.slots)
+                            plan.mode_shapes(bucket, self.slots))
+            tb.zero_stage = plan.zero_stage(bucket, self.slots,
+                                            self.dtype)
+            tb.zero_warm = plan.zero_warm(bucket, self.slots)
             self._tables[bucket] = tb
         return tb
 
@@ -774,6 +1035,10 @@ class MSCContinuousEngine:
                 res = _trim_request(
                     host, s, tuple(int(x) for x in old_dims[s]))
                 out[rid] = res
+                pir = [res.modes[j].power_iters_run for j in range(3)]
+                if all(x is not None for x in pir):
+                    # measured sweep histogram feeding choose_chunk_steps
+                    self._sweep_hist.append(max(int(x) for x in pir))
                 wm = old_warm_meta[s]
                 if wm is not None:
                     self._bump(warm_sweeps_saved=sum(
@@ -886,7 +1151,9 @@ class MSCContinuousEngine:
             jobs.append((rid, arr))
         out: Dict[int, MSCResult] = {}
         for rid, arr in jobs:
-            res = msc_sequential(jnp.asarray(arr), self.cfg)
+            # _base_cfg: the oracle needs a concrete epilogue, and the
+            # knob is collective-only anyway (ignored sequentially)
+            res = msc_sequential(jnp.asarray(arr), self._base_cfg)
             host = jax.tree.map(np.asarray, res)
             out[rid] = host
             # the oracle path still feeds tier 1 (exact repeats of a
@@ -976,7 +1243,9 @@ class MSCContinuousEngine:
             "cfg": dataclasses.asdict(self.cfg),
             "policy": {
                 "bucket_quantum": self._quantum_base,
-                "chunks_per_step": self._plan.chunks_per_step,
+                "chunks_per_step": self._chunks_param,
+                "autotune": self._autotune,
+                "donate_buffers": self.donate_buffers,
                 "refill_min_free": self.refill_min_free,
                 "max_queue_chunks": self.max_queue_chunks,
                 "placement": self.placement,

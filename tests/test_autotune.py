@@ -1,0 +1,396 @@
+"""Roofline-driven autotuner + auto-config (DESIGN.md §7.11).
+
+Coverage layers:
+  * the chooser/model contract: `choose_epilogue` / `choose_relayout`
+    equal the argmin of their models at every scanned point, so the
+    pick flips exactly where the modeled latencies cross (the gspmd ↔
+    collective crossover in tensor size, the collective_stream ↔
+    collective ↔ gspmd crossover in launch cost); `choose_chunk_steps`
+    fuses chunks only once dispatch overhead enters the model.
+  * `AutotuneCache` units: content-addressed keys (salt-, mesh-,
+    numerics-sensitive; block-knob-insensitive), candidate clamping /
+    dedup, default-wins-near-ties search, hit/search counters,
+    persistence round-trip, stale-salt hygiene, and `gc_checkpoints`
+    reaping the autotune subdirectory.
+  * buffer donation: the chunk-step and refill executables alias the
+    slot-table carry inputs to their outputs (input_output_alias in the
+    compiled HLO) exactly when donation is on; a fault injector forces
+    it off (a consumed donated carry cannot be re-dispatched on retry).
+  * the serving integration, on (8,1) and (4,2) meshes (subprocess
+    shard_map tests): the all-auto engine (epilogue="auto",
+    chunks_per_step="auto", autotune=True) and engines with explicitly
+    non-default block shapes produce masks and realized sweep counts
+    bit-identical to the default engine and the unpadded sequential
+    oracle; a reloaded autotune cache serves the same bucket with zero
+    searches; warm autotuned serving performs zero traces/compiles
+    (jax.monitoring-pinned).
+"""
+import numpy as np
+import pytest
+
+from repro.core import autotune as at
+from repro.roofline import epilogue_model, relayout_model
+from repro.roofline.analyze import (RELAYOUTS, choose_chunk_steps,
+                                    choose_epilogue, choose_relayout)
+
+
+class TestChooserCrossovers:
+    def test_epilogue_matches_model_argmin(self):
+        picks = set()
+        for p in (1, 2, 4, 8):
+            for m in (2, 8, 32, 96, 256):
+                pick = choose_epilogue(m, m, p)
+                picks.add(pick)
+                if p == 1:
+                    assert pick == "allgather"  # no links to ring over
+                    continue
+                ag = epilogue_model(m, m, p, epilogue="allgather")
+                ring = epilogue_model(m, m, p, epilogue="ring")
+                want = ("ring" if ring["latency_s"] < ag["latency_s"]
+                        else "allgather")
+                assert pick == want, (m, p)
+        assert picks == {"ring", "allgather"}
+
+    def test_relayout_size_crossover_exact(self):
+        """gspmd wins tiny tensors (remat < launch), collective wins
+        once the rematerialized block outgrows the launch cost; the
+        pick flips at exactly the scanned point where the modeled
+        latencies cross."""
+        picks = []
+        for m in range(4, 200, 4):
+            mm = relayout_model((m, m, m), 8, sweeps=1, launch_s=1e-6)
+            pick = choose_relayout((m, m, m), 8, sweeps=1, launch_s=1e-6)
+            lat = {"gspmd": mm["gspmd_s"], "collective": mm["collective_s"],
+                   "collective_stream": mm["collective_stream_s"]}
+            assert pick == min(RELAYOUTS, key=lambda k: lat[k]), m
+            picks.append((m, pick, lat))
+        kinds = [p for _, p, _ in picks]
+        assert kinds[0] == "gspmd" and kinds[-1] == "collective"
+        flips = [i for i in range(1, len(kinds)) if kinds[i] != kinds[i - 1]]
+        assert len(flips) == 1
+        _, _, before = picks[flips[0] - 1]
+        _, _, after = picks[flips[0]]
+        assert before["gspmd"] <= before["collective"]
+        assert after["collective"] < after["gspmd"]
+
+    def test_relayout_launch_cost_crossover(self):
+        """Streaming pays (p−1)× the launches: as launch_s grows the
+        pick degrades stream → collective → gspmd, each flip exactly at
+        the model crossover."""
+        shape, picks = (96, 96, 96), []
+        for ls in np.geomspace(1e-9, 1e-2, 40):
+            mm = relayout_model(shape, 8, B=8, sweeps=8, launch_s=float(ls))
+            pick = choose_relayout(shape, 8, B=8, sweeps=8,
+                                   launch_s=float(ls))
+            lat = {"gspmd": mm["gspmd_s"], "collective": mm["collective_s"],
+                   "collective_stream": mm["collective_stream_s"]}
+            assert pick == min(RELAYOUTS, key=lambda k: lat[k]), ls
+            picks.append(pick)
+        assert [p for i, p in enumerate(picks)
+                if i == 0 or p != picks[i - 1]] == \
+            ["collective_stream", "collective", "gspmd"]
+
+    def test_relayout_p1_keeps_partitioner_default(self):
+        assert choose_relayout((96, 96, 96), 1) == "gspmd"
+
+    def test_overlap_speedup_above_bar_at_serving_point(self):
+        # the BENCH_msc_autotune p=8 acceptance point
+        rel = relayout_model((96, 96, 96), 8, B=8, sweeps=8)
+        assert rel["overlap_speedup"] >= 1.2
+        assert rel["collective_stream_s"] < rel["collective_s"]
+
+    def test_chunk_steps_fuse_only_under_dispatch_cost(self):
+        hist = [32] * 7 + [240]
+        kw = dict(check_every=8, shape=(48, 48, 48), p=8)
+        # free dispatches: finest eviction granularity wins
+        assert choose_chunk_steps(hist, 8, dispatch_s=0.0, **kw) == 1
+        # expensive dispatches: fusing chunks amortizes them
+        assert choose_chunk_steps(hist, 8, dispatch_s=1.0, **kw) > 1
+        with pytest.raises(ValueError):
+            choose_chunk_steps(hist, 8, candidates=(), **kw)
+
+
+class TestAutotuneKey:
+    MESH = (("slice", 8), ("inner", 1))
+
+    def _key(self, cfg, **kw):
+        kw.setdefault("salt", "s1")
+        return at.autotune_key((24, 24, 24, 8), self.MESH, "float32", cfg,
+                               **kw)
+
+    def test_block_knobs_do_not_fragment_keys(self):
+        from repro.core import MSCConfig
+
+        base = MSCConfig(epsilon=3e-4)
+        assert self._key(base) == self._key(base.with_(block_r=512,
+                                                       block_i=64))
+
+    def test_numerics_mesh_shape_salt_all_distinguish(self):
+        from repro.core import MSCConfig
+
+        base = MSCConfig(epsilon=3e-4)
+        k = self._key(base)
+        assert self._key(base.with_(epsilon=1e-3)) != k
+        assert self._key(base.with_(epilogue="ring")) != k
+        assert self._key(base, salt="s2") != k
+        assert at.autotune_key((24, 24, 24, 4), self.MESH, "float32", base,
+                               salt="s1") != k
+        assert at.autotune_key((24, 24, 24, 8), (("slice", 4), ("inner", 2)),
+                               "float32", base, salt="s1") != k
+
+
+class TestBlockCandidates:
+    def test_einsum_path_degenerates_to_default(self):
+        assert at.block_candidates((96, 96, 96), use_kernels=False) == \
+            [dict(at.DEFAULT_BLOCKS)]
+
+    def test_kernel_path_searches_r_and_epilogue_tiles(self):
+        cands = at.block_candidates((512, 512, 512), use_kernels=True)
+        assert cands[0] == dict(at.DEFAULT_BLOCKS)  # default first
+        assert {c["block_r"] for c in cands} == {128, 256, 512}
+        assert {c["block_i"] for c in cands} == {64, 128, 256}
+        assert len(cands) == 5
+
+    def test_tiny_buckets_dedup_by_clamped_blocks(self):
+        # every candidate clamps to (8,8,8): nothing left to search
+        assert len(at.block_candidates((8, 8, 8), use_kernels=True)) == 1
+
+
+class TestSearchBlocks:
+    CANDS = [{"block_r": 256}, {"block_r": 128}, {"block_r": 512}]
+
+    @staticmethod
+    def _measure(times):
+        def measure(c):
+            return times[c["block_r"]], f"exec-{c['block_r']}"
+        return measure
+
+    def test_picks_fastest(self):
+        win, payload, timings = at.search_blocks(
+            self.CANDS, self._measure({256: 3.0, 128: 1.0, 512: 2.0}))
+        assert win["block_r"] == 128 and payload == "exec-128"
+        assert len(timings) == 3
+
+    def test_default_wins_near_ties(self):
+        win, payload, _ = at.search_blocks(
+            self.CANDS, self._measure({256: 1.04, 128: 1.0, 512: 2.0}),
+            margin=0.05)
+        assert win["block_r"] == 256 and payload == "exec-256"
+
+    def test_empty_candidates_rejected(self):
+        with pytest.raises(ValueError):
+            at.search_blocks([], self._measure({}))
+
+
+class TestAutotuneCachePersistence:
+    def _resolve(self, cache, key="k1", times=(2.0, 1.0)):
+        cands = [{"block_r": 256, "block_i": 128, "block_j": 128},
+                 {"block_r": 128, "block_i": 128, "block_j": 128}]
+        t = dict(zip((256, 128), times))
+        return cache.resolve(key, cands,
+                             lambda c: (t[c["block_r"]], "live"))
+
+    def test_search_then_hit_counters(self):
+        ac = at.AutotuneCache()
+        blocks, payload = self._resolve(ac)
+        assert blocks["block_r"] == 128 and payload == "live"
+        assert (ac.searches, ac.hits) == (1, 0)
+        blocks2, payload2 = self._resolve(ac)
+        assert blocks2["block_r"] == 128 and payload2 is None
+        assert (ac.searches, ac.hits) == (1, 1)
+
+    def test_roundtrip_reload_searches_nothing(self, tmp_path):
+        d = str(tmp_path / "autotune")
+        ac = at.AutotuneCache(persist_dir=d, salt="s1")
+        self._resolve(ac)
+        assert ac.persist() is not None
+        ac2 = at.AutotuneCache(persist_dir=d, salt="s1")
+        assert len(ac2) == 1
+        blocks, payload = self._resolve(ac2)
+        assert blocks["block_r"] == 128 and payload is None
+        assert (ac2.searches, ac2.hits) == (0, 1)
+
+    def test_stale_salt_drops_entries(self, tmp_path):
+        d = str(tmp_path / "autotune")
+        ac = at.AutotuneCache(persist_dir=d, salt="s1")
+        self._resolve(ac)
+        ac.persist()
+        stale = at.AutotuneCache(persist_dir=d, salt="s2")
+        assert len(stale) == 0
+        # and a re-search under the new salt overwrites cleanly
+        self._resolve(stale)
+        stale.persist()
+        assert len(at.AutotuneCache(persist_dir=d, salt="s2")) == 1
+        assert len(at.AutotuneCache(persist_dir=d, salt="s1")) == 0
+
+    def test_unreadable_dir_tolerated(self, tmp_path):
+        d = str(tmp_path / "autotune")
+        (tmp_path / "autotune").mkdir()
+        (tmp_path / "autotune" / "garbage.json").write_text("not a ckpt")
+        assert len(at.AutotuneCache(persist_dir=d)) == 0
+
+    def test_gc_reaps_autotune_subdir(self, tmp_path):
+        from repro.checkpoint.store import (gc_checkpoints, restorable_steps,
+                                            save_checkpoint)
+
+        parent = str(tmp_path / "ckpt")
+        sub = str(tmp_path / "ckpt" / "autotune")
+        for step in (1, 2, 3):
+            save_checkpoint(parent, step, [],
+                            extra={"kind": "engine", "step": step})
+            save_checkpoint(sub, step, [],
+                            extra={"kind": at.AUTOTUNE_KIND, "salt": "s",
+                                   "entries": {}})
+        gc_checkpoints(parent, 2)
+        assert restorable_steps(parent, verify_sha=False) == [3, 2]
+        # the orphan-prone autotune subdir is reaped to keep-last-1
+        assert restorable_steps(sub, verify_sha=False) == [3]
+
+
+class TestBufferDonation:
+    def _engine(self, **kw):
+        import jax
+
+        from repro.core import MSCConfig, make_msc_mesh
+        from repro.serving import MSCContinuousEngine
+
+        mesh = make_msc_mesh("flat", devices=jax.devices()[:1], shape=(1, 1))
+        return MSCContinuousEngine(mesh, MSCConfig(epsilon=3e-4,
+                                                   power_tol=1e-2),
+                                   slots=2, **kw)
+
+    def test_hot_executables_alias_carry_buffers(self):
+        eng = self._engine()
+        assert eng.donate_buffers
+        step, refill = eng._executables(eng.bucket_of((9, 8, 7)))
+        assert "input_output_alias" in step.as_text()
+        assert "input_output_alias" in refill.as_text()
+
+    def test_donation_off_leaves_no_alias(self):
+        eng = self._engine(donate_buffers=False)
+        step, refill = eng._executables(eng.bucket_of((9, 8, 7)))
+        assert "input_output_alias" not in step.as_text()
+        assert "input_output_alias" not in refill.as_text()
+
+    def test_fault_injector_forces_donation_off(self):
+        from repro.serving import FaultInjector, FaultPlan
+
+        eng = self._engine(fault_injector=FaultInjector(FaultPlan()))
+        assert not eng.donate_buffers
+
+    def test_donated_serve_matches_oracle(self):
+        import jax
+
+        from repro.core import (MSCConfig, PlantedSpec, make_planted_tensor,
+                                msc_sequential)
+
+        eng = self._engine()
+        tensors = [make_planted_tensor(jax.random.PRNGKey(i),
+                                       PlantedSpec.paper(18, 60.0))
+                   for i in range(4)]
+        cfg = MSCConfig(epsilon=3e-4, power_tol=1e-2)
+        for res, t in zip(eng.run(tensors), tensors):
+            ref = msc_sequential(t, cfg)
+            for j in range(3):
+                assert (res[j].mask == np.asarray(ref[j].mask)).all()
+                assert int(res[j].power_iters_run) == \
+                    int(ref[j].power_iters_run)
+
+
+# Queue (6) > slots (2) forces mid-flight eviction/refill; the engines
+# must agree bit-exactly with each other and the sequential oracle.
+AUTOTUNED_PARITY = r"""
+import tempfile
+import numpy as np, jax
+import jax.monitoring as mon
+from repro.core import (MSCConfig, PlantedSpec, make_planted_tensor,
+                        msc_sequential, make_msc_mesh)
+from repro.core.autotune import AutotuneCache
+from repro.serving import MSCContinuousEngine
+p, q = {p}, {q}
+mesh = make_msc_mesh("flat", devices=jax.devices()[:p * q], shape=(p, q))
+cfg = MSCConfig(epsilon=3e-4, power_tol=1e-2)
+specs = [PlantedSpec.paper(21, 70.0),
+         PlantedSpec.paper(23, 30.0),
+         PlantedSpec(shape=(18, 23, 15), cluster_sizes=(2, 3, 2),
+                     gamma=60.0),
+         PlantedSpec.paper(17, 90.0),
+         PlantedSpec.paper(24, 40.0),
+         PlantedSpec.paper(22, 35.0)]
+tensors = [make_planted_tensor(jax.random.PRNGKey(i), s)
+           for i, s in enumerate(specs)]
+refs = [msc_sequential(t, cfg) for t in tensors]
+
+def check(results, tag):
+    for res, ref in zip(results, refs):
+        for j in range(3):
+            assert (res[j].mask == np.asarray(ref[j].mask)).all(), (tag, j)
+            assert int(res[j].power_iters_run) == \
+                int(ref[j].power_iters_run), (tag, j)
+
+with tempfile.TemporaryDirectory() as d:
+    ac = AutotuneCache(persist_dir=d)
+    tuned = MSCContinuousEngine(mesh, cfg.with_(epilogue="auto"), slots=2,
+                                chunks_per_step="auto", autotune_cache=ac)
+    check(tuned.run(tensors), "autotuned")
+    assert tuned.stats.autotune_searches >= 1, tuned.stats
+    assert ac.searches >= 1 and len(ac) >= 1
+
+    # explicit non-default blocks: inert reshapes, bit-identical masks
+    pinned = MSCContinuousEngine(mesh, cfg.with_(block_r=64, block_i=32,
+                                                 block_j=32), slots=2)
+    check(pinned.run(tensors), "pinned-blocks")
+
+    # persisted-winner reload: same bucket, zero searches, and warm
+    # serving performs zero traces/compiles
+    ac2 = AutotuneCache(persist_dir=d)
+    assert len(ac2) >= 1
+    reloaded = MSCContinuousEngine(mesh, cfg.with_(epilogue="auto"),
+                                   slots=2, chunks_per_step="auto",
+                                   autotune_cache=ac2)
+    check(reloaded.run(tensors), "reloaded-cold")
+    assert ac2.searches == 0 and ac2.hits >= 1, (ac2.searches, ac2.hits)
+    assert reloaded.stats.autotune_searches == 0, reloaded.stats
+    assert reloaded.stats.autotune_cache_hits >= 1, reloaded.stats
+
+    events = []
+    mon.register_event_duration_secs_listener(
+        lambda ev, dur, **kw: events.append(ev)
+        if "compile" in ev or "trace" in ev else None)
+    try:
+        before = reloaded.stats
+        check(reloaded.run(tensors), "reloaded-warm")
+        warm = reloaded.stats.delta(before)
+    finally:
+        mon.clear_event_listeners()
+    assert warm.compiles == 0 and not events, (warm, events)
+    assert warm.autotune_searches == 0, warm
+print("OK")
+"""
+
+
+@pytest.mark.parametrize("p,q", [(8, 1), (4, 2)])
+def test_autotuned_serving_matches_oracle(subproc, p, q):
+    out = subproc(AUTOTUNED_PARITY.format(p=p, q=q), p * q, timeout=900)
+    assert "OK" in out
+
+
+def test_kernel_blocks_bit_identical_across_shapes():
+    """Every searched block shape must leave the Pallas-kernel results
+    bit-identical — the invariant that lets autotuning stay out of the
+    result-cache key space."""
+    import jax
+
+    from repro.core import MSCConfig, PlantedSpec, make_planted_tensor
+    from repro.core import msc_sequential
+
+    t = make_planted_tensor(jax.random.PRNGKey(0), PlantedSpec.paper(20, 50.0))
+    base = MSCConfig(epsilon=3e-4, power_tol=1e-2, use_kernels=True)
+    ref = msc_sequential(t, base)
+    for blocks in ({"block_r": 8, "block_i": 8, "block_j": 8},
+                   {"block_r": 64, "block_i": 16, "block_j": 16}):
+        got = msc_sequential(t, base.with_(**blocks))
+        for j in range(3):
+            assert (np.asarray(got[j].mask) == np.asarray(ref[j].mask)).all()
+            np.testing.assert_array_equal(np.asarray(got[j].d),
+                                          np.asarray(ref[j].d))
