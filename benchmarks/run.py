@@ -22,6 +22,9 @@
                       overlap: autotuned vs default serving config,
                       streamed-relayout speedup, warm-recompile pin
                       (DESIGN.md §7.11)
+  msc_scheduler       (new) SLO-aware scheduler vs FIFO: interactive
+                      p99 queue wait, preempt-to-host, deadline
+                      shedding, cross-bucket rotation (DESIGN.md §7.12)
 
 Usage:
   PYTHONPATH=src python -m benchmarks.run            # CPU-feasible sizes
@@ -54,10 +57,10 @@ from .common import REPO, print_rows, save_rows
 ALL = ("fig4_quality", "fig5_strong_scaling", "fig6_data_scaling",
        "fig8_comm", "kernel_bench", "power_iter_bench", "ring_epilogue",
        "inner_shard", "msc_serving", "msc_continuous", "msc_faults",
-       "msc_multihost", "msc_cache", "msc_autotune")
+       "msc_multihost", "msc_cache", "msc_autotune", "msc_scheduler")
 QUICK = ("power_iter_bench", "kernel_bench", "ring_epilogue", "inner_shard",
          "msc_serving", "msc_continuous", "msc_faults", "msc_multihost",
-         "msc_cache", "msc_autotune")
+         "msc_cache", "msc_autotune", "msc_scheduler")
 
 # headline-metric key fragments: the per-PR trajectory keeps ratios,
 # parity bits, and medians — not every raw measurement

@@ -111,7 +111,7 @@ def main():
     base = ceng.stats
     print(f"\ncontinuous stream: {len(stream)} requests, Poisson "
           f"{args.arrival_rate}/tick, slots={args.max_batch}")
-    results, ticks, stream_s = simulate_continuous(
+    results, ticks, stream_s, _ = simulate_continuous(
         ceng, stream, arrival_rate=args.arrival_rate, seed=7)
     s = ceng.stats.delta(base)  # the stream only, not the warmup
     print(f"drained in {ticks} ticks / {stream_s:.2f}s "
@@ -125,6 +125,39 @@ def main():
         sw = [int(results[i][j].power_iters_run) for j in range(3)]
         kind = "slow" if i % 4 == 0 else "fast"
         print(f"  req {i:2d} {str(spec.shape):14s} {kind} sweeps={sw}")
+
+    # ---- mixed priorities + preempt-to-host (DESIGN.md §7.12) ---------
+    # interactive (class 0) requests racing batch (class 1) near-noise
+    # work: the SLO scheduler preempts a long-running batch slot to
+    # host when an interactive request would otherwise queue, then
+    # resumes it later through the same refill executable — masks and
+    # sweep counts stay bit-identical to an uninterrupted run
+    sched_specs = [PlantedSpec.paper(16, 2.0 if i % 3 == 0 else 150.0)
+                   for i in range(9)]
+    sched_stream = [make_planted_tensor(jax.random.PRNGKey(300 + i), s)
+                    for i, s in enumerate(sched_specs)]
+    seng = MSCContinuousEngine(mesh, cfg.with_(power_tol=1e-2),
+                               slots=max(2, args.max_batch // 2),
+                               preempt_min_remaining_chunks=1)
+    seng.run(sched_stream[:3])   # warm executables + sweep histogram
+    base = seng.stats
+    print(f"\nmixed-priority stream: {len(sched_stream)} requests "
+          f"(every 3rd near-noise → class 1, rest class 0)")
+    got = {}
+    rids = [seng.submit(t, priority=1 if i % 3 == 0 else 0,
+                        deadline_chunks=64)
+            for i, t in enumerate(sched_stream)]
+    while seng.has_work():
+        got.update(seng.step())
+    s = seng.stats.delta(base)
+    print(f"scheduler: {s.preemptions} preemptions, {s.resumes} resumes, "
+          f"{s.deadline_misses} deadline misses; queue wait "
+          f"p50 {seng.stats.queue_wait_p50_chunks:.1f} / "
+          f"p99 {seng.stats.queue_wait_p99_chunks:.1f} chunks")
+    for i, rid in enumerate(rids):
+        sw = [int(got[rid][j].power_iters_run) for j in range(3)]
+        cls = 1 if i % 3 == 0 else 0
+        print(f"  req {i:2d} class {cls} sweeps={sw}")
 
     # ---- result cache: repeats + near-duplicates (DESIGN.md §7.10) ----
     # the millions-of-users regime: a Zipf-ish stream where most arrivals

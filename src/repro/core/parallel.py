@@ -665,6 +665,56 @@ class MSCChunkPlan:
         return tuple(jax.device_put(np.zeros(sh, np.float32), vsh)
                      for sh in self.warm_shapes(bucket, B))
 
+    def resume_shapes(self, bucket, B: int):
+        """(B, m') λ/residual resume staging shape per mode — the
+        preempt-to-host re-admission inputs (DESIGN.md §7.12), laid out
+        exactly like the carry's lam/resid leaves.  The resumed
+        iterate itself rides the warm_v staging (warm_shapes)."""
+        return tuple((B, m_pad)
+                     for (B, m_pad, _, _) in self.mode_shapes(bucket, B))
+
+    def zero_resume(self, bucket, B: int):
+        """Device-resident all-zero resume staging (carry lam/resid
+        sharding) plus host-side zero (B, 3) iters/done selectors —
+        passed on every refill with no resumed admissions, so the cold
+        path transfers no resume bytes and the ONE lowered refill
+        signature covers preempt/resume re-admissions too (the
+        zero-recompile contract of DESIGN.md §7.12)."""
+        import numpy as np
+
+        lsh = self._carry_shardings().lam
+        lam = tuple(jax.device_put(np.zeros(sh, np.float32), lsh)
+                    for sh in self.resume_shapes(bucket, B))
+        resid = tuple(jax.device_put(np.zeros(sh, np.float32), lsh)
+                      for sh in self.resume_shapes(bucket, B))
+        return (lam, resid, np.zeros((B, 3), np.int32),
+                np.zeros((B, 3), np.bool_))
+
+    def export_slot(self, bucket, carries, slot: int):
+        """Canonical host form of ONE slot's three mode-carry rows — the
+        preempt-to-host export (DESIGN.md §7.12).  Reuses the §7.8
+        checkpoint trim (ModeSchedule.export_carry semantics): each
+        mode's slice dim is cut to the true bucket size — lossless,
+        because a preempted slot has run ≥ 1 chunk, after which its
+        padding-slice iterates are exactly zero — and the per-request
+        verdict columns collapse to the canonical copy.  Returns one
+        host SolveState per mode with leaves v (m, c), lam (m,),
+        resid (m,), iters (scalar), done (scalar)."""
+        import numpy as np
+
+        from .power_iter import SolveState
+
+        out = []
+        for j, carry in enumerate(carries):
+            m = bucket[MODE_PERMS[j][0]]
+            g = lambda x: np.asarray(jax.device_get(x))  # noqa: E731
+            out.append(SolveState(
+                v=g(carry.v)[slot, :m], lam=g(carry.lam)[slot, :m],
+                resid=g(carry.resid)[slot, :m],
+                iters=int(g(carry.iters)[slot, 0]),
+                done=bool(g(carry.done)[slot, 0])))
+        return out
+
     def init_state(self, bucket, B: int, dtype):
         """Fresh device-resident slot table: zero blocks, every slot
         inert (done=True ⇒ frozen until the first refill)."""
@@ -773,7 +823,8 @@ class MSCChunkPlan:
 
     def build_refill(self):
         """(blocks, carries, dims, new_blocks, new_dims, take_new,
-        new_done, perm, warm_v, use_warm) → (blocks', carries',
+        new_done, perm, warm_v, use_warm, resume_lam, resume_resid,
+        resume_iters, resume_done, use_resume) → (blocks', carries',
         results).
 
         The evict/finalize/repack step.  `results` is the bucket-padded
@@ -802,6 +853,19 @@ class MSCChunkPlan:
         init.  Cold dispatches pass the device-resident `zero_warm`
         zeros + all-False, so ONE executable serves both paths — warm
         admissions recompile nothing.
+
+        `resume_lam`/`resume_resid` (per-mode (B, m') staging,
+        `resume_shapes`), `resume_iters`/`resume_done` ((B, 3) per-mode
+        selectors), and `use_resume` ((B,) bool) are the preempt-to-host
+        re-admission inputs (DESIGN.md §7.12): slot s restores its full
+        exported SolveState — the iterate rides `warm_v` verbatim
+        (init_mode_carry skips the warm re-normalization under
+        use_resume, keeping the resumed iterate bit-identical) — so the
+        solve continues exactly where the preempted chunk left it.
+        Cold/warm dispatches pass `zero_resume` + all-False; the resume
+        inputs are part of the ONE lowered signature from the start, so
+        the preempt path reuses the existing repack executable with
+        zero recompiles.
         """
         sched = self.sched
         specs = sched.batched_carry_specs
@@ -828,14 +892,18 @@ class MSCChunkPlan:
         )
 
         def refill(blocks, carries, dims, new_blocks, new_dims, take_new,
-                   new_done, perm, warm_v, use_warm):
+                   new_done, perm, warm_v, use_warm, resume_lam,
+                   resume_resid, resume_iters, resume_done, use_resume):
             args = []
             valids = []
             for j in range(3):
                 B, m_pad, _, c = new_blocks[j].shape
                 ncarry = sched.init_mode_carry(
                     B, m_pad, c, new_dims[:, C_OF[j]], new_done,
-                    warm_v=warm_v[j], use_warm=use_warm)
+                    warm_v=warm_v[j], use_warm=use_warm,
+                    resume_lam=resume_lam[j], resume_resid=resume_resid[j],
+                    resume_iters=resume_iters[:, j],
+                    resume_done=resume_done[:, j], use_resume=use_resume)
                 valid = jnp.arange(m_pad)[None, :] < dims[:, j][:, None]
                 valids.append(valid)
                 args.extend((blocks[j], carries[j], valid, new_blocks[j],

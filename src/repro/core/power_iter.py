@@ -139,6 +139,34 @@ def merge_warm_start(v0: jax.Array, warm_v: jax.Array,
     return jnp.where(u, w, v0)
 
 
+def predict_remaining_sweeps(iter_hist, current: int, *, cap: int,
+                             check_every: int = 1) -> float:
+    """Expected remaining power-iteration sweeps of a request that has
+    already run `current` sweeps, under the empirical sweep histogram
+    (the serving engine's §7.11 `_sweep_hist` of realized max-mode
+    sweeps).
+
+    The conditional-tail estimate E[S − current | S > current] captures
+    the heavy tail the SLO scheduler cares about: realized sweeps are
+    bimodal (planted-gap requests gate in a chunk or two, near-noise
+    requests run toward the cap), so the longer a request has already
+    run, the *larger* its expected remaining work — which is exactly why
+    the preemption policy targets the longest-running slot.  A request
+    that has outlived every histogram entry is predicted to run to the
+    `cap` (the near-noise worst case); an empty histogram predicts one
+    more gate chunk.  Host-side pure function — policy only, never part
+    of any compiled program.
+    """
+    cur = max(0, int(current))
+    tail = [int(s) for s in iter_hist if int(s) > cur]
+    if tail:
+        return sum(tail) / len(tail) - cur
+    if any(int(s) <= cur for s in iter_hist):
+        # ran past everything ever observed: assume a cap-runner
+        return float(max(cap - cur, check_every))
+    return float(max(1, check_every))
+
+
 def _maybe_pvary(v, vary_axes):
     """Mark the loop-carry init as device-varying inside shard_map.
 

@@ -471,7 +471,9 @@ class ModeSchedule:
                           lam=vs, resid=vs, iters=vs, done=vs)
 
     def init_mode_carry(self, B: int, m_pad: int, c: int, c_req, done,
-                        warm_v=None, use_warm=None):
+                        warm_v=None, use_warm=None, resume_lam=None,
+                        resume_resid=None, resume_iters=None,
+                        resume_done=None, use_resume=None):
         """Fresh global carry for one mode of a B-slot table.
 
         c_req: (B,) per-request column bounds masking the deterministic
@@ -490,6 +492,20 @@ class ModeSchedule:
         chunk or two.  Because both ride the SAME refill executable as
         cold admissions (cold dispatches pass zeros + all-False), warm
         starts add zero recompiles.
+
+        resume_* / use_resume (all traced, DESIGN.md §7.12): the
+        preempt-to-host re-admission path.  Where `use_resume[b]`, slot
+        b restores its FULL exported SolveState row — `warm_v[b]` taken
+        verbatim (no re-normalization: the exported iterate must come
+        back bit-identical, unlike a donor warm start), λ/residual from
+        `resume_lam`/`resume_resid` ((B, m_pad) staging), and the
+        per-request sweep counter and verdict from `resume_iters`/
+        `resume_done` ((B,) per mode) — so a preempted slot continues
+        exactly where its last chunk left it, and the realized
+        `power_iters_run` at eviction equals the uninterrupted run's.
+        use_warm and use_resume are mutually exclusive per slot (engine
+        contract).  All three admission flavors share the ONE lowered
+        refill signature; cold dispatches pass device-resident zeros.
         """
         from .power_iter import SolveState, _init_vectors, merge_warm_start
 
@@ -498,12 +514,26 @@ class ModeSchedule:
                           c_valid=jnp.asarray(c_req)[:, None])
         if warm_v is not None:
             v = merge_warm_start(v, warm_v, use_warm)
+        lam = jnp.zeros((B, m_pad), jnp.float32)
+        resid = jnp.zeros((B, m_pad), jnp.float32)
+        iters = jnp.zeros((B, S), jnp.int32)
+        done_eff = jnp.asarray(done)
+        if use_resume is not None:
+            ur = jnp.asarray(use_resume)
+            v = jnp.where(ur[:, None, None],
+                          jnp.asarray(warm_v, jnp.float32), v)
+            lam = jnp.where(ur[:, None], jnp.asarray(resume_lam), lam)
+            resid = jnp.where(ur[:, None], jnp.asarray(resume_resid),
+                              resid)
+            iters = jnp.where(
+                ur[:, None],
+                jnp.broadcast_to(
+                    jnp.asarray(resume_iters, jnp.int32)[:, None], (B, S)),
+                iters)
+            done_eff = jnp.where(ur, jnp.asarray(resume_done), done_eff)
         return SolveState(
-            v=v,
-            lam=jnp.zeros((B, m_pad), jnp.float32),
-            resid=jnp.zeros((B, m_pad), jnp.float32),
-            iters=jnp.zeros((B, S), jnp.int32),
-            done=jnp.broadcast_to(jnp.asarray(done)[:, None], (B, S)))
+            v=v, lam=lam, resid=resid, iters=iters,
+            done=jnp.broadcast_to(done_eff[:, None], (B, S)))
 
     def export_carry(self, carry, m: int):
         """Canonical mesh-independent host form of one mode's persistent

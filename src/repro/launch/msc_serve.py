@@ -25,6 +25,9 @@ Examples:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \\
       python -m repro.launch.msc_serve --continuous --autotune \\
       --epilogue auto --chunks-per-step auto   # §7.11 auto-config
+  PYTHONPATH=src python -m repro.launch.msc_serve --continuous \\
+      --priority-mix 0:0.5,1:1.5 --slo-chunks 32 \\
+      --slow-every 8                           # §7.12 SLO scheduler
 """
 from __future__ import annotations
 
@@ -55,31 +58,52 @@ def build_request_stream(sizes, n_requests: int, seed: int,
 
 
 def simulate_continuous(engine: MSCContinuousEngine, tensors, *,
-                        arrival_rate: float, seed: int):
+                        arrival_rate: float, seed: int,
+                        priority_rates=None, deadline_chunks=None):
     """Drive the decode loop under Poisson arrivals.
 
     Inter-arrival gaps are Exponential(1/arrival_rate) in units of
     scheduler ticks; each tick submits everything that has arrived,
-    then advances every bucket one gate chunk.  Returns (results dict,
-    ticks, wall seconds).
+    then advances the scheduler one tick.  With `priority_rates`
+    ({class: arrivals/tick}, DESIGN.md §7.12) each request draws its
+    class with probability proportional to the class rates and the
+    total arrival rate is their sum (overriding `arrival_rate`);
+    `deadline_chunks` rides through to submit().  Submits the engine
+    sheds (LoadShedError — SLO admission control) are dropped and
+    counted.  Returns (results dict, ticks, wall seconds, shed count).
     """
     import numpy as np
 
+    from repro.serving.faults import LoadShedError
+
     rng = np.random.RandomState(seed)
+    if priority_rates:
+        classes = sorted(priority_rates)
+        rates = np.asarray([priority_rates[c] for c in classes], float)
+        arrival_rate = float(rates.sum())
+        prio = [classes[i] for i in
+                rng.choice(len(classes), size=len(tensors),
+                           p=rates / rates.sum())]
+    else:
+        prio = [0] * len(tensors)
     arrivals = np.cumsum(rng.exponential(1.0 / max(arrival_rate, 1e-9),
                                          len(tensors)))
     results, rid_of = {}, {}
-    tick, nxt = 0, 0
+    tick, nxt, shed = 0, 0, 0
     t0 = time.time()
     while nxt < len(tensors) or engine.has_work():
         while nxt < len(tensors) and arrivals[nxt] <= tick:
-            rid_of[engine.submit(tensors[nxt])] = nxt
+            try:
+                rid_of[engine.submit(tensors[nxt], priority=prio[nxt],
+                                     deadline_chunks=deadline_chunks)] = nxt
+            except LoadShedError:
+                shed += 1
             nxt += 1
         if engine.has_work():
             for rid, res in engine.step().items():
                 results[rid_of[rid]] = res
         tick += 1
-    return results, tick, time.time() - t0
+    return results, tick, time.time() - t0, shed
 
 
 def main(argv=None) -> int:
@@ -124,6 +148,24 @@ def main(argv=None) -> int:
     ap.add_argument("--arrival-rate", type=float, default=2.0,
                     help="mean Poisson arrivals per scheduler tick "
                          "(continuous mode)")
+    ap.add_argument("--priority-mix", default=None,
+                    help="per-class Poisson arrival rates, e.g. "
+                         "'0:0.5,1:1.5' (class 0 most urgent); overrides "
+                         "--arrival-rate with the sum (DESIGN.md §7.12)")
+    ap.add_argument("--slo-chunks", type=int, default=None,
+                    help="shed submits whose predicted queue wait "
+                         "exceeds this many chunks (admission control)")
+    ap.add_argument("--deadline-chunks", type=int, default=None,
+                    help="per-request deadline budget in scheduler "
+                         "ticks (advisory; misses are counted)")
+    ap.add_argument("--no-preempt", action="store_true",
+                    help="disable preempt-to-host (FIFO-within-class "
+                         "residency)")
+    ap.add_argument("--bucket-policy", default="weighted",
+                    choices=("weighted", "all"),
+                    help="cross-bucket device-time sharing: 'weighted' "
+                         "rotates one bucket per tick by queue-depth "
+                         "credit, 'all' steps every bucket")
     ap.add_argument("--slow-every", type=int, default=0,
                     help="every Nth request is a near-noise slow "
                          "converger (0 = homogeneous stream)")
@@ -242,14 +284,23 @@ def main(argv=None) -> int:
                 ckpt_every_chunks=args.ckpt_every,
                 result_cache=rcache, warm_start=args.warm_start,
                 autotune=args.autotune,
-                donate_buffers=not args.no_donate)
+                donate_buffers=not args.no_donate,
+                preempt=not args.no_preempt,
+                slo_chunks=args.slo_chunks,
+                bucket_policy=args.bucket_policy)
         probes = {}  # warm every bucket's executables off the clock
         for t in tensors:
             probes.setdefault(ceng.bucket_of(t.shape), t)
         ceng.run(list(probes.values()))
         base = ceng.stats
-        results, ticks, stream_s = simulate_continuous(
-            ceng, tensors, arrival_rate=args.arrival_rate, seed=args.seed)
+        mix = None
+        if args.priority_mix:
+            mix = {int(k): float(v) for k, v in
+                   (kv.split(":") for kv in args.priority_mix.split(","))}
+            print(f"  priority mix: {mix} arrivals/tick per class")
+        results, ticks, stream_s, shed = simulate_continuous(
+            ceng, tensors, arrival_rate=args.arrival_rate, seed=args.seed,
+            priority_rates=mix, deadline_chunks=args.deadline_chunks)
         cs = ceng.stats.delta(base)  # the stream only, not the warmup
         print(f"streamed {len(results)} results over {ticks} ticks in "
               f"{stream_s:.2f}s ({len(results) / stream_s:.1f} req/s)")
@@ -258,6 +309,13 @@ def main(argv=None) -> int:
               f"{cs.evictions} evictions, {cs.refills} refills, "
               f"mean queue wait "
               f"{cs.queue_wait_chunks / max(cs.requests, 1):.2f} chunks")
+        ss = ceng.stats  # scheduler counters (cumulative; p50/p99 rolling)
+        print(f"  scheduler: {ss.preemptions} preemptions, "
+              f"{ss.resumes} resumes, {ss.deadline_misses} deadline "
+              f"misses, {ss.slo_sheds} SLO-shed ({shed} dropped), "
+              f"{ss.idle_bucket_ticks} idle-bucket ticks, queue wait "
+              f"p50 {ss.queue_wait_p50_chunks:.1f} / "
+              f"p99 {ss.queue_wait_p99_chunks:.1f} chunks")
         fs = ceng.stats  # cumulative — restores predate the base snapshot
         print(f"  fault tolerance: {fs.checkpoints_written} checkpoints, "
               f"{fs.restores} restores, {fs.retries} retries, "

@@ -3,5 +3,6 @@ from .hlo import HloAnalysis, analyze, shape_bytes
 from .analyze import (RELAYOUTS, RooflineReport, active_param_count,
                       choose_chunk_steps, choose_epilogue, choose_relayout,
                       continuous_serving_model, eigensolve_model,
-                      epilogue_model, model_flops, relayout_model,
-                      report_from_compiled, save_report, serving_model)
+                      epilogue_model, expected_queue_wait, model_flops,
+                      relayout_model, report_from_compiled, save_report,
+                      serving_model)

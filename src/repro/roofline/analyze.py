@@ -25,7 +25,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import math
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 from .hlo import HloAnalysis, analyze
 from .hw import V5E, HwSpec
@@ -370,6 +370,29 @@ def choose_chunk_steps(iter_hist, B: int, *, check_every: int = 6,
     return best
 
 
+def expected_queue_wait(queued_ahead: int, free_slots: int, B: int,
+                        chunks_per_request: float) -> float:
+    """Predicted queue wait, in gate chunks, for a request joining a
+    B-slot continuous table behind `queued_ahead` requests that will be
+    served before it (its own class and more urgent ones), with
+    `free_slots` slots currently free (DESIGN.md §7.12).
+
+    The closed-form skeleton of the admission-control model: if the
+    free slots cover everyone ahead plus this request it waits 0;
+    otherwise each of the B slots frees once per `chunks_per_request`
+    chunks on average, so the backlog drains at B/chunks_per_request
+    requests per chunk and position (queued_ahead − free_slots + 1)
+    waits proportionally.  `MSCContinuousEngine` feeds it the measured
+    mean residency from its sweep histogram; `continuous_serving_model`
+    exposes the full-distribution (p50/p99) version via simulation."""
+    if B < 1:
+        raise ValueError(f"B must be >= 1, got {B}")
+    if queued_ahead < free_slots:
+        return 0.0
+    return ((queued_ahead - free_slots + 1)
+            * max(1.0, float(chunks_per_request)) / B)
+
+
 def continuous_serving_model(iter_hist, B: int, *, check_every: int = 6,
                              shape=None, p: int = 1, q: int = 1,
                              epilogue: str = "allgather",
@@ -379,6 +402,9 @@ def continuous_serving_model(iter_hist, B: int, *, check_every: int = 6,
                              exact_hit_rate: float = 0.0,
                              warm_hit_rate: float = 0.0,
                              warm_sweeps=None, lookup_s: float = 0.0,
+                             arrivals=None, priorities=None,
+                             aging_chunks: int = 16,
+                             slo_chunks=None,
                              hw: HwSpec = V5E) -> Dict:
     """Predict continuous-vs-static occupancy from a per-request
     iteration histogram (DESIGN.md §7.7).
@@ -425,6 +451,19 @@ def continuous_serving_model(iter_hist, B: int, *, check_every: int = 6,
     unreshaped histogram) and `cache_speedup` — the throughput factor
     the cache itself buys on top of continuous batching.  All existing
     outputs are unchanged when both rates are 0.
+
+    Queue-wait terms (DESIGN.md §7.12): `arrivals` (per-request arrival
+    tick, chunks, arrival order — default all 0) and `priorities`
+    (per-request class, 0 most urgent — default all 0) drive a second
+    slot-table simulation that mirrors the engine's weighted-aging
+    admission (`aging_chunks`) with per-chunk admission (min_free=1 —
+    the wait model, not the dispatch-batching model) and reports the
+    realized wait distribution: `wait_p50_chunks` / `wait_p99_chunks`
+    over all requests and `wait_by_class` ({class: {p50, p99, mean,
+    n}}).  With `slo_chunks` set, requests whose `expected_queue_wait`
+    at arrival exceeds the bound are shed on arrival (counted in
+    `shed`, excluded from the wait percentiles) — the admission-control
+    policy the engine applies live.
     """
     sweeps = [int(s) for s in iter_hist]
     if not sweeps or B < 1:
@@ -531,6 +570,72 @@ def continuous_serving_model(iter_hist, B: int, *, check_every: int = 6,
         nocache_continuous_s = c0 * chunk_s + r0 * refill_s
     else:
         nocache_continuous_s = chunks * chunk_s + refills * refill_s
+
+    # ---- queue-wait simulation (DESIGN.md §7.12) ----
+    arr = ([0] * n if arrivals is None
+           else [int(a) for a in arrivals])
+    pri = ([0] * n if priorities is None
+           else [int(c) for c in priorities])
+    if len(arr) != n or len(pri) != n:
+        raise ValueError("arrivals/priorities must match iter_hist")
+    aging = max(1, int(aging_chunks))
+    mean_chunks = sum(chunks_of) / n
+    queues: Dict[int, List] = {}   # class -> [(arrival, idx), ...]
+    slots_w = [0] * B
+    waits: List[tuple] = []        # (class, wait)
+    shed = 0
+    order = sorted(range(n), key=lambda i: arr[i])
+    nxt, tick = 0, 0
+    while (nxt < len(order) or any(slots_w)
+           or any(q for q in queues.values())):
+        while nxt < len(order) and arr[order[nxt]] <= tick:
+            i = order[nxt]
+            nxt += 1
+            if slo_chunks is not None:
+                ahead = sum(len(q) for c, q in queues.items()
+                            if c <= pri[i])
+                free_now = sum(r == 0 for r in slots_w)
+                if expected_queue_wait(ahead, free_now, B,
+                                       mean_chunks) > slo_chunks:
+                    shed += 1
+                    continue
+            queues.setdefault(pri[i], []).append((tick, i))
+        for s in range(B):
+            if slots_w[s]:
+                continue
+            best = None
+            for c in sorted(queues):
+                if queues[c]:
+                    eff = c - (tick - queues[c][0][0]) / aging
+                    if best is None or eff < best[0]:
+                        best = (eff, c)
+            if best is None:
+                break
+            t0, i = queues[best[1]].pop(0)
+            slots_w[s] = chunks_of[i]
+            waits.append((pri[i], tick - t0))
+        if any(slots_w):
+            slots_w = [max(0, r - 1) for r in slots_w]
+            tick += 1
+        elif nxt < len(order):
+            tick = max(tick + 1, arr[order[nxt]])
+        else:
+            break
+
+    def _pct(vals, q_):
+        if not vals:
+            return 0.0
+        vals = sorted(vals)
+        return float(vals[min(len(vals) - 1,
+                              int(math.ceil(q_ * len(vals))) - 1)])
+
+    wait_by_class = {}
+    for c in sorted(set(pri)):
+        vs = [w for cc, w in waits if cc == c]
+        wait_by_class[c] = {
+            "p50": _pct(vs, 0.50), "p99": _pct(vs, 0.99),
+            "mean": (sum(vs) / len(vs) if vs else 0.0), "n": len(vs)}
+    all_waits = [w for _, w in waits]
     return {
         "requests": len(sweeps), "B": B, "check_every": k,
         "shape": tuple(shape) if shape is not None else None,
@@ -547,6 +652,10 @@ def continuous_serving_model(iter_hist, B: int, *, check_every: int = 6,
         "nocache_continuous_s": nocache_continuous_s,
         "cache_speedup": (nocache_continuous_s / continuous_s
                           if continuous_s > 0 else 0.0),
+        "wait_p50_chunks": _pct(all_waits, 0.50),
+        "wait_p99_chunks": _pct(all_waits, 0.99),
+        "wait_by_class": wait_by_class,
+        "shed": shed,
     }
 
 

@@ -143,6 +143,25 @@ class ServeStats:
       autotune_cache_hits — bucket resolutions served from the
         autotune cache (in-memory or reloaded), compiling only the
         winner.
+
+    SLO-scheduler counters (DESIGN.md §7.12):
+
+      preemptions / resumes — slots swapped to host mid-solve to make
+        room for a higher-priority waiter, and parked requests
+        re-admitted through the refill executable's resume inputs.
+      deadline_misses — requests that finalized after their
+        `deadline_chunks` budget had elapsed.
+      slo_sheds — submits rejected (LoadShedError) because the
+        queue-wait model predicted the request would blow `slo_chunks`
+        (shed BEFORE solving; a subset of `shed_requests`).
+      idle_bucket_ticks — chunk dispatches of a bucket that left free
+        slots idle while its own queue was non-empty (refill batching;
+        0 by construction when refill_min_free == 1).
+      queue_wait_p50_chunks / queue_wait_p99_chunks — rolling
+        percentiles (last 512 admissions, all classes) of the realized
+        queue wait in scheduler ticks; floats, refreshed at every
+        admission, NOT cumulative (delta() of a float field is still
+        well-defined but rarely meaningful).
     """
 
     requests: int = 0
@@ -171,6 +190,13 @@ class ServeStats:
     warm_sweeps_saved: int = 0
     autotune_searches: int = 0
     autotune_cache_hits: int = 0
+    preemptions: int = 0
+    resumes: int = 0
+    deadline_misses: int = 0
+    slo_sheds: int = 0
+    idle_bucket_ticks: int = 0
+    queue_wait_p50_chunks: float = 0.0
+    queue_wait_p99_chunks: float = 0.0
 
     @property
     def occupancy(self) -> float:
@@ -356,8 +382,9 @@ def _trim_request(host: MSCResult, s: int, shape) -> MSCResult:
 class _SlotTable:
     """Per-bucket slot-table runtime of the continuous engine: the
     device-resident state (blocks + carries), the host-side slot→request
-    map and per-slot dims, the admission queue, and the bucket's chunk
-    clock.  Pure bookkeeping — all policy lives in the engine."""
+    map and per-slot dims, the per-class admission queues, the parked
+    (preempted-to-host) requests, and the bucket's chunk clock.  Pure
+    bookkeeping — all policy lives in the engine."""
 
     def __init__(self, bucket, blocks, carries, slots: int, dtype,
                  mode_shapes):
@@ -366,9 +393,23 @@ class _SlotTable:
         self.carries = carries
         self.slot_req: List[Optional[int]] = [None] * slots
         self.dims = np.tile(np.int32(_FILLER_DIMS), (slots, 1))
-        self.queue: Deque[Tuple[int, int]] = deque()  # (rid, submit_chunk)
+        # per-priority-class FIFO queues (DESIGN.md §7.12); entries are
+        # (rid, submit_tick, deadline_tick) with deadline_tick < 0 for
+        # "no deadline".  Class 0 is the most urgent.
+        self.queues: Dict[int, Deque[Tuple[int, int, int]]] = {}
         self.chunk = 0
         self.fin = np.zeros(slots, bool)  # last chunk's finished flags
+        # per-slot scheduler state: priority class, absolute deadline
+        # tick (engine clock; -1 = none), and chunks dispatched while
+        # resident (the preemption policy's progress proxy)
+        self.prio = np.zeros(slots, np.int32)
+        self.deadline = np.full(slots, -1, np.int64)
+        self.progress = np.zeros(slots, np.int64)
+        # preempted-to-host requests: rid → dict(arr, carries (host
+        # SolveState per mode), priority, deadline, warm_meta, progress)
+        self.parked: Dict[int, Dict] = {}
+        # cross-bucket device-time credit (weighted round-robin)
+        self.credit = 0.0
         # host copies of the live slots' tensors: the checkpoint payload
         # blocks are rebuilt from (device blocks are a pure function of
         # admitted tensors) and the fallback oracle's input
@@ -390,6 +431,86 @@ class _SlotTable:
                                 for sh in mode_shapes)
         self.warm_dirty = np.zeros(slots, bool)
         self.warm_meta: List[Optional[Tuple[int, int, int]]] = [None] * slots
+        # resume staging (DESIGN.md §7.12): a parked slot's exported
+        # λ/residual rows land here for the refill executable's resume
+        # inputs (v rides warm_stage verbatim — init_mode_carry takes it
+        # un-normalized under use_resume); iters/done are per-mode
+        # scalars, one (slots, 3) row each
+        self.resume_lam = tuple(np.zeros((sh[0], sh[1]), np.float32)
+                                for sh in mode_shapes)
+        self.resume_resid = tuple(np.zeros((sh[0], sh[1]), np.float32)
+                                  for sh in mode_shapes)
+        self.resume_iters = np.zeros((slots, 3), np.int32)
+        self.resume_done = np.zeros((slots, 3), bool)
+        self.resume_dirty = np.zeros(slots, bool)
+
+    # ---- per-class queue bookkeeping (DESIGN.md §7.12) ---------------
+    def queue_for(self, priority: int) -> Deque[Tuple[int, int, int]]:
+        q = self.queues.get(int(priority))
+        if q is None:
+            q = self.queues[int(priority)] = deque()
+        return q
+
+    def queue_len(self) -> int:
+        return sum(len(q) for q in self.queues.values())
+
+    def queued(self) -> List[Tuple[int, int, int, int]]:
+        """(priority, rid, submit_tick, deadline) in per-class pop
+        order, classes ascending — the deterministic drain order."""
+        out = []
+        for pr in sorted(self.queues):
+            out.extend((pr,) + e for e in self.queues[pr])
+        return out
+
+    def pop_best(self, tick: int, aging_chunks: int):
+        """Pop the head with the lowest EFFECTIVE priority
+        `class − wait/aging_chunks` (weighted aging: a queued request
+        gains one class of urgency per aging_chunks ticks waited, so
+        low-priority work cannot starve).  FIFO within a class; the
+        more urgent class wins exact ties.  Returns
+        (priority, rid, submit_tick, deadline) or None."""
+        best = None
+        for pr in sorted(self.queues):
+            q = self.queues[pr]
+            if not q:
+                continue
+            eff = pr - (tick - q[0][1]) / max(1, aging_chunks)
+            if best is None or eff < best[0]:
+                best = (eff, pr)
+        if best is None:
+            return None
+        pr = best[1]
+        rid, sub, dl = self.queues[pr].popleft()
+        return pr, rid, sub, dl
+
+    def import_slot(self, s: int, carries):
+        """Write one parked request's exported per-mode SolveState back
+        into the warm/resume staging rows: v into the warm staging
+        (selected verbatim under use_resume — no re-normalization, the
+        bit-exactness contract), λ/resid/iters/done into the resume
+        staging.  Padded rows stay zero, which round-trips exactly
+        because a preempted slot has run ≥1 chunk and its padded
+        iterate rows are already exactly zero (same argument as §7.8
+        checkpoints)."""
+        if self.warm_dirty[s]:
+            for st in self.warm_stage:
+                st[s] = 0
+        if self.resume_dirty[s]:
+            for st in self.resume_lam:
+                st[s] = 0
+            for st in self.resume_resid:
+                st[s] = 0
+        for j, host in enumerate(carries):
+            v = np.asarray(host.v, np.float32)
+            self.warm_stage[j][s, :v.shape[0], :v.shape[1]] = v
+            self.resume_lam[j][s, :v.shape[0]] = np.asarray(
+                host.lam, np.float32)
+            self.resume_resid[j][s, :v.shape[0]] = np.asarray(
+                host.resid, np.float32)
+            self.resume_iters[s, j] = int(host.iters)
+            self.resume_done[s, j] = bool(host.done)
+        self.warm_dirty[s] = True
+        self.resume_dirty[s] = True
 
     def admit_write(self, s: int, arr: np.ndarray):
         """Write one admitted tensor's three unfoldings into slot s of
@@ -426,7 +547,7 @@ class _SlotTable:
         return [s for s, r in enumerate(self.slot_req) if r is None]
 
     def has_work(self) -> bool:
-        return bool(self.queue) or self.live > 0
+        return self.queue_len() > 0 or self.live > 0
 
 
 class MSCContinuousEngine:
@@ -451,9 +572,12 @@ class MSCContinuousEngine:
       refill_min_free — batch refills: only repack once this many slots
         are free (a repack dispatch touches the whole slot table, so
         admitting one request at a time wastes dispatches under load).
-      max_queue_chunks — starvation bound: once the oldest queued
-        request has waited this many chunks, refill at the next free
-        slot regardless of refill_min_free.
+      max_queue_chunks — starvation bound, enforced PER CLASS PER
+        BUCKET on the engine's tick clock: once any class's oldest
+        queued request has waited this many scheduler ticks, refill at
+        the next free slot regardless of refill_min_free.  (The engine
+        clock advances every step() even for buckets the cross-bucket
+        rotation skipped, so a hot bucket cannot starve a cold one.)
       placement — where admitted requests land: "compact" moves live
         slots to the front (slot order = admission order, the LLM
         engine's compaction), "stable" leaves live slots in place and
@@ -464,6 +588,34 @@ class MSCContinuousEngine:
         eviction granularity, fewer dispatches; sweep counts and
         results are unchanged because probes stay at check_every
         boundaries).
+
+    SLO-scheduler knobs (DESIGN.md §7.12):
+      preempt — allow preempt-to-host: when a strictly more urgent
+        request queues and no slot is free, export the lower-priority
+        slot with the MOST predicted remaining sweeps (conditional
+        tail of the measured sweep histogram) to host, admit the
+        waiter, and re-admit the parked request later through the same
+        refill executable's resume inputs.  Masks and realized sweep
+        counts are bit-identical to the uninterrupted run; the resume
+        inputs are part of the ONE lowered refill signature, so the
+        zero-recompile contract holds.  Forced off on multi-process
+        meshes (replicate_outputs) — the sharded carries are not fully
+        addressable on any single host (gang-scheduling across hosts
+        is the §7.9 follow-on).
+      preempt_min_remaining_chunks — only preempt a victim predicted
+        to hold its slot for MORE than this many further chunks
+        (preempting a nearly-done solve wastes its residency).
+      aging_chunks — weighted-aging rate of the per-class queues: a
+        queued request gains one priority class of urgency per this
+        many ticks waited, so low priority ages into service.
+      slo_chunks — admission control: shed a submit (LoadShedError)
+        when `roofline.expected_queue_wait` predicts its queue wait
+        would exceed this many chunks — BEFORE solving.  None disables.
+      bucket_policy — "weighted" (default) rotates ONE bucket onto the
+        device per tick by accumulated queue-depth credit (cross-bucket
+        device-time sharing: no bucket idles the device while another
+        queues); "all" steps every bucket each tick (the pre-§7.12
+        behavior; also what a single-bucket stream degenerates to).
 
     Fault-tolerance knobs (DESIGN.md §7.8):
       checkpoint_dir — enable periodic checkpointing of the whole
@@ -545,12 +697,20 @@ class MSCContinuousEngine:
                  retry_backoff_max_s: float = 2.0, fault_injector=None,
                  replicate_outputs: bool = False, result_cache=None,
                  warm_start: bool = False, autotune: bool = False,
-                 autotune_cache=None, donate_buffers: bool = True):
+                 autotune_cache=None, donate_buffers: bool = True,
+                 preempt: bool = True,
+                 preempt_min_remaining_chunks: int = 2,
+                 aging_chunks: int = 16,
+                 slo_chunks: Optional[int] = None,
+                 bucket_policy: str = "weighted"):
         if slots < 1:
             raise ValueError(f"slots must be >= 1, got {slots}")
         if placement not in ("compact", "stable"):
             raise ValueError(f"unknown placement {placement!r}; "
                              f"expected 'compact' or 'stable'")
+        if bucket_policy not in ("weighted", "all"):
+            raise ValueError(f"unknown bucket_policy {bucket_policy!r}; "
+                             f"expected 'weighted' or 'all'")
         if cfg.power_tol <= 0.0:
             raise ValueError("continuous batching needs the adaptive gate "
                              "(cfg.power_tol > 0); without it every slot "
@@ -566,6 +726,19 @@ class MSCContinuousEngine:
                                    self.slots)
         self.max_queue_chunks = int(max_queue_chunks)
         self.placement = placement
+        # ---- SLO scheduler (DESIGN.md §7.12) ----
+        # preempt-to-host needs host-addressable carries; multi-process
+        # meshes (replicate_outputs) park it (§7.9 gang-scheduling is
+        # the follow-on)
+        self.preempt = bool(preempt) and not replicate_outputs
+        self.preempt_min_remaining_chunks = int(preempt_min_remaining_chunks)
+        self.aging_chunks = max(1, int(aging_chunks))
+        self.slo_chunks = None if slo_chunks is None else int(slo_chunks)
+        self.bucket_policy = bucket_policy
+        self._tick = 0                      # engine scheduler clock
+        # rolling realized queue waits (priority, ticks) feeding the
+        # p50/p99 ServeStats fields
+        self._wait_hist: Deque[Tuple[int, int]] = deque(maxlen=512)
         # the default plan needs a concrete config — "auto" knobs
         # resolve per bucket in _plan_for; the base stands in wherever
         # no bucket is in scope (fallback oracle, checkpoint plumbing)
@@ -747,12 +920,13 @@ class MSCContinuousEngine:
                 blocks, carries = plan.init_state(bucket, B, self.dtype)
                 stage = plan.zero_stage(bucket, B, self.dtype)
                 warm = plan.zero_warm(bucket, B)
+                zres = plan.zero_resume(bucket, B)
                 t0 = time.perf_counter()
                 carries, _ = step(blocks, carries)
                 blocks, carries, _ = refill(
                     blocks, carries, fill, stage, fill, no,
                     np.ones(B, bool), np.arange(B, dtype=np.int32),
-                    warm, no)
+                    warm, no, zres[0], zres[1], zres[2], zres[3], no)
                 jax.block_until_ready(carries)
                 if rep:
                     secs.append(time.perf_counter() - t0)
@@ -811,6 +985,12 @@ class MSCContinuousEngine:
         vsh = plan._carry_shardings().v
         warm_s = tuple(jax.ShapeDtypeStruct(sh, jnp.float32, sharding=vsh)
                        for sh in plan.warm_shapes(bucket, B))
+        # resume (preempt-to-host) inputs are likewise part of the ONE
+        # lowered signature: cold/warm refills pass device-resident
+        # zeros + all-False use_resume, so preemption adds no recompile
+        lsh = plan._carry_shardings().lam
+        res_s = tuple(jax.ShapeDtypeStruct(sh, jnp.float32, sharding=lsh)
+                      for sh in plan.resume_shapes(bucket, B))
         donate = (1,) if self.donate_buffers else ()
         return jax.jit(plan.build_refill(),
                        donate_argnums=donate).lower(
@@ -818,6 +998,10 @@ class MSCContinuousEngine:
             jax.ShapeDtypeStruct((B,), jnp.bool_),
             jax.ShapeDtypeStruct((B,), jnp.bool_),
             jax.ShapeDtypeStruct((B,), i32), warm_s,
+            jax.ShapeDtypeStruct((B,), jnp.bool_),
+            res_s, res_s,
+            jax.ShapeDtypeStruct((B, 3), i32),
+            jax.ShapeDtypeStruct((B, 3), jnp.bool_),
             jax.ShapeDtypeStruct((B,), jnp.bool_)).compile()
 
     def _executables(self, bucket):
@@ -859,16 +1043,32 @@ class MSCContinuousEngine:
             tb.zero_stage = plan.zero_stage(bucket, self.slots,
                                             self.dtype)
             tb.zero_warm = plan.zero_warm(bucket, self.slots)
+            tb.zero_resume = plan.zero_resume(bucket, self.slots)
             self._tables[bucket] = tb
         return tb
 
     # ---- the decode loop ---------------------------------------------
-    def submit(self, tensor) -> int:
+    def submit(self, tensor, *, priority: int = 0,
+               deadline_chunks: Optional[int] = None) -> int:
         """Queue one request; returns its id (the key `step()` results
-        come back under).  Raises LoadShedError while any bucket is
-        recovering from a dispatch failure: shedding load keeps the
-        queue from growing unboundedly behind a sick bucket (clients
-        resubmit after recovery)."""
+        come back under).
+
+        priority — non-negative class, 0 most urgent; requests drain
+          per class under weighted aging (DESIGN.md §7.12).
+        deadline_chunks — optional SLO budget in scheduler ticks; a
+          request finalizing later counts a `deadline_misses` (advisory
+          — the result is still delivered).
+
+        Raises LoadShedError while any bucket is recovering from a
+        dispatch failure, or when `slo_chunks` is set and the queue-wait
+        model predicts this request would wait longer than the bound —
+        shedding BEFORE solving keeps a sick or saturated engine from
+        growing an unbounded queue (clients resubmit later)."""
+        if priority < 0:
+            raise ValueError(f"priority must be >= 0, got {priority}")
+        if deadline_chunks is not None and deadline_chunks < 1:
+            raise ValueError(f"deadline_chunks must be >= 1, "
+                             f"got {deadline_chunks}")
         arr = np.asarray(tensor, self.dtype)
         cache = self.result_cache
         key = None
@@ -895,11 +1095,21 @@ class MSCContinuousEngine:
                 f"bucket(s) {sorted(self._recovering)}; resubmit after "
                 f"recovery")
         bucket = self.bucket_of(arr.shape)
+        tb = self._table(bucket)
+        if self.slo_chunks is not None:
+            pred = self._predicted_wait(tb, int(priority))
+            if pred > self.slo_chunks:
+                self._bump(shed_requests=1, slo_sheds=1)
+                raise LoadShedError(
+                    f"predicted queue wait {pred:.1f} chunks exceeds the "
+                    f"SLO bound {self.slo_chunks} for bucket {bucket} "
+                    f"(priority {priority}); resubmit later")
         rid = self._next_rid
         self._next_rid += 1
         self._pending[rid] = (arr, bucket)
-        tb = self._table(bucket)
-        tb.queue.append((rid, tb.chunk))
+        deadline = (-1 if deadline_chunks is None
+                    else self._tick + int(deadline_chunks))
+        tb.queue_for(priority).append((rid, self._tick, deadline))
         self._bump(requests=1)
         if cache is not None:
             self._bump(cache_misses=1)
@@ -918,30 +1128,59 @@ class MSCContinuousEngine:
                                         for tb in self._tables.values())
 
     def step(self) -> Dict[int, MSCResult]:
-        """One scheduler tick on every bucket with work: admit (policy
-        permitting), advance one gate chunk, evict finished slots.
-        Returns the requests that finished this tick — the ONLY copy
-        (the engine retains nothing, so a long-running decode loop
-        doesn't accumulate served results)."""
+        """One scheduler tick: admit (policy permitting), advance one
+        gate chunk, evict finished slots.  Under bucket_policy
+        "weighted" exactly ONE bucket runs per tick — the one with the
+        most accumulated queue-depth credit — so device time is shared
+        across buckets in proportion to their load (cross-bucket slot
+        sharing, DESIGN.md §7.12); "all" steps every bucket.  Returns
+        the requests that finished this tick — the ONLY copy (the
+        engine retains nothing, so a long-running decode loop doesn't
+        accumulate served results)."""
         finished: Dict[int, MSCResult] = {}
+        self._tick += 1
         if self._ready:   # tier-1 cache hits, answered without a dispatch
             finished.update(self._ready)
             self._ready.clear()
-        for tb in self._tables.values():
-            if tb.has_work():
+        now = time.monotonic()
+        ready = [tb for tb in self._tables.values() if tb.has_work()]
+        runnable = [tb for tb in ready
+                    if not tb.retry_at or now >= tb.retry_at]
+        if (self.bucket_policy == "weighted" and len(ready) > 1
+                and runnable):
+            # accumulate credit on EVERY bucket with work (so a skipped
+            # bucket's claim grows), then run the runnable max; ties
+            # break on bucket id for determinism
+            for tb in ready:
+                tb.credit += tb.live + tb.queue_len()
+            chosen = max(runnable, key=lambda t: (t.credit, t.bucket))
+            chosen.credit = 0.0
+            finished.update(self._step_table(chosen))
+        else:
+            for tb in ready:
                 finished.update(self._step_table(tb))
         if (self.checkpoint_dir is not None and self.ckpt_every_chunks > 0
                 and self._chunks_since_ckpt >= self.ckpt_every_chunks):
             self.checkpoint()
         return finished
 
-    def run(self, tensors: Sequence) -> List[MSCResult]:
+    def run(self, tensors: Sequence, *,
+            priorities: Optional[Sequence[int]] = None,
+            deadline_chunks: Optional[Sequence[Optional[int]]] = None
+            ) -> List[MSCResult]:
         """Serve a closed set of requests to completion, in order.
+        Optional per-request `priorities` / `deadline_chunks` ride
+        through to submit().
 
         Drives step() until its own submissions finish; don't interleave
         with an external submit()/step() loop — results step() hands out
         while run() drains would be collected (and dropped) here."""
-        rids = [self.submit(t) for t in tensors]
+        rids = [self.submit(
+            t,
+            priority=0 if priorities is None else int(priorities[i]),
+            deadline_chunks=None if deadline_chunks is None
+            else deadline_chunks[i])
+            for i, t in enumerate(tensors)]
         got: Dict[int, MSCResult] = {}
         while self.has_work() and not all(r in got for r in rids):
             got.update(self.step())
@@ -949,12 +1188,70 @@ class MSCContinuousEngine:
 
     # ---- per-bucket tick ---------------------------------------------
     def _should_admit(self, tb: _SlotTable, n_free: int) -> bool:
-        if not tb.queue or n_free == 0:
+        if n_free == 0 or tb.queue_len() == 0:
             return False
         if n_free >= self.refill_min_free:
             return True
-        oldest_wait = tb.chunk - tb.queue[0][1]
-        return oldest_wait >= self.max_queue_chunks
+        # starvation bound, per CLASS per BUCKET on the engine's tick
+        # clock: the clock advances even on ticks the cross-bucket
+        # rotation gave to another bucket, so neither a hot bucket nor
+        # a hot class can starve the rest past max_queue_chunks
+        return any(self._tick - q[0][1] >= self.max_queue_chunks
+                   for q in tb.queues.values() if q)
+
+    def _mean_chunks(self, tb: _SlotTable) -> float:
+        """Measured mean request residency in gate chunks (the sweep
+        histogram over this engine's served requests; cold default 4
+        chunk-steps)."""
+        k = max(1, self.cfg.power_check_every)
+        per = k * self._plan_for(tb.bucket).chunks_per_step
+        hist = list(self._sweep_hist)
+        if not hist:
+            return 4.0
+        return max(1.0, float(np.mean(hist)) / per)
+
+    def _predicted_wait(self, tb: _SlotTable, priority: int) -> float:
+        """Predicted queue wait (chunks) for a new request of `priority`
+        joining this bucket — the admission-control input
+        (roofline.expected_queue_wait)."""
+        from repro.roofline import expected_queue_wait
+
+        ahead = sum(len(q) for pr, q in tb.queues.items()
+                    if pr <= priority)
+        return expected_queue_wait(ahead, len(tb.free), self.slots,
+                                   self._mean_chunks(tb))
+
+    def _plan_preempt(self, tb: _SlotTable, n_free: int) -> List[int]:
+        """Pick at most ONE slot to preempt-to-host this tick
+        (DESIGN.md §7.12): only when no slot frees up anyway, a
+        STRICTLY more urgent request waits, and some lower-priority
+        victim is predicted to hold its slot for more than
+        `preempt_min_remaining_chunks` further chunks.  Among victims,
+        evict the one with the MOST predicted remaining sweeps (the
+        conditional tail of the measured sweep histogram over its
+        current progress) — the §7.11 histogram reused as policy."""
+        if not self.preempt or n_free > 0:
+            return []
+        waiting = [pr for pr, q in tb.queues.items() if q]
+        if not waiting:
+            return []
+        from repro.core.power_iter import predict_remaining_sweeps
+
+        urgent = min(waiting)
+        k = max(1, self.cfg.power_check_every)
+        per = k * self._plan_for(tb.bucket).chunks_per_step
+        cap = self.cfg.power_iters
+        best = None
+        for s, rid in enumerate(tb.slot_req):
+            if rid is None or tb.fin[s] or tb.prio[s] <= urgent:
+                continue
+            cur = int(tb.progress[s]) * per
+            rem = predict_remaining_sweeps(self._sweep_hist, cur, cap=cap,
+                                           check_every=k) / per
+            if rem > self.preempt_min_remaining_chunks:
+                if best is None or rem > best[0]:
+                    best = (rem, s)
+        return [] if best is None else [best[1]]
 
     def _permutation(self, tb: _SlotTable) -> np.ndarray:
         """Slot permutation for the repack (new[s] = old[perm[s]])."""
@@ -964,11 +1261,17 @@ class MSCContinuousEngine:
             return np.asarray(order, np.int32)
         return np.arange(self.slots, dtype=np.int32)
 
-    def _refill(self, tb: _SlotTable, refill_exec,
-                evict: List[int]) -> Dict[int, MSCResult]:
+    def _refill(self, tb: _SlotTable, refill_exec, evict: List[int],
+                preempt: List[int]) -> Dict[int, MSCResult]:
         """Evict/finalize/repack dispatch: finalize results for `evict`
-        slots (pre-repack indices), free them, then permute + admit."""
+        slots, export `preempt` slots to host (parked, re-queued at the
+        front of their class), free both, then permute + admit — one
+        dispatch of the ONE lowered refill executable covers all of it
+        (resume inputs included in its signature from the start, so the
+        zero-recompile contract holds across any preempt/resume
+        interleaving)."""
         old_dims = tb.dims.copy()
+        old_deadline = tb.deadline.copy()
         old_warm_meta = list(tb.warm_meta)
         evict_rids = [(s, tb.slot_req[s]) for s in evict]
         cache = self.result_cache
@@ -976,31 +1279,78 @@ class MSCContinuousEngine:
         # dispatch replaces tb.carries: they become tier-2 warm-start
         # donors.  Skipped on multi-process meshes (replicate_outputs) —
         # the sharded carries are not fully addressable on any one host.
+        # Preempted slots are deliberately NOT captured: their iterates
+        # are mid-solve, so a sketch insert would seed later warm starts
+        # from an unconverged state (stale-capture hazard).
         capture = None
         if (cache is not None and evict_rids
                 and not self._plan.replicate_outputs):
             capture = [np.asarray(tb.carries[j].v) for j in range(3)]
-        for s in evict:
+        plan = self._plan_for(tb.bucket)
+        for s in preempt:
+            rid = tb.slot_req[s]
+            tb.parked[rid] = {
+                "arr": tb.arrs[s],
+                "carries": plan.export_slot(tb.bucket, tb.carries, s),
+                "priority": int(tb.prio[s]),
+                "deadline": int(tb.deadline[s]),
+                "warm_meta": tb.warm_meta[s],
+                "progress": int(tb.progress[s]),
+            }
+            # re-queue at the FRONT of its class (it is the class's
+            # oldest work); the wait clock restarts at the preemption
+            # tick, so parked time counts as queue wait
+            tb.queue_for(tb.prio[s]).appendleft(
+                (rid, self._tick, int(tb.deadline[s])))
+        for s in evict + preempt:
             tb.slot_req[s] = None
             tb.arrs[s] = None
             tb.warm_meta[s] = None
+            tb.prio[s] = 0
+            tb.deadline[s] = -1
+            tb.progress[s] = 0
         perm = self._permutation(tb)
         tb.slot_req = [tb.slot_req[p] for p in perm]
         tb.arrs = [tb.arrs[p] for p in perm]
         tb.dims = tb.dims[perm]
         tb.fin = tb.fin[perm]
         tb.warm_meta = [tb.warm_meta[p] for p in perm]
+        tb.prio = tb.prio[perm]
+        tb.deadline = tb.deadline[perm]
+        tb.progress = tb.progress[perm]
         new_dims = np.tile(np.int32(_FILLER_DIMS), (self.slots, 1))
         take_new = np.zeros(self.slots, bool)
         new_done = np.ones(self.slots, bool)
         use_warm = np.zeros(self.slots, bool)
-        waited = 0
+        use_resume = np.zeros(self.slots, bool)
+        waits: List[Tuple[int, int]] = []
+        n_resumes = 0
         for s in tb.free:
-            if not tb.queue:
+            entry = tb.pop_best(self._tick, self.aging_chunks)
+            if entry is None:
                 break
-            rid, submitted = tb.queue.popleft()
-            arr, _ = self._pending.pop(rid)
-            tb.admit_write(s, arr)
+            pr, rid, submitted, deadline = entry
+            parked = tb.parked.pop(rid, None)
+            if parked is not None:
+                arr = parked["arr"]
+                tb.admit_write(s, arr)
+                tb.import_slot(s, parked["carries"])
+                use_resume[s] = True
+                tb.warm_meta[s] = parked["warm_meta"]
+                tb.progress[s] = parked["progress"]
+                n_resumes += 1
+            else:
+                arr, _ = self._pending.pop(rid)
+                tb.admit_write(s, arr)
+                tb.progress[s] = 0
+                hit = self._warm_pending.pop(rid, None)
+                if hit is not None:
+                    tb.write_warm(s, hit.vectors)
+                    use_warm[s] = True
+                    tb.warm_meta[s] = hit.donor_iters
+                    self._bump(warm_starts=1)
+                else:
+                    tb.warm_meta[s] = None
             new_dims[s] = arr.shape
             take_new[s] = True
             new_done[s] = False
@@ -1008,24 +1358,32 @@ class MSCContinuousEngine:
             tb.arrs[s] = arr
             tb.dims[s] = arr.shape
             tb.fin[s] = False
-            hit = self._warm_pending.pop(rid, None)
-            if hit is not None:
-                tb.write_warm(s, hit.vectors)
-                use_warm[s] = True
-                tb.warm_meta[s] = hit.donor_iters
-                self._bump(warm_starts=1)
-            else:
-                tb.warm_meta[s] = None
-            waited += tb.chunk - submitted
+            tb.prio[s] = pr
+            tb.deadline[s] = deadline
+            waits.append((pr, self._tick - submitted))
         # eviction-only repack: reuse the device-resident zero staging
         # so no staging bytes cross the host boundary
         stage = tb.stage if take_new.any() else tb.zero_stage
-        wstage = tb.warm_stage if use_warm.any() else tb.zero_warm
+        wstage = (tb.warm_stage if use_warm.any() or use_resume.any()
+                  else tb.zero_warm)
+        rstage = ((tb.resume_lam, tb.resume_resid, tb.resume_iters,
+                   tb.resume_done) if use_resume.any()
+                  else tb.zero_resume)
         tb.blocks, tb.carries, results = self._invoke(
             "refill", refill_exec, tb.blocks, tb.carries, old_dims, stage,
-            new_dims, take_new, new_done, perm, wstage, use_warm)
+            new_dims, take_new, new_done, perm, wstage, use_warm,
+            rstage[0], rstage[1], rstage[2], rstage[3], use_resume)
+        waited = sum(w for _, w in waits)
+        self._wait_hist.extend(waits)
         self._bump(refills=1, dispatches=1, queue_wait_chunks=waited,
-                   evictions=len(evict_rids))
+                   evictions=len(evict_rids), preemptions=len(preempt),
+                   resumes=n_resumes)
+        if waits:
+            vals = np.asarray([w for _, w in self._wait_hist], float)
+            self._stats = dataclasses.replace(
+                self._stats,
+                queue_wait_p50_chunks=float(np.percentile(vals, 50)),
+                queue_wait_p99_chunks=float(np.percentile(vals, 99)))
         out: Dict[int, MSCResult] = {}
         if evict_rids:
             from repro.core.parallel import C_OF
@@ -1035,6 +1393,8 @@ class MSCContinuousEngine:
                 res = _trim_request(
                     host, s, tuple(int(x) for x in old_dims[s]))
                 out[rid] = res
+                if old_deadline[s] >= 0 and self._tick > old_deadline[s]:
+                    self._bump(deadline_misses=1)
                 pir = [res.modes[j].power_iters_run for j in range(3)]
                 if all(x is not None for x in pir):
                     # measured sweep histogram feeding choose_chunk_steps
@@ -1065,25 +1425,39 @@ class MSCContinuousEngine:
         # slots' results from their frozen iterates)
         evict = [s for s in range(self.slots)
                  if tb.fin[s] and tb.slot_req[s] is not None]
+        preempt = self._plan_preempt(tb, len(tb.free) + len(evict))
         out: Dict[int, MSCResult] = {}
-        if evict or self._should_admit(tb, len(tb.free) + len(evict)):
+        if (evict or preempt
+                or self._should_admit(tb, len(tb.free) + len(evict))):
             # _refill mutates host bookkeeping before its dispatch;
             # snapshot it so a failed dispatch rolls back to a state the
             # retry re-plans identically from (device state is only
             # REPLACED by dispatch outputs, never mutated in place)
             snap = (list(tb.slot_req), list(tb.arrs), tb.dims.copy(),
-                    tb.fin.copy(), deque(tb.queue), dict(self._pending),
-                    list(tb.warm_meta), dict(self._warm_pending),
-                    dict(self._req_key), dict(self._req_sketch))
+                    tb.fin.copy(),
+                    {pr: deque(q) for pr, q in tb.queues.items()},
+                    dict(self._pending), list(tb.warm_meta),
+                    dict(self._warm_pending), dict(self._req_key),
+                    dict(self._req_sketch), dict(tb.parked),
+                    tb.prio.copy(), tb.deadline.copy(),
+                    tb.progress.copy())
             try:
-                out = self._refill(tb, refill_exec, evict)
+                out = self._refill(tb, refill_exec, evict, preempt)
             except Exception as e:  # noqa: BLE001 — recovery boundary
-                (tb.slot_req, tb.arrs, tb.dims, tb.fin, tb.queue,
+                (tb.slot_req, tb.arrs, tb.dims, tb.fin, tb.queues,
                  self._pending, tb.warm_meta, self._warm_pending,
-                 self._req_key, self._req_sketch) = snap
+                 self._req_key, self._req_sketch, tb.parked,
+                 tb.prio, tb.deadline, tb.progress) = snap
                 return self._dispatch_failed(tb, e, out)
         if tb.live > 0:
             live = tb.live
+            # refill batching can leave free slots idle while this
+            # bucket's own queue is non-empty — the diagnostic the
+            # cross-bucket bench gates at 0 for refill_min_free == 1
+            if tb.queue_len() > 0 and len(tb.free) > 0:
+                self._bump(idle_bucket_ticks=1)
+            advanced = [s for s, r in enumerate(tb.slot_req)
+                        if r is not None and not tb.fin[s]]
             try:
                 carries, finished = self._invoke("chunk", step_exec,
                                                  tb.blocks, tb.carries)
@@ -1094,6 +1468,7 @@ class MSCContinuousEngine:
             tb.carries = carries
             tb.fin = np.asarray(finished)
             tb.chunk += 1
+            tb.progress[advanced] += 1
             self._total_chunks += 1
             self._chunks_since_ckpt += 1
             self._bump(chunk_steps=1, dispatches=1,
@@ -1145,10 +1520,15 @@ class MSCContinuousEngine:
         for s, rid in enumerate(tb.slot_req):
             if rid is not None:
                 jobs.append((rid, tb.arrs[s]))
-        while tb.queue:
-            rid, _ = tb.queue.popleft()
-            arr, _ = self._pending.pop(rid)
-            jobs.append((rid, arr))
+        for pr in sorted(tb.queues):
+            q = tb.queues[pr]
+            while q:
+                rid, _, _ = q.popleft()
+                parked = tb.parked.pop(rid, None)
+                arr = (parked["arr"] if parked is not None
+                       else self._pending.pop(rid)[0])
+                jobs.append((rid, arr))
+        tb.parked.clear()
         out: Dict[int, MSCResult] = {}
         for rid, arr in jobs:
             # _base_cfg: the oracle needs a concrete epilogue, and the
@@ -1173,6 +1553,10 @@ class MSCContinuousEngine:
         tb.dirty = np.ones(self.slots, bool)
         tb.warm_dirty = np.ones(self.slots, bool)
         tb.warm_meta = [None] * self.slots
+        tb.resume_dirty = np.ones(self.slots, bool)
+        tb.prio = np.zeros(self.slots, np.int32)
+        tb.deadline = np.full(self.slots, -1, np.int64)
+        tb.progress = np.zeros(self.slots, np.int64)
         tb.retries = 0
         tb.retry_at = 0.0
         self._recovering.discard(tb.bucket)
@@ -1218,21 +1602,53 @@ class MSCContinuousEngine:
             for host in self._plan.export_carries(bucket, tb.carries):
                 leaves.extend([host.v, host.lam, host.resid,
                                host.iters, host.done])
-            live = [s for s, r in enumerate(tb.slot_req) if r is not None]
-            leaves.append(tb.dims.astype(np.int32))
-            leaves.append(np.asarray(tb.fin, np.bool_))
-            leaves.append(np.asarray(
-                [-1 if r is None else r for r in tb.slot_req], np.int64))
-            leaves.append(np.asarray(list(tb.queue),
-                                     np.int64).reshape(-1, 2))
-            for s in live:
-                leaves.append(tb.arrs[s])
-            for rid, _ in tb.queue:
-                leaves.append(self._pending[rid][0])
-            buckets_meta.append({"bucket": list(bucket),
-                                 "chunk": tb.chunk,
-                                 "live_slots": live})
+            leaves.extend(self._export_sched_leaves(tb))
+            buckets_meta.append(self._bucket_meta(tb))
         return leaves, self._export_meta(buckets_meta)
+
+    def _export_sched_leaves(self, tb: _SlotTable) -> List[np.ndarray]:
+        """The host-side bookkeeping leaves of one bucket, in the §7.12
+        checkpoint order: dims, fin, slot rids, per-slot scheduler state
+        (priority/deadline/progress), the flattened per-class queue as
+        (N, 4) rows (priority, rid, submit_tick, deadline), live
+        tensors, queued tensors (parked requests' from their parked
+        copy), then each parked request's exported carries (v, λ, resid
+        per mode — iters/done ride the metadata)."""
+        queued = tb.queued()
+        leaves = [tb.dims.astype(np.int32),
+                  np.asarray(tb.fin, np.bool_),
+                  np.asarray([-1 if r is None else r
+                              for r in tb.slot_req], np.int64),
+                  tb.prio.astype(np.int64),
+                  tb.deadline.astype(np.int64),
+                  tb.progress.astype(np.int64),
+                  np.asarray(queued, np.int64).reshape(-1, 4)]
+        leaves += [tb.arrs[s] for s, r in enumerate(tb.slot_req)
+                   if r is not None]
+        leaves += [tb.parked[rid]["arr"] if rid in tb.parked
+                   else self._pending[rid][0] for _, rid, _, _ in queued]
+        for _, rid, _, _ in queued:
+            if rid in tb.parked:
+                for host in tb.parked[rid]["carries"]:
+                    leaves += [np.asarray(host.v), np.asarray(host.lam),
+                               np.asarray(host.resid)]
+        return leaves
+
+    def _bucket_meta(self, tb: _SlotTable) -> Dict:
+        live = [s for s, r in enumerate(tb.slot_req) if r is not None]
+        parked_meta = []
+        for _, rid, _, _ in tb.queued():
+            p = tb.parked.get(rid)
+            if p is not None:
+                parked_meta.append({
+                    "rid": int(rid), "progress": int(p["progress"]),
+                    "iters": [int(h.iters) for h in p["carries"]],
+                    "done": [bool(h.done) for h in p["carries"]],
+                    "warm_meta": (None if p["warm_meta"] is None
+                                  else [int(x) for x in p["warm_meta"]]),
+                })
+        return {"bucket": list(tb.bucket), "chunk": tb.chunk,
+                "live_slots": live, "parked": parked_meta}
 
     def _export_meta(self, buckets_meta, **over) -> Dict:
         meta = {
@@ -1254,7 +1670,14 @@ class MSCContinuousEngine:
                 "max_retries": self.max_retries,
                 "retry_backoff_s": self.retry_backoff_s,
                 "retry_backoff_max_s": self.retry_backoff_max_s,
+                "preempt": self.preempt,
+                "preempt_min_remaining_chunks":
+                    self.preempt_min_remaining_chunks,
+                "aging_chunks": self.aging_chunks,
+                "slo_chunks": self.slo_chunks,
+                "bucket_policy": self.bucket_policy,
             },
+            "tick": self._tick,
             "next_rid": self._next_rid,
             "total_chunks": self._total_chunks,
             "stats": dataclasses.asdict(self._stats),
@@ -1288,21 +1711,10 @@ class MSCContinuousEngine:
                              carry.iters, carry.done):
                     device.append((i, leaf))
                     i += 1
-            live = [s for s, r in enumerate(tb.slot_req) if r is not None]
-            host_leaves = [tb.dims.astype(np.int32),
-                           np.asarray(tb.fin, np.bool_),
-                           np.asarray([-1 if r is None else r
-                                       for r in tb.slot_req], np.int64),
-                           np.asarray(list(tb.queue),
-                                      np.int64).reshape(-1, 2)]
-            host_leaves += [tb.arrs[s] for s in live]
-            host_leaves += [self._pending[rid][0] for rid, _ in tb.queue]
-            for leaf in host_leaves:
+            for leaf in self._export_sched_leaves(tb):
                 host.append((i, leaf))
                 i += 1
-            buckets_meta.append({"bucket": list(bucket),
-                                 "chunk": tb.chunk,
-                                 "live_slots": live})
+            buckets_meta.append(self._bucket_meta(tb))
         return device, host, self._export_meta(buckets_meta,
                                                carry_layout="device")
 
@@ -1380,7 +1792,21 @@ class MSCContinuousEngine:
             dims = np.asarray(next(it), np.int32)
             fin = np.asarray(next(it), bool)
             slot_rids = np.asarray(next(it), np.int64)
-            queue = np.asarray(next(it), np.int64).reshape(-1, 2)
+            # scheduler-era (§7.12) checkpoints carry per-slot
+            # priority/deadline/progress, an (N, 4) per-class queue,
+            # and parked (preempted) requests; pre-§7.12 ones have the
+            # (N, 2) FIFO — import as class 0, no deadline
+            sched = "tick" in meta
+            if sched:
+                prio = np.asarray(next(it), np.int64).astype(np.int32)
+                deadline = np.asarray(next(it), np.int64)
+                progress = np.asarray(next(it), np.int64)
+                queue = np.asarray(next(it), np.int64).reshape(-1, 4)
+            else:
+                q2 = np.asarray(next(it), np.int64).reshape(-1, 2)
+                queue = np.concatenate(
+                    [np.zeros((len(q2), 1), np.int64), q2,
+                     np.full((len(q2), 1), -1, np.int64)], axis=1)
             arrs: List[Optional[np.ndarray]] = [None] * self.slots
             for s in bmeta["live_slots"]:
                 arrs[s] = np.asarray(next(it), self.dtype)
@@ -1393,18 +1819,50 @@ class MSCContinuousEngine:
             tb.zero_stage = self._plan.zero_stage(bucket, self.slots,
                                                   self.dtype)
             tb.zero_warm = self._plan.zero_warm(bucket, self.slots)
+            tb.zero_resume = self._plan.zero_resume(bucket, self.slots)
             tb.slot_req = [None if r < 0 else int(r) for r in slot_rids]
             tb.arrs = arrs
             tb.dims = dims
             tb.fin = fin
             tb.chunk = int(bmeta["chunk"])
-            for rid, submitted in queue:
-                tb.queue.append((int(rid), int(submitted)))
-                self._pending[int(rid)] = (np.asarray(next(it), self.dtype),
-                                           bucket)
+            if sched:
+                tb.prio = prio
+                tb.deadline = deadline
+                tb.progress = progress
+            parked_meta = {int(pm["rid"]): pm
+                           for pm in bmeta.get("parked", [])}
+            parked_arrs: Dict[int, np.ndarray] = {}
+            for pr, rid, submitted, dl in queue:
+                tb.queue_for(int(pr)).append(
+                    (int(rid), int(submitted), int(dl)))
+                a = np.asarray(next(it), self.dtype)
+                if int(rid) in parked_meta:
+                    parked_arrs[int(rid)] = a
+                else:
+                    self._pending[int(rid)] = (a, bucket)
+            for pr, rid, _, dl in queue:
+                pm = parked_meta.get(int(rid))
+                if pm is None:
+                    continue
+                carr = []
+                for j in range(3):
+                    v, lam, resid = (np.asarray(next(it))
+                                     for _ in range(3))
+                    carr.append(SolveState(
+                        v=v, lam=lam, resid=resid,
+                        iters=int(pm["iters"][j]),
+                        done=bool(pm["done"][j])))
+                tb.parked[int(rid)] = {
+                    "arr": parked_arrs[int(rid)], "carries": carr,
+                    "priority": int(pr), "deadline": int(dl),
+                    "warm_meta": (None if pm["warm_meta"] is None
+                                  else tuple(pm["warm_meta"])),
+                    "progress": int(pm["progress"]),
+                }
             self._tables[bucket] = tb
         self._next_rid = int(meta["next_rid"])
         self._stats = ServeStats(**meta["stats"])
         self._total_chunks = int(meta["total_chunks"])
+        self._tick = int(meta.get("tick", 0))
         self._chunks_since_ckpt = 0
         self._bump(restores=1)
